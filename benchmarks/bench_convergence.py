@@ -1,0 +1,40 @@
+"""Figs. 2 & 8: percentile statistics of relative fitness psi(theta_L,k)
+over 100 runs for three privacy budgets, lending + health datasets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Algo1Config, make_problem, run_many
+from repro.data import owner_shards
+
+N_OWNERS, N_PER, T, RUNS = 3, 10_000, 1000, 100
+SIGMA = 2e-5
+
+
+def run(n_runs: int = RUNS):
+    rows = []
+    for dataset in ("lending", "health"):
+        shards = owner_shards(dataset, [N_PER] * N_OWNERS, seed=0, heterogeneity=0.0)
+        prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+        for eps in (3.0, 7.0, 10.0):
+            cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                              epsilons=[eps] * N_OWNERS)
+            t0 = time.perf_counter()
+            tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, n_runs)
+            dt = (time.perf_counter() - t0) * 1e6 / (n_runs * T)
+            psi = np.asarray(tr.psi)
+            for k in (10, 100, 500, T):
+                p25, p50, p75 = np.percentile(psi[:, k - 1], [25, 50, 75])
+                rows.append((
+                    f"convergence/{dataset}/eps{eps}/k{k}", dt,
+                    f"p25={p25:.4g};p50={p50:.4g};p75={p75:.4g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

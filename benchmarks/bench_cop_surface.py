@@ -1,0 +1,55 @@
+"""Figs. 4, 5 & 10: relative fitness after T iterations versus dataset size
+and privacy budget + fitted Theorem-2 constants (the mesh surface)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Algo1Config, fit_constants, make_problem, run_many
+from repro.core.cop import bound_asymptotic, budget_sum
+from repro.data import owner_shards
+
+N_OWNERS, T, RUNS, SIGMA = 3, 1000, 30, 2e-5
+NS = (10_000, 50_000, 250_000)
+EPS = (1.0, 3.0, 10.0)
+
+
+def run(dataset: str = "lending"):
+    rows = []
+    obs = {}
+    t0 = time.perf_counter()
+    for n in NS:
+        shards = owner_shards(dataset, [n] * N_OWNERS, seed=0, heterogeneity=0.0)
+        prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+        # noiseless floor: convergence error of Algorithm 1 itself — the
+        # cost of PRIVACY is the excess over it (eq. 11 measures DP noise)
+        cfg0 = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                           epsilons=[1.0] * N_OWNERS, noiseless=True)
+        floor = float(jnp.mean(run_many(jax.random.PRNGKey(1), prob, owners,
+                                        cfg0, 2).psi[:, -1]))
+        for eps in EPS:
+            cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                              epsilons=[eps] * N_OWNERS)
+            tr = run_many(jax.random.PRNGKey(1), prob, owners, cfg, RUNS)
+            obs[(n, eps)] = max(float(jnp.mean(tr.psi[:, -1])) - floor, 1e-9)
+    us = (time.perf_counter() - t0) * 1e6 / (len(NS) * len(EPS))
+
+    ns = np.array([N_OWNERS * n for (n, e) in obs])
+    ss = np.array([budget_sum([e] * N_OWNERS) for (n, e) in obs])
+    vals = np.array(list(obs.values()))
+    c1b, c2b = fit_constants(ns, ss, vals)
+    for (n, e), v in obs.items():
+        pred = bound_asymptotic(N_OWNERS * n, [e] * N_OWNERS, c1b, c2b)
+        rows.append((f"cop_surface/{dataset}/n{n}/eps{e}", us,
+                     f"psi={v:.4g};bound_fit={pred:.4g}"))
+    rows.append((f"cop_surface/{dataset}/fitted_constants", us,
+                 f"c1bar={c1b:.4g};c2bar={c2b:.4g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

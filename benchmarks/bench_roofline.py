@@ -1,0 +1,40 @@
+"""§Roofline table: reads the dry-run artifacts (results/dryrun/*.json) and
+emits one row per (arch x shape x mesh) with the three roofline terms, the
+dominant bottleneck, and the useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run(mesh: str = None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if not rec.get("ok"):
+            rows.append((name, 0.0, f"FAILED:{rec.get('error', '?')[:80]}"))
+            continue
+        r = rec["roofline"]
+        us = r["step_lower_bound_s"] * 1e6
+        rows.append((name, us,
+                     f"compute_s={r['compute_s']:.3g};"
+                     f"memory_s={r['memory_s']:.3g};"
+                     f"collective_s={r['collective_s']:.3g};"
+                     f"dominant={r['dominant']};"
+                     f"useful_ratio={r['useful_flops_ratio']:.3g}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "no dry-run artifacts; run repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -1,0 +1,42 @@
+"""Serving-path microbench: batched one-token decode steps/sec on CPU for
+every assigned architecture (reduced configs — the pod-scale numbers are the
+decode rows of bench_roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model
+
+
+def run(archs=None, batch: int = 2, steps: int = 3):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch in archs or list_archs():
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, remat=False, moe_mode="ragged")
+        params = model.init(key, jnp.float32)
+        cache = model.init_cache(batch, 32, dtype=jnp.float32)
+        if cfg.family == "audio":
+            frames = jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model))
+            cache = model.prime_cross_cache(params, cache, frames)
+        step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+        toks = jnp.zeros((batch, 1), jnp.int32)
+        logits, cache = step(params, cache, toks, jnp.int32(0))  # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for t in range(1, steps + 1):
+            logits, cache = step(params, cache, toks, jnp.int32(t))
+        jax.block_until_ready(logits)
+        us = (time.perf_counter() - t0) * 1e6 / steps
+        rows.append((f"serving/{arch}/decode_step", us,
+                     f"tok_per_s={batch/(us/1e6):.1f};family={cfg.family}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -1,0 +1,20 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, n: int = 3, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / n
+    return out, dt * 1e6                 # us
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{u:.1f},{d}" for n, u, d in rows)

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+    bench_convergence   -> Figs. 2 & 8 (psi percentiles vs k)
+    bench_comm_timing   -> Figs. 3 & 9 (Poisson schedule)
+    bench_cop_surface   -> Figs. 4, 5 & 10 (CoP vs n, eps + fitted bound)
+    bench_collaboration -> Figs. 6 & 7 (value of collaboration)
+    bench_async_vs_sync -> Sec. 2 comparison ([14]-style sync baseline)
+                           + beyond-paper capped-rounds composition
+    bench_kernels       -> kernel-path microbenches (CPU)
+    bench_roofline      -> §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced run counts (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_async_vs_sync, bench_collaboration,
+                            bench_comm_timing, bench_convergence,
+                            bench_cop_surface, bench_kernels, bench_roofline,
+                            bench_serving)
+
+    suites = {
+        "comm_timing": bench_comm_timing.run,
+        "kernels": bench_kernels.run,
+        "serving": bench_serving.run,
+        "roofline": bench_roofline.run,
+        "convergence": (lambda: bench_convergence.run(n_runs=20)) if args.fast
+        else bench_convergence.run,
+        "cop_surface": bench_cop_surface.run,
+        "collaboration": bench_collaboration.run,
+        "async_vs_sync": bench_async_vs_sync.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""End-to-end deep-model driver: asynchronously DP-train a ~120M-param LM
+across 4 private data owners for a few hundred steps on CPU — the same
+AsyncDPTrainer code path the pod-scale dry-run lowers at 512 devices.
+
+    PYTHONPATH=src python examples/async_dp_llm.py [--steps 300] [--tiny]
+    PYTHONPATH=src python examples/async_dp_llm.py --arch xlstm-125m
+
+Default model is a 12-layer dense 124M GQA transformer (XLA-CPU compiles it
+in seconds; the assigned-pool archs are available via --arch but e.g.
+xlstm-125m's sLSTM vjp takes very long to compile on this 1-core CPU).
+
+Each step: uniform owner draw (Poisson clocks), Theorem-1 Laplace noise on
+the clipped owner gradient, the paper's inertia update (eqs. 5-7), owner
+bank write-back, privacy ledger accounting.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+
+DENSE_124M = ModelConfig(
+    name="dense-124m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab=50304,
+    source="gpt2-small-like demo config")
+from repro.core.async_trainer import (AsyncDPConfig, init_state,
+                                      make_train_step)
+from repro.core.dp_sgd import PrivatizerConfig
+from repro.core.privacy import PrivacyAccountant
+from repro.data import OwnerDataPipeline, synthetic_owner_shards
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="dense-124m")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CI-speed)")
+    ap.add_argument("--owners", type=int, default=4)
+    ap.add_argument("--eps", type=float, default=2.0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05,
+                    help="target effective owner-update rate; converted to "
+                         "the paper's lr_scale (recorded deviation — the "
+                         "paper's exact rho/T^2 rate is ~0 for deep nets)")
+    args = ap.parse_args()
+
+    cfg = DENSE_124M if args.arch == "dense-124m" else get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.reduced()
+    model = build_model(cfg, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, jnp.float32)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params, "
+          f"{cfg.n_layers} layers)")
+
+    N = args.owners
+    shards = synthetic_owner_shards(N, 2048, args.seq, cfg.vocab, seed=0)
+    pipe = OwnerDataPipeline(shards, args.batch, seed=0)
+    horizon = max(args.steps, 100)
+    acct = PrivacyAccountant({i: args.eps for i in range(N)}, horizon)
+    sigma = 1e-2
+    # effective owner rate = lr_scale * N * rho / (T^2 sigma)  ==  --lr
+    lr_scale = args.lr * horizon ** 2 * sigma / N
+    acfg = AsyncDPConfig(
+        n_owners=N, horizon=horizon, rho=1.0, sigma=sigma,
+        epsilons=tuple([args.eps] * N), owner_sizes=tuple(pipe.owner_sizes),
+        xi=1.0, theta_max=100.0,
+        privatizer=PrivatizerConfig(xi=1.0, granularity="microbatch",
+                                    n_microbatches=2),
+        lr_scale=lr_scale)
+
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    step = jax.jit(make_train_step(loss_fn, acfg), donate_argnums=0)
+    state = init_state(params, acfg)
+
+    it = iter(pipe)
+    losses = []
+    t0 = time.time()
+    for k in range(1, args.steps + 1):
+        owner, batch = next(it)
+        if not acct.record_response(owner):
+            continue
+        batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
+        key, sub = jax.random.split(key)
+        state, m = step(state, batch, jnp.int32(owner), sub)
+        if k % 25 == 0 or k == 1:
+            l = float(loss_fn(state.theta_L, batch))
+            losses.append(l)
+            print(f"step {k:4d} owner={owner} central-loss={l:.4f} "
+                  f"clip={float(m['clip_frac']):.2f} "
+                  f"[{(time.time()-t0)/k:.2f}s/step]")
+    print("\nprivacy ledger:")
+    for i, s in acct.summary().items():
+        print(f"  owner {i}: eps={s['epsilon']} responses={s['responses']} "
+              f"spent={s['spent']:.3f}")
+    if len(losses) >= 2:
+        print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"({'improved' if losses[-1] < losses[0] else 'flat'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Value-of-collaboration forecasting (the paper's Fig. 6 + Section 6
+data-market story): given pilot measurements, fit the Theorem-2 constants
+and PREDICT how many owners at which privacy budget make collaboration
+beat training alone — without anyone revealing their data.
+
+    PYTHONPATH=src python examples/collaboration_forecast.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Algo1Config, fit_constants, make_problem,
+                        min_owners_for_benefit, relative_fitness, run_many)
+from repro.core.cop import bound_asymptotic, budget_sum
+from repro.data import owner_shards
+
+N_PILOT, N_I, T = 5, 10_000, 1000
+
+
+def measure(N, eps, seed=3, runs=8):
+    shards = owner_shards("lending", [N_I] * N, seed=seed)
+    prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+    cfg = Algo1Config(horizon=T, rho=1.0, sigma=2e-5, epsilons=[eps] * N)
+    tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, runs)
+    return prob, shards, float(jnp.mean(tr.psi[:, -1]))
+
+
+def main():
+    # 1) pilot: a small consortium measures CoP at a few budgets
+    pilot = {}
+    for eps in (2.0, 5.0, 10.0):
+        _, _, cop = measure(N_PILOT, eps)
+        pilot[eps] = cop
+        print(f"pilot N={N_PILOT}, eps={eps:4.1f}: CoP = {cop:.4f}")
+    ss = np.array([budget_sum([e] * N_PILOT) for e in pilot])
+    c1, c2 = fit_constants(np.array([N_PILOT * N_I] * len(pilot)), ss,
+                           np.array(list(pilot.values())))
+    print(f"fitted constants: c1bar={c1:.3g} c2bar={c2:.3g}\n")
+
+    # 2) the isolated baseline an owner would otherwise use
+    prob, shards, _ = measure(N_PILOT, 10.0)
+    X0, y0 = shards[0]
+    th = np.linalg.solve(X0.T @ X0 / N_I + 1e-5 * np.eye(10),
+                         X0.T @ y0 / N_I)
+    psi_iso = float(relative_fitness(prob, jnp.asarray(np.clip(th, -2, 2))))
+    print(f"isolated owner-0 model: psi = {psi_iso:.4f}")
+
+    # 3) forecast: how many owners needed at each budget?
+    print("\nforecast (eq. 11): min owners for collaboration to win")
+    for eps in (0.5, 1.0, 2.5, 5.0, 10.0):
+        n_min = min_owners_for_benefit(psi_iso, N_I, eps, c1, c2)
+        print(f"  eps={eps:5.1f}: N >= {n_min}")
+
+    # 4) verify one forecast point empirically
+    eps = 2.5
+    n_min = min_owners_for_benefit(psi_iso, N_I, eps, c1, c2)
+    if 0 < n_min <= 64:
+        _, _, cop = measure(n_min, eps)
+        print(f"\nverify: N={n_min}, eps={eps} -> measured CoP {cop:.4f} "
+              f"vs isolated {psi_iso:.4f} "
+              f"({'WINS' if cop < psi_iso else 'loses'})")
+
+
+if __name__ == "__main__":
+    main()

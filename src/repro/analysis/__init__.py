@@ -1,0 +1,2 @@
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, model_flops,
+                                     parse_collective_bytes, roofline_terms)

@@ -1,0 +1,304 @@
+"""HLO-text cost walker: loop-aware FLOPs / traffic / collective bytes.
+
+XLA-CPU's `compiled.cost_analysis()` counts while-loop *bodies once*,
+so scanned-layer models are undercounted by ~(layers x microbatches x ...).
+This walker parses the post-optimization HLO text, builds the computation
+call graph, extracts loop trip counts from while-condition constants, and
+accumulates per-device:
+
+    flops            — 2 * prod(result dims) * prod(contracted dims) per dot
+    traffic_bytes    — sum over instructions of (result + operand bytes);
+                       fusion internals are NOT descended (post-fusion HBM
+                       traffic proxy). Approximate: in-place updates
+                       (donated buffers) are counted at full size.
+    collective_bytes — operand bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute,
+                       multiplied through enclosing loop trip counts.
+
+Known approximations (documented in EXPERIMENTS.md):
+  * `conditional` branches are costed at max-over-branches;
+  * trip count = largest integer constant in the while condition
+    computation (exact for jax.lax.scan/fori loops);
+  * elementwise flops ignored (dot/conv dominate at these scales).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 0.5, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(sorted(_DTYPE_BYTES, key=len,
+                                                reverse=True))
+                       + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_CALL_ATTR = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{|"
+    r"true_computation=|false_computation=)")
+# ops that materialize to HBM even under perfect elementwise fusion on TPU
+_MATERIALIZING = frozenset({
+    "copy", "transpose", "reshape", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "concatenate", "pad", "slice", "reverse",
+    "broadcast-to", "rng", "rng-bit-generator", "cumsum", "iota-large",
+})
+
+
+def _shape_dims(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> float:
+    return sum(_DTYPE_BYTES[m.group(1)] * _shape_dims(m.group(2))
+               for m in _SHAPE_RE.finditer(text))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rhs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_fused: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{") and " = " not in line.split("->")[0]:
+            name = hdr.group(1)
+            cur = Computation(name, [],
+                              is_fused=name.startswith("fused_computation")
+                              or ".fused" in name)
+            comps[name] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # result type: either `dtype[dims]{layout}` or a tuple `(t1, t2, ...)`
+        if rest.startswith("("):
+            depth = 0
+            end = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            result_type = rest[:end]
+            tail = rest[end:].strip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            result_type = rest[:sp]
+            tail = rest[sp + 1:].strip()
+        call = tail.find("(")
+        if call < 0:
+            continue
+        op = tail[:call].strip().split()[-1] if tail[:call].strip() else ""
+        cur.instrs.append(Instr(name, result_type, op, tail))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = 1
+    for m in _SHAPE_RE.finditer(instr.result_type):
+        out_elems *= _shape_dims(m.group(2))
+    # contracted size: from lhs operand shape + lhs_contracting_dims
+    ops = re.findall(r"%([\w\.\-]+)", instr.rhs[:instr.rhs.find(")")])
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+    contracted = 1
+    if ops and cd:
+        lhs_type = symtab.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for i in (int(x) for x in cd.group(1).split(",") if x):
+                if i < len(dims):
+                    contracted *= dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_bytes(instr: Instr, symtab: Dict[str, str]) -> float:
+    args = instr.rhs[instr.rhs.find("(") + 1:]
+    depth = 1
+    out = []
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = args[:i]
+                break
+    total = 0.0
+    for name in re.findall(r"%([\w\.\-]+)", args):
+        total += _shapes_bytes(symtab.get(name, ""))
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.traffic * k,
+                    {c: v * k for c, v in self.collectives.items()})
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.traffic += other.traffic
+        for c, v in other.collectives.items():
+            self.collectives[c] = self.collectives.get(c, 0.0) + v
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+        if m and m.group(1) in self.comps:
+            self.entry = m.group(1)
+        else:
+            self.entry = next((n for n in self.comps if n.startswith("main")),
+                              next(iter(self.comps)))
+
+    def _trip_count(self, cond_name: str) -> float:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1.0
+        best = 1
+        for ins in comp.instrs:
+            if ins.op == "constant":
+                m = re.search(r"constant\((-?\d+)\)", ins.rhs)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return float(best)
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()  # cycle guard
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return self._memo[comp_name]
+        total = Cost()
+        symtab = {i.name: i.result_type for i in comp.instrs}
+        # parameters' types appear on their defs too (parameter(k) ops)
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                total.flops += _dot_flops(ins, symtab)
+                total.traffic += (_shapes_bytes(ins.result_type)
+                                  + _operand_bytes(ins, symtab))
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel elems) — rare in this code
+                out_elems = 1
+                for m in _SHAPE_RE.finditer(ins.result_type):
+                    out_elems *= _shape_dims(m.group(2))
+                total.flops += 2.0 * out_elems
+                total.traffic += (_shapes_bytes(ins.result_type)
+                                  + _operand_bytes(ins, symtab))
+            elif op == "while":
+                cond = re.search(r"condition=%?([\w\.\-]+)", ins.rhs)
+                body = re.search(r"body=%?([\w\.\-]+)", ins.rhs)
+                trips = self._trip_count(cond.group(1)) if cond else 1.0
+                if body:
+                    total.add(self.cost_of(body.group(1)).scaled(trips))
+                if cond:
+                    total.add(self.cost_of(cond.group(1)).scaled(trips))
+            elif op == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation|false_computation)=%?([\w\.\-]+)",
+                    ins.rhs)
+                if not branches:
+                    bm = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                    if bm:
+                        branches = re.findall(r"%?([\w\.\-]+)", bm.group(1))
+                if branches:
+                    costs = [self.cost_of(b) for b in branches]
+                    worst = max(costs, key=lambda c: c.flops + c.traffic)
+                    total.add(worst)
+            elif op in ("call", "fusion", "custom-call", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rhs)
+                if op == "fusion":
+                    # fusion = one HBM-level op; count its boundary traffic
+                    total.traffic += (_shapes_bytes(ins.result_type)
+                                      + _operand_bytes(ins, symtab))
+                    if m:  # dots can hide inside fusions
+                        inner = self.cost_of(m.group(1))
+                        total.flops += inner.flops
+                        total.add(Cost(0.0, 0.0, inner.collectives))
+                else:
+                    total.traffic += (_shapes_bytes(ins.result_type)
+                                      + _operand_bytes(ins, symtab))
+                    if m:
+                        total.add(self.cost_of(m.group(1)))
+            else:
+                base = op.split("-start")[0] if op.endswith("-start") else op
+                if base in _COLLECTIVES:
+                    b = _operand_bytes(ins, symtab)
+                    total.collectives[base] = total.collectives.get(base, 0.0) + b
+                    total.traffic += b + _shapes_bytes(ins.result_type)
+                elif op in _MATERIALIZING:
+                    # data movement that hits HBM even on the TPU target
+                    total.traffic += (_shapes_bytes(ins.result_type)
+                                      + _operand_bytes(ins, symtab))
+                else:
+                    # elementwise / shape ops: assumed fused on the TPU
+                    # target (perfect elementwise fusion) — no HBM traffic
+                    pass
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(text: str) -> Dict[str, float]:
+    cm = HloCostModel(text)
+    c = cm.entry_cost()
+    out = {"flops": c.flops, "traffic_bytes": c.traffic,
+           "collective_bytes_total": c.collective_total}
+    out.update({f"collective_{k}": v for k, v in c.collectives.items()})
+    return out

@@ -1,0 +1,68 @@
+"""Recompute roofline terms from SAVED dry-run HLO (no recompilation).
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze [--dir results/dryrun]
+
+Used when the cost model in hlo_cost.py changes: the dry-run campaign saves
+results/dryrun/hlo/<tag>.hlo.zst; this rewrites every JSON's hlo_walker +
+roofline sections in place.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.analysis.hlo_cost import analyze
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import INPUT_SHAPES, get_config
+
+
+def reanalyze_one(json_path: str) -> bool:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return False
+    tag = os.path.basename(json_path)[:-len(".json")]
+    hlo_path = os.path.join(os.path.dirname(json_path), "hlo",
+                            tag + ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(hlo_path, "rb") as f:
+        hlo = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+    walked = analyze(hlo)
+    rec["hlo_walker"] = walked
+    shape = INPUT_SHAPES[rec["shape"]]
+    cfg = get_config(rec["arch"])
+    terms = roofline_terms(walked["flops"], walked["traffic_bytes"],
+                           walked["collective_bytes_total"])
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mf = model_flops(cfg.active_param_count(), tokens,
+                     "train" if shape.kind == "train" else "infer")
+    terms["model_flops_total"] = mf
+    terms["hlo_flops_total"] = walked["flops"] * rec["chips"]
+    terms["useful_flops_ratio"] = (mf / (walked["flops"] * rec["chips"])
+                                   if walked["flops"] else 0.0)
+    rec["roofline"] = terms
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze_one(p):
+            n += 1
+            print("reanalyzed", os.path.basename(p))
+    print(f"{n} records updated")
+
+
+if __name__ == "__main__":
+    main()

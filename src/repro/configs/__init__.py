@@ -1,0 +1,22 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import all_configs, get_config, get_shape, list_archs
+
+__all__ = [
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+    "all_configs",
+    "get_config",
+    "get_shape",
+    "list_archs",
+]

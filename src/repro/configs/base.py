@@ -1,0 +1,183 @@
+"""Config system: model architecture + input-shape configs.
+
+Every assigned architecture gets one file in this package exporting
+``CONFIG: ModelConfig`` with the exact published dimensions (source cited in
+the file). ``ModelConfig.reduced()`` produces the CPU-smoke variant
+(<=2 layers, d_model<=512, <=4 experts) used by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+Family = str  # 'dense' | 'moe' | 'ssm' | 'hybrid' | 'vlm' | 'audio'
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert hidden dim
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block dims."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2          # d_inner = expand * d_model
+    head_dim: int = 64       # SSD head dim; n_ssm_heads = d_inner // head_dim
+    chunk: int = 256         # chunked-scan block length
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_indices: Tuple[int, ...] = ()   # which layers are sLSTM (rest mLSTM)
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    sliding_window: Optional[int] = None    # native SWA (mixtral)
+    # sub-quadratic override used ONLY for the long_500k shape on archs with
+    # full attention; recorded in DESIGN.md §Arch-applicability.
+    long_context_override: Optional[int] = 8192
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # hybrid (zamba2): a *shared* full-attention block applied every
+    # `attn_every` layers, on top of the per-layer Mamba2 blocks.
+    attn_every: Optional[int] = None
+    # enc-dec (whisper): encoder depth and fixed encoder sequence length
+    # (frames after the stubbed conv frontend).
+    enc_layers: int = 0
+    enc_seq: int = 0
+    # vlm (internvl2): number of patch embeddings prepended by the stubbed
+    # vision frontend.
+    n_patches: int = 0
+    source: str = ""                        # citation
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def is_decoder(self) -> bool:
+        return True  # every assigned arch has a decoder
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init within ties/norms)."""
+        d, hd, H, Kv = self.d_model, self.head_dim, self.n_heads, self.n_kv_heads
+        emb = self.vocab * d
+        out = 0 if self.tie_embeddings else self.vocab * d
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            attn = d * H * hd + 2 * d * Kv * hd + H * hd * d
+            if self.qkv_bias:
+                attn += (H + 2 * Kv) * hd
+            if self.moe is not None:
+                ffn = self.moe.n_experts * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = attn + ffn + 2 * d
+        elif self.family == "ssm":  # xlstm
+            x = self.xlstm or XLSTMConfig()
+            dm = int(d * x.mlstm_proj_factor)
+            per_layer = 2 * d * dm + dm * d // 2  # rough: up/gate/down + qkv-ish
+        elif self.family == "hybrid":
+            s = self.ssm or SSMConfig()
+            d_in = s.expand * d
+            per_layer = d * (2 * d_in) + d_in * d + d_in * 2 * s.d_state
+            attn = d * H * hd + 2 * d * Kv * hd + H * hd * d  # shared once
+            return emb + out + self.n_layers * per_layer + attn
+        total = emb + out + self.n_layers * per_layer
+        if self.enc_layers:
+            attn = d * H * hd * 4
+            total += self.enc_layers * (attn + 2 * d * self.d_ff + 2 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        dense_like = self.param_count()
+        all_exp = self.n_layers * m.n_experts * 3 * self.d_model * m.d_expert
+        act_exp = self.n_layers * m.top_k * 3 * self.d_model * m.d_expert
+        return dense_like - all_exp + act_exp
+
+    # ---- smoke variant ----------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """2-layer, d_model<=512, <=4-expert variant of the same family."""
+        d = min(self.d_model, 256)
+        H = min(self.n_heads, 4)
+        ratio = max(1, self.n_heads // max(self.n_kv_heads, 1))
+        Kv = max(1, H // ratio)
+        kw = dict(
+            name=self.name + "-smoke",
+            family=self.family,
+            n_layers=2,
+            d_model=d,
+            n_heads=H,
+            n_kv_heads=Kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            head_dim=d // H,
+            qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else None,
+            long_context_override=64 if self.long_context_override else None,
+            source=self.source,
+        )
+        if self.moe:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2), d_expert=min(self.moe.d_expert, 128))
+        if self.ssm:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=min(self.ssm.d_state, 16), head_dim=32, chunk=32)
+        if self.xlstm:
+            kw["xlstm"] = dataclasses.replace(self.xlstm, slstm_indices=(1,))
+        if self.attn_every:
+            kw["attn_every"] = 2
+        if self.enc_layers:
+            kw["enc_layers"] = 2
+            kw["enc_seq"] = 16
+        if self.n_patches:
+            kw["n_patches"] = 4
+        return ModelConfig(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

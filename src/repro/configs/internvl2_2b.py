@@ -1,0 +1,18 @@
+"""InternVL2-2B — InternViT frontend (stubbed) + InternLM2 LLM backbone
+[arXiv:2404.16821]. The vision encoder is a STUB per the carve-out:
+``input_specs`` provides 256 precomputed patch embeddings per image.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=92553,
+    n_patches=256,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ShapeConfig, INPUT_SHAPES
+
+_ARCH_MODULES = {
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "qwen1.5-110b": "repro.configs.qwen1p5_110b",
+    "yi-6b": "repro.configs.yi_6b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "command-r-35b": "repro.configs.command_r_35b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in list_archs()}

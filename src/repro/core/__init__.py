@@ -1,0 +1,15 @@
+# The paper's primary contribution: asynchronous differentially-private
+# collaborative learning (Algorithm 1 + Theorems 1-2) and its pod-scale
+# adaptation (AsyncDPTrainer with a sharded owner-copy bank).
+from repro.core.algorithm1 import Algo1Config, Algo1Trace, run_algorithm1, run_many
+from repro.core.async_trainer import (AsyncDPConfig, AsyncDPState, init_state,
+                                      make_sync_dp_step, make_train_step)
+from repro.core.clocks import Schedule, poisson_schedule, uniform_schedule
+from repro.core.cop import (bound_asymptotic, bound_theorem2, budget_sum,
+                            fit_constants, min_owners_for_benefit)
+from repro.core.dp_sgd import PrivatizerConfig, clip_tree, private_grad
+from repro.core.linear import (LinearProblem, Owner, fitness, make_problem,
+                               owner_grad, record_grad_bound, relative_fitness)
+from repro.core.privacy import (PrivacyAccountant, capped_rounds,
+                                laplace_noise, laplace_noise_tree,
+                                laplace_scale_theorem1)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (OwnerDataPipeline, OwnerShard,
+                                 synthetic_owner_shards)
+from repro.data.synthetic import (GENERATORS, health, lending, owner_shards,
+                                  token_batch)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: privatize a gradient PYTREE with the fused Pallas kernel.
+
+    noisy = dp_privatize_tree(grads, key, xi=..., noise_scale=..., interpret=...)
+
+Two HBM passes total: (1) blockwise squared-norm partials -> global norm ->
+clip factor; (2) fused scale+Laplace-add. The Laplace bits come from
+jax.random (threefry) so the DP guarantee rides on the library RNG.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip_noise.kernel import LANES, scale_noise_2d, sqnorm_2d
+
+tmap = jax.tree_util.tree_map
+
+
+def _pack(leaf: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
+    flat = leaf.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    per_block = block_rows * LANES
+    pad = (-n) % per_block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def dp_privatize_tree(grads: Any, key, xi: float, noise_scale: float, *,
+                      block_rows: int = 256, interpret: bool = False) -> Any:
+    """Clip the tree to global norm xi, add Laplace(noise_scale) noise."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    packed = [_pack(l, block_rows) for l in leaves]
+
+    sq = sum(sqnorm_2d(p, block_rows=block_rows, interpret=interpret)
+             for p, _ in packed)
+    norm = jnp.sqrt(sq)
+    clip = jnp.minimum(1.0, xi / jnp.maximum(norm, 1e-12))
+    cs = clip.reshape(1, 1).astype(jnp.float32)
+    ns = jnp.full((1, 1), noise_scale, jnp.float32)
+
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (p, n), leaf, k in zip(packed, leaves, keys):
+        bits = jax.random.bits(k, p.shape, jnp.uint32)
+        y = scale_noise_2d(p, bits, cs, ns, block_rows=block_rows,
+                           interpret=interpret)
+        out.append(y.reshape(-1)[:n].reshape(leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the dp_clip_noise kernel (bit-exact transform)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def laplace_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    u01 = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    v = u01 - 0.5
+    return -jnp.sign(v) * jnp.log1p(
+        -2.0 * jnp.abs(jnp.clip(v, -0.4999999, 0.4999999)))
+
+
+def scale_noise_ref(g: jnp.ndarray, bits: jnp.ndarray, clip_scale,
+                    noise_scale) -> jnp.ndarray:
+    lap = laplace_from_bits(bits)
+    return (g.astype(jnp.float32) * clip_scale + noise_scale * lap
+            ).astype(g.dtype)
+
+
+def sqnorm_ref(g: jnp.ndarray) -> jnp.ndarray:
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf)

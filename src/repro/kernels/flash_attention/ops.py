@@ -1,0 +1,56 @@
+"""jit'd public wrapper: GQA-aware flash attention in model layout.
+
+Model layout (B, S, H, hd) with Kv <= H kv heads; this wrapper expands kv
+heads to query heads, pads hd to a multiple of 128 (MXU lane width) and S
+to the block size, and calls the Pallas kernel (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,Skv,Kv,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    hd_pad = (-hd) % 128
+    if hd_pad:
+        pad = [(0, 0), (0, 0), (0, 0), (0, hd_pad)]
+        qt, kt, vt = jnp.pad(qt, pad), jnp.pad(kt, pad), jnp.pad(vt, pad)
+    bq_eff = min(bq, S)
+    bk_eff = min(bk, Skv)
+    sq_pad = (-S) % bq_eff
+    sk_pad = (-Skv) % bk_eff
+    if sq_pad:
+        qt = jnp.pad(qt, [(0, 0), (0, 0), (0, sq_pad), (0, 0)])
+    if sk_pad:
+        # padded kv positions fall outside causal/window masks for real
+        # queries as long as they trail the sequence; mask handles them
+        # only under `causal`; for bidirectional use exact shapes.
+        kt = jnp.pad(kt, [(0, 0), (0, 0), (0, sk_pad), (0, 0)])
+        vt = jnp.pad(vt, [(0, 0), (0, 0), (0, sk_pad), (0, 0)])
+        assert causal, "non-causal padding not supported"
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               bq=bq_eff, bk=bk_eff, scale=hd ** -0.5,
+                               interpret=interpret)
+    out = out[:, :, :S, :hd]
+    return out.transpose(0, 2, 1, 3)

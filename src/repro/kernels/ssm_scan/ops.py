@@ -1,0 +1,63 @@
+"""jit'd wrapper: full chunked SSD scan with the Pallas intra-chunk kernel.
+
+Mirrors repro.models.ssm.ssd_chunked's signature so the model can swap
+implementations (`use_pallas` plumbed from the model when running on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssd_chunk_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(v: jax.Array, ld: jax.Array, k: jax.Array,
+                       q: jax.Array, g: jax.Array, *, chunk: int,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as models.ssm.ssd_chunked."""
+    B, S, H, P = v.shape
+    N = k.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        v, k, q = zpad(v), zpad(k), zpad(q)
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+        ld = jnp.pad(ld, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    def chunked(a, feat):
+        # (B,S,H,F) -> (B,H,nc,Q,F)
+        if feat:
+            return a.reshape(B, nc, Q, H, a.shape[-1]).transpose(0, 3, 1, 2, 4)
+        return a.reshape(B, nc, Q, H, 1).transpose(0, 3, 1, 2, 4)
+
+    vc = chunked(v, True)
+    kc = chunked(k, True)
+    qc = chunked(q, True)
+    ldc = chunked(ld[..., None], False)
+    gc = chunked(g[..., None], False)
+
+    y_in, h_add, cum, tot = ssd_chunk_scan(vc, kc, qc, ldc, gc,
+                                           interpret=interpret)
+
+    # inter-chunk recurrence over nc (small, sequential)
+    def step(h, xs):
+        hadd_c, tot_c = xs                       # (B,H,N,P), (B,H,1)
+        h_new = jnp.exp(tot_c)[..., None] * h + hadd_c
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    hs_in = (h_add.transpose(2, 0, 1, 3, 4), tot.transpose(2, 0, 1, 3))
+    h_fin, h_prevs = jax.lax.scan(step, h0, hs_in)   # h_prevs: (nc,B,H,N,P)
+
+    q_dec = qc.astype(jnp.float32) * jnp.exp(cum)    # (B,H,nc,Q,N)
+    y_st = jnp.einsum("bhcqn,cbhnp->bhcqp", q_dec, h_prevs)
+    y = (y_in + y_st).transpose(0, 2, 3, 1, 4).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(v.dtype), h_fin

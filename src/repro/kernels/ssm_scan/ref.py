@@ -1,0 +1,8 @@
+"""Oracle for the ssm_scan kernel: the pure-jnp generalized SSD scan from
+repro.models.ssm (the model's own reference path)."""
+from repro.models.ssm import ssd_chunked, ssd_step  # noqa: F401
+
+
+def ssd_ref(v, ld, k, q, g, *, chunk):
+    """v: (B,S,H,P); ld,g: (B,S,H); k,q: (B,S,H,N) -> (y, h_final)."""
+    return ssd_chunked(v, ld, k, q, g, chunk=chunk)

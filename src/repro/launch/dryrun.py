@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run entrypoint.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against ShapeDtypeStruct inputs — proves the distribution
+config is coherent without hardware, and extracts the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and are read by
+benchmarks/roofline and EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze as hlo_analyze
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            skip_existing: bool = False, variant: str = "",
+            step_kw: dict = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "variant": variant, "step_kw": {
+               k: v for k, v in (step_kw or {}).items()}}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        bundle = build_step(cfg, shape, mesh, **(step_kw or {}))
+        jitted = jax.jit(bundle.step, in_shardings=bundle.in_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        t0 = time.time()
+        with mesh:
+            lowered = jitted.lower(*bundle.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+
+        mem = None
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                mem = {k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            mem = {"error": str(e)}
+        rec["memory_analysis"] = mem
+        print(f"[{tag}] memory_analysis: {mem}")
+
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis_xla"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "XLA-CPU counts while bodies once; see hlo_walker",
+        }
+
+        # loop-aware per-device cost from the post-optimization HLO text
+        hlo = compiled.as_text()
+        try:
+            import zstandard
+            os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+            with open(os.path.join(out_dir, "hlo", tag + ".hlo.zst"),
+                      "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6)
+                        .compress(hlo.encode()))
+        except Exception:
+            pass
+        walked = hlo_analyze(hlo)
+        rec["hlo_walker"] = walked
+        flops = walked["flops"]
+        byts = walked["traffic_bytes"]
+        coll_total = walked["collective_bytes_total"]
+        print(f"[{tag}] walker: flops={flops:.3e} traffic={byts:.3e} "
+              f"coll={coll_total:.3e}")
+
+        terms = roofline_terms(flops, byts, coll_total)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mf = model_flops(cfg.active_param_count(), tokens,
+                         "train" if shape.kind == "train" else "infer")
+        terms["model_flops_total"] = mf
+        terms["hlo_flops_total"] = flops * chips
+        terms["useful_flops_ratio"] = (mf / (flops * chips)
+                                       if flops else 0.0)
+        rec["roofline"] = terms
+        rec["chips"] = chips
+        rec["params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+        rec["ok"] = True
+        print(f"[{tag}] roofline: {terms}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{tag}] FAILED: {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="tag suffix for §Perf A/B runs")
+    ap.add_argument("--remat-groups", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--moe-mode", default="onehot",
+                    choices=["onehot", "ragged"])
+    ap.add_argument("--moe-group-tokens", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    step_kw = {"n_microbatches": args.microbatches,
+               "model_kw": {"remat_groups": args.remat_groups,
+                            "moe_mode": args.moe_mode,
+                            "moe_group_tokens": args.moe_group_tokens,
+                            "kv_chunk": args.kv_chunk}}
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out,
+                              skip_existing=args.skip_existing,
+                              variant=args.variant, step_kw=step_kw)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Target: TPU v5e pods — 256 chips/pod arranged (data=16, model=16);
+multi-pod doubles with a leading 'pod' axis (2, 16, 16) = 512 chips.
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devs) > need:   # e.g. single-pod mesh on a 512-device dry-run host
+        return jax.make_mesh(shape, axes, devices=devs[:need])
+    raise RuntimeError(
+        f"need {need} devices for mesh {shape}, have {len(devs)} — "
+        "run under launch/dryrun.py (it forces 512 host devices)")
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices the host actually has."""
+    devs = jax.devices()[: data * model]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs)

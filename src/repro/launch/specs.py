@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation. The dry-run lowers against these.
+
+Modality carve-out: for [audio]/[vlm] archs the stubbed frontend's outputs
+(frame/patch embeddings) appear here as inputs of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import LM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def effective_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding window in effect for this (arch, shape).
+
+    long_500k on archs with full attention uses the documented SWA override;
+    otherwise the arch's native window (mixtral) or None.
+    """
+    if shape.name == "long_500k" and cfg.long_context_override:
+        return cfg.long_context_override
+    return cfg.sliding_window
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      with_labels: bool = True,
+                      microbatches: int = 0) -> Dict[str, SDS]:
+    """microbatches > 0: microbatch-major layout (G, B/G, ...) — keeps the
+    DP microbatch scan shard-aligned on multi-pod meshes (§Perf iter. 11)."""
+    B, S = shape.global_batch, shape.seq_len
+    lead = ((microbatches, B // microbatches) if microbatches else (B,))
+    specs: Dict[str, SDS] = {}
+    s_txt = S - (cfg.n_patches if cfg.family == "vlm" else 0)
+    specs["tokens"] = SDS(lead + (s_txt,), jnp.int32)
+    if with_labels:
+        specs["labels"] = SDS(lead + (s_txt,), jnp.int32)
+    if cfg.family == "vlm":
+        specs["patches"] = SDS(lead + (cfg.n_patches, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "audio":
+        specs["frames"] = SDS(lead + (cfg.enc_seq, cfg.d_model),
+                              jnp.bfloat16)
+    return specs
+
+
+def params_specs(model: LM, dtype=jnp.bfloat16) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model.init(k, dtype), key)
+
+
+def cache_specs_struct(model: LM, shape: ShapeConfig,
+                       dtype=jnp.bfloat16) -> Any:
+    w = effective_window(model.cfg, shape)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 window=w, dtype=dtype))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[SDS, SDS]:
+    B = shape.global_batch
+    return SDS((B, 1), jnp.int32), SDS((), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: LM) -> Dict:
+    """Everything the lowered step consumes, by shape kind."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape),
+                "owner_idx": SDS((), jnp.int32),
+                "noise_key": SDS((2,), jnp.uint32)}
+    if shape.kind == "prefill":
+        return {"batch": train_batch_specs(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        toks, pos = decode_input_specs(cfg, shape)
+        return {"cache": cache_specs_struct(model, shape),
+                "tokens": toks, "pos": pos}
+    raise ValueError(shape.kind)

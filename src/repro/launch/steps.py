@@ -1,0 +1,158 @@
+"""Step builders: (arch x shape x mesh) -> jittable step + shardings.
+
+train  -> the paper's async-DP step (AsyncDPTrainer, owner bank in state)
+prefill-> full-sequence forward, last-position logits
+decode -> one-token serve_step against the KV/SSM cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.async_trainer import AsyncDPConfig, init_state, make_train_step
+from repro.core.dp_sgd import PrivatizerConfig
+from repro.launch import specs as specs_mod
+from repro.models.model import LM, build_model
+from repro.sharding import rules
+
+
+@dataclasses.dataclass
+class StepBundle:
+    step: Callable                 # the function to jit
+    args: Tuple[Any, ...]          # ShapeDtypeStruct pytrees, in order
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    kind: str
+
+
+def default_async_cfg(n_owners: int = 4, horizon: int = 1000,
+                      n_microbatches: int = 8, xi: float = 1.0,
+                      pre_grouped: bool = True) -> AsyncDPConfig:
+    return AsyncDPConfig(
+        n_owners=n_owners, horizon=horizon, rho=1.0, sigma=1e-4,
+        epsilons=tuple([1.0] * n_owners),
+        owner_sizes=tuple([1_000_000] * n_owners), xi=xi, theta_max=100.0,
+        privatizer=PrivatizerConfig(xi=xi, granularity="microbatch",
+                                    n_microbatches=n_microbatches,
+                                    pre_grouped=pre_grouped))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                     model: Optional[LM] = None,
+                     async_cfg: Optional[AsyncDPConfig] = None,
+                     dtype=jnp.bfloat16) -> StepBundle:
+    model = model or build_model(cfg)
+    acfg = async_cfg or default_async_cfg()
+    w = specs_mod.effective_window(cfg, shape)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, window=w)[0]
+
+    raw_step = make_train_step(loss_fn, acfg)
+
+    def step(state, batch, owner_idx, noise_key):
+        key = jax.random.wrap_key_data(noise_key, impl="threefry2x32")
+        return raw_step(state, batch, owner_idx, key)
+
+    mb = (acfg.privatizer.n_microbatches
+          if acfg.privatizer.pre_grouped
+          and acfg.privatizer.granularity == "microbatch" else 0)
+    p_sds = specs_mod.params_specs(model, dtype)
+    state_sds = jax.eval_shape(lambda p: init_state(p, acfg), p_sds)
+    batch_sds = specs_mod.train_batch_specs(cfg, shape, microbatches=mb)
+
+    p_spec = rules.param_specs(p_sds, cfg, mesh)
+    bank_spec = rules.param_specs(
+        jax.tree_util.tree_map(lambda l: jax.ShapeDtypeStruct(
+            (acfg.n_owners,) + l.shape, l.dtype), p_sds),
+        cfg, mesh, bank_axis=True)
+    state_spec = type(state_sds)(theta_L=p_spec, bank=bank_spec, step=P())
+    b_spec = rules.batch_specs(batch_sds, shape, mesh, microbatches=mb)
+
+    sh = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    return StepBundle(
+        step=step,
+        args=(state_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32),
+              jax.ShapeDtypeStruct((2,), jnp.uint32)),
+        in_shardings=(sh(state_spec), sh(b_spec), _replicated(mesh),
+                      _replicated(mesh)),
+        donate_argnums=(0,),
+        kind="train")
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                       model: Optional[LM] = None,
+                       dtype=jnp.bfloat16) -> StepBundle:
+    model = model or build_model(cfg)
+    w = specs_mod.effective_window(cfg, shape)
+
+    def step(params, batch):
+        x, _ = model.forward(params, batch, window=w)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                            model._unembed(params))
+        return logits
+
+    p_sds = specs_mod.params_specs(model, dtype)
+    batch_sds = specs_mod.train_batch_specs(cfg, shape, with_labels=False)
+    p_spec = rules.param_specs(p_sds, cfg, mesh)
+    b_spec = rules.batch_specs(batch_sds, shape, mesh)
+    sh = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    return StepBundle(step, (p_sds, batch_sds),
+                      (sh(p_spec), sh(b_spec)), (), "prefill")
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                     model: Optional[LM] = None,
+                     dtype=jnp.bfloat16) -> StepBundle:
+    model = model or build_model(cfg)
+    w = specs_mod.effective_window(cfg, shape)
+
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, window=w)
+
+    p_sds = specs_mod.params_specs(model, dtype)
+    cache_sds = specs_mod.cache_specs_struct(model, shape, dtype)
+    tok_sds, pos_sds = specs_mod.decode_input_specs(cfg, shape)
+
+    p_spec = rules.param_specs(p_sds, cfg, mesh)
+    c_spec = rules.cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+    da = rules.data_axes(mesh)
+    B = shape.global_batch
+    tok_spec = P(da, None) if B % rules.axis_size(mesh, da) == 0 else P(None, None)
+
+    sh = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    return StepBundle(step, (p_sds, cache_sds, tok_sds, pos_sds),
+                      (sh(p_spec), sh(c_spec), NamedSharding(mesh, tok_spec),
+                       _replicated(mesh)),
+                      (1,), "decode")
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               n_microbatches: int = 8, model_kw: Optional[dict] = None,
+               **kw) -> StepBundle:
+    """model_kw: LM construction knobs (remat_groups, moe_mode, kv_chunk...)
+    — the §Perf hillclimb surface."""
+    model = build_model(cfg, **(model_kw or {}))
+    if shape.kind == "train":
+        return build_train_step(
+            cfg, shape, mesh, model=model,
+            async_cfg=kw.pop("async_cfg", None)
+            or default_async_cfg(n_microbatches=n_microbatches), **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, model=model, **kw)
+    return build_serve_step(cfg, shape, mesh, model=model, **kw)

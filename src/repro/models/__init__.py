@@ -1,0 +1,3 @@
+from repro.models.model import LM, Batch, Params, build_model, chunked_lm_loss
+
+__all__ = ["LM", "Batch", "Params", "build_model", "chunked_lm_loss"]

@@ -1,0 +1,237 @@
+"""GQA/MQA attention: blockwise-online-softmax training path, cached decode.
+
+Layout conventions:
+  activations  x        : (B, S, d)
+  queries      q        : (B, S, H, hd)
+  keys/values  k, v     : (B, S, Kv, hd)
+  weights      wq       : (d, H, hd)     wk/wv: (d, Kv, hd)    wo: (H, hd, d)
+KV caches:
+  full  : (B, S_max, Kv, hd), write at `pos`
+  ring  : (B, W, Kv, hd), write at `pos % W`  (sliding-window layers)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool, dtype) -> AttnParams:
+    ks = jax.random.split(key, 4)
+    wq = dense_init(ks[0], (d_model, n_heads, head_dim), dtype)
+    wk = dense_init(ks[1], (d_model, n_kv, head_dim), dtype)
+    wv = dense_init(ks[2], (d_model, n_kv, head_dim), dtype)
+    wo = dense_init(ks[3], (n_heads, head_dim, d_model), dtype)
+    if qkv_bias:
+        z = jnp.zeros
+        return AttnParams(wq, wk, wv, wo, z((n_heads, head_dim), dtype),
+                          z((n_kv, head_dim), dtype), z((n_kv, head_dim), dtype))
+    return AttnParams(wq, wk, wv, wo)
+
+
+def qkv_proj(p: AttnParams, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    return q, k, v
+
+
+def out_proj(p: AttnParams, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p.wo)
+
+
+# ---------------------------------------------------------------------------
+# training / prefill attention: scan over KV chunks with online softmax.
+# Memory per step is O(S * kv_chunk) instead of O(S^2).
+# ---------------------------------------------------------------------------
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_positions: jax.Array, kv_positions: jax.Array,
+                        causal: bool = True, window: Optional[int] = None,
+                        kv_chunk: int = 1024) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,Kv,hd). Returns (B,Sq,H,hd).
+
+    Matmuls keep bf16 operands with fp32 accumulation
+    (preferred_element_type) — §Perf iteration 1: casting operands to fp32
+    before the einsum doubled HBM traffic for zero MXU benefit.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    kv_chunk = min(kv_chunk, Skv)
+    n_chunks = -(-Skv // kv_chunk)
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-10 ** 9)
+
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    scale = hd ** -0.5
+    kc = k.reshape(B, n_chunks, kv_chunk, Kv, hd).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, kv_chunk, Kv, hd).swapaxes(0, 1)
+    pc = kv_positions.reshape(n_chunks, kv_chunk)
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kj, vj, pj = chunk
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        dp = q_positions[None, :, None, None, None] - pj[None, None, None, None, :]
+        if causal:
+            mask = dp >= 0
+        else:
+            mask = pj[None, None, None, None, :] >= 0
+        if window is not None:
+            mask = mask & (dp < window)
+        s = jnp.where(mask, s, NEG_INF)
+        mj = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, mj)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(q.dtype), vj,
+                       preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + o
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Kv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def plain_attention(q, k, v, mask=None) -> jax.Array:
+    """Small-S reference path (encoder / cross-attn / decode). GQA-aware."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k.astype(jnp.float32)) * hd ** -0.5
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+def attention_forward(p: AttnParams, x: jax.Array, *, positions: jax.Array,
+                      rope_theta: float, causal: bool = True,
+                      window: Optional[int] = None,
+                      kv_chunk: int = 1024,
+                      backend: str = "jnp") -> jax.Array:
+    """backend: 'jnp' (blockwise online softmax — pjit/dry-run path) or
+    'pallas' (the flash kernel; interpret mode on CPU, native on TPU).
+    The kernel keeps score tiles in VMEM — see EXPERIMENTS.md §Perf for the
+    traffic it removes."""
+    q, k, v = qkv_proj(p, x)
+    cos, sin = rope_freqs(positions, q.shape[-1], rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    if backend == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            bq=min(256, q.shape[1]), bk=min(256, k.shape[1]),
+                            interpret=jax.default_backend() == "cpu")
+    else:
+        o = blockwise_attention(q, k, v, q_positions=positions,
+                                kv_positions=positions, causal=causal,
+                                window=window, kv_chunk=kv_chunk)
+    return out_proj(p, o)
+
+
+def encoder_attention(p: AttnParams, x: jax.Array) -> jax.Array:
+    """Bidirectional, no RoPE (whisper encoder uses learned abs pos)."""
+    q, k, v = qkv_proj(p, x)
+    return out_proj(p, plain_attention(q, k, v))
+
+
+def cross_attention(p: AttnParams, x: jax.Array, enc_k: jax.Array,
+                    enc_v: jax.Array) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    if p.bq is not None:
+        q = q + p.bq
+    return out_proj(p, plain_attention(q, enc_k, enc_v))
+
+
+def cross_kv(p: AttnParams, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p.wv)
+    if p.bk is not None:
+        k, v = k + p.bk, v + p.bv
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode (one token) against a cache
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Kv, hd) — C = S_max (full) or W (ring)
+    v: jax.Array
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+                  dtype) -> KVCache:
+    shape = (batch, capacity, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(p: AttnParams, x: jax.Array, cache: KVCache,
+                     pos: jax.Array, *, rope_theta: float, ring: bool,
+                     window: Optional[int] = None):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 current position.
+
+    ``ring`` is STATIC: True for sliding-window layers whose cache capacity
+    is the window size (slot = pos % C); False for full caches (slot = pos).
+    Returns (out, new_cache).
+    """
+    q, k, v = qkv_proj(p, x)                       # (B,1,H/Kv,hd)
+    cos, sin = rope_freqs(pos[None], q.shape[-1], rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+
+    C = cache.k.shape[1]
+    slot = pos % C if ring else jnp.minimum(pos, C - 1)
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), slot, axis=1)
+
+    idx = jnp.arange(C)
+    if ring:
+        # entry at slot i holds position: the largest p <= pos with p % C == i
+        age = (slot - idx) % C                      # 0..C-1, 0 == current token
+        kv_pos = pos - age
+        valid = kv_pos >= 0
+        if window is not None:
+            valid &= (pos - kv_pos) < window
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid &= (pos - idx) < window
+    mask = valid[None, None, None, None, :]         # (1,1,1,1,C)
+    o = plain_attention(q, new_k, new_v, mask=mask)
+    return out_proj(p, o), KVCache(new_k, new_v)

@@ -1,0 +1,38 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class MLPParams(NamedTuple):
+    w_gate: Optional[jax.Array]   # (d, f) — None for plain GELU MLP
+    w_up: jax.Array               # (d, f)
+    w_down: jax.Array             # (f, d)
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return MLPParams(dense_init(k1, (d_model, d_ff), dtype),
+                     dense_init(k2, (d_model, d_ff), dtype),
+                     dense_init(k3, (d_ff, d_model), dtype))
+
+
+def init_gelu(key, d_model: int, d_ff: int, dtype) -> MLPParams:
+    k1, k2 = jax.random.split(key, 2)
+    return MLPParams(None, dense_init(k1, (d_model, d_ff), dtype),
+                     dense_init(k2, (d_ff, d_model), dtype))
+
+
+def mlp_forward(p: MLPParams, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p.w_up)
+    if p.w_gate is not None:
+        gate = jnp.einsum("bsd,df->bsf", x, p.w_gate)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p.w_down)

@@ -1,0 +1,219 @@
+"""State-space sequence mixing: generalized chunked SSD scan + Mamba2 block.
+
+The generalized scan computes, per head h:
+    S_t = exp(ld_t) * S_{t-1} + k_t (g_t v_t)^T        (state: N x P)
+    y_t = q_t^T S_t
+which covers:
+  * Mamba2 (SSD): k = B_ssm, q = C_ssm (shared across heads, broadcast),
+    g = dt, ld = dt * A  [arXiv:2405.21060 form]
+  * mLSTM:        k/q per head, g = input gate, ld = log f-gate
+Chunked evaluation: intra-chunk quadratic + inter-chunk state carry,
+O(S/Q) sequential steps. The Pallas `ssm_scan` kernel implements the same
+contraction; `repro/kernels/ssm_scan/ref.py` delegates here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssd_chunked(v: jax.Array, ld: jax.Array, k: jax.Array, q: jax.Array,
+                g: jax.Array, *, chunk: int,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """v: (B,S,H,P); ld,g: (B,S,H); k,q: (B,S,H,N).
+
+    Returns (y: (B,S,H,P) fp32-accumulated in input dtype, h_final: (B,H,N,P)).
+    """
+    B, S, H, P = v.shape
+    N = k.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        v, k, q = zpad(v), zpad(k), zpad(q)
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+        ld = jnp.pad(ld, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    def chunked(a):
+        return a.reshape((B, nc, Q) + a.shape[2:]).swapaxes(0, 1)
+
+    vf = chunked(v.astype(jnp.float32) * g.astype(jnp.float32)[..., None])
+    kc = chunked(k.astype(jnp.float32))
+    qc = chunked(q.astype(jnp.float32))
+    ldc = chunked(ld.astype(jnp.float32))
+    cum = jnp.cumsum(ldc, axis=2)                       # (nc,B,Q,H) inclusive
+    tot = cum[:, :, -1, :]                              # (nc,B,H)
+
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+
+    def step(h, c):
+        vj, kj, qj, cumj, totj = c
+        qk = jnp.einsum("bthn,bshn->btsh", qj, kj)
+        # mask BEFORE exp: above-diagonal cum differences are positive and
+        # overflow fp32 for long chunks (exp(+large) -> inf -> inf*0 = NaN)
+        delta = cumj[:, :, None, :] - cumj[:, None, :, :]
+        dec = jnp.exp(jnp.where(tri[None, :, :, None] > 0, delta, -jnp.inf))
+        y_in = jnp.einsum("btsh,bshp->bthp", qk * dec, vj)
+        q_dec = qj * jnp.exp(cumj)[..., None]
+        y_st = jnp.einsum("bthn,bhnp->bthp", q_dec, h)
+        w = jnp.exp(totj[:, None, :] - cumj)            # (B,Q,H)
+        h_new = (jnp.exp(totj)[:, :, None, None] * h
+                 + jnp.einsum("bshn,bshp->bhnp", kj * w[..., None], vj))
+        return h_new, y_in + y_st
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_fin, yc = jax.lax.scan(step, h0, (vf, kc, qc, cum, tot))
+    y = yc.swapaxes(0, 1).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(v.dtype), h_fin
+
+
+def ssd_step(h: jax.Array, v: jax.Array, ld: jax.Array, k: jax.Array,
+             q: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. h: (B,H,N,P); v: (B,H,P); ld,g: (B,H);
+    k,q: (B,H,N). Returns (y: (B,H,P), h_new)."""
+    hf = h.astype(jnp.float32)
+    a = jnp.exp(ld.astype(jnp.float32))[..., None, None]
+    upd = jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32),
+                     v.astype(jnp.float32) * g.astype(jnp.float32)[..., None])
+    h_new = a * hf + upd
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), h_new)
+    return y.astype(v.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (mamba2 / xLSTM frontends)
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,C); w: (K,C) depthwise. Returns (B,S,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(state: jax.Array, x1: jax.Array, w: jax.Array):
+    """state: (B,K-1,C) past inputs; x1: (B,C). Returns (y: (B,C), new_state)."""
+    K = w.shape[0]
+    hist = jnp.concatenate([state, x1[:, None]], axis=1)      # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x1.dtype)
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+class Mamba2Params(NamedTuple):
+    w_z: jax.Array        # (d, d_in)
+    w_x: jax.Array        # (d, d_in)
+    w_B: jax.Array        # (d, N)
+    w_C: jax.Array        # (d, N)
+    w_dt: jax.Array       # (d, H)
+    conv: jax.Array       # (K, d_in + 2N)
+    A_log: jax.Array      # (H,) fp32
+    D: jax.Array          # (H,) fp32
+    dt_bias: jax.Array    # (H,) fp32
+    norm: jax.Array       # (d_in,)
+    w_out: jax.Array      # (d_in, d)
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array          # (B, H, N, P) fp32
+    conv: jax.Array       # (B, K-1, d_in + 2N)
+
+
+def mamba2_dims(d_model: int, s: SSMConfig):
+    d_in = s.expand * d_model
+    H = d_in // s.head_dim
+    return d_in, H
+
+
+def init_mamba2(key, d_model: int, s: SSMConfig, dtype) -> Mamba2Params:
+    d_in, H = mamba2_dims(d_model, s)
+    ks = jax.random.split(key, 7)
+    dt0 = jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H)))  # softplus^-1
+    return Mamba2Params(
+        w_z=dense_init(ks[0], (d_model, d_in), dtype),
+        w_x=dense_init(ks[1], (d_model, d_in), dtype),
+        w_B=dense_init(ks[2], (d_model, s.d_state), dtype),
+        w_C=dense_init(ks[3], (d_model, s.d_state), dtype),
+        w_dt=dense_init(ks[4], (d_model, H), dtype),
+        conv=dense_init(ks[5], (s.d_conv, d_in + 2 * s.d_state), dtype, scale=0.5),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        dt_bias=dt0.astype(jnp.float32),
+        norm=jnp.ones((d_in,), dtype),
+        w_out=dense_init(ks[6], (d_in, d_model), dtype),
+    )
+
+
+def _mamba2_proj(p: Mamba2Params, x: jax.Array, s: SSMConfig):
+    z = jnp.einsum("bsd,de->bse", x, p.w_z)
+    xc = jnp.einsum("bsd,de->bse", x, p.w_x)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p.w_B)
+    Cm = jnp.einsum("bsd,dn->bsn", x, p.w_C)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p.w_dt)
+    return z, jnp.concatenate([xc, Bm, Cm], axis=-1), dt_raw
+
+
+def mamba2_forward(p: Mamba2Params, x: jax.Array, s: SSMConfig) -> jax.Array:
+    B_, S, d = x.shape
+    d_in, H = mamba2_dims(d, s)
+    N, P = s.d_state, s.head_dim
+    z, xbc, dt_raw = _mamba2_proj(p, x, s)
+    xbc = jax.nn.silu(causal_conv(xbc, p.conv).astype(jnp.float32)).astype(x.dtype)
+    xc, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)     # (B,S,H)
+    A = -jnp.exp(p.A_log)                                            # (H,)
+    ld = dt * A
+    v = xc.reshape(B_, S, H, P)
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B_, S, H, N))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B_, S, H, N))
+    y, _ = ssd_chunked(v, ld, k, q, dt, chunk=s.chunk)
+    y = y + (p.D[None, None, :, None]
+             * v.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p.norm)
+    return jnp.einsum("bse,ed->bsd", y, p.w_out)
+
+
+def init_mamba2_state(batch: int, d_model: int, s: SSMConfig,
+                      dtype=jnp.bfloat16) -> Mamba2State:
+    d_in, H = mamba2_dims(d_model, s)
+    return Mamba2State(
+        h=jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, d_in + 2 * s.d_state), dtype))
+
+
+def mamba2_decode(p: Mamba2Params, x: jax.Array, state: Mamba2State,
+                  s: SSMConfig):
+    """x: (B, 1, d). Returns (out (B,1,d), new_state)."""
+    B_, _, d = x.shape
+    d_in, H = mamba2_dims(d, s)
+    N, P = s.d_state, s.head_dim
+    z, xbc, dt_raw = _mamba2_proj(p, x, s)
+    conv_out, new_conv = causal_conv_step(state.conv.astype(xbc.dtype),
+                                          xbc[:, 0], p.conv)
+    xbc1 = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)  # (B,C)
+    xc, Bm, Cm = jnp.split(xbc1, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p.dt_bias)  # (B,H)
+    ld = dt * (-jnp.exp(p.A_log))
+    v = xc.reshape(B_, H, P)
+    k = jnp.broadcast_to(Bm[:, None, :], (B_, H, N))
+    q = jnp.broadcast_to(Cm[:, None, :], (B_, H, N))
+    y, h_new = ssd_step(state.h, v, ld, k, q, dt)
+    y = y + (p.D[None, :, None] * v.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p.norm)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out)
+    return out, Mamba2State(h_new, new_conv.astype(state.conv.dtype))

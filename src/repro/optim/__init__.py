@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptState, adamw, apply_updates, inertia_sgd,
+                                    sgd)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup

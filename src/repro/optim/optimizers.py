@@ -1,0 +1,91 @@
+"""Minimal optax-style optimizers in pure JAX (no optax in this container).
+
+Each optimizer is (init_fn, update_fn):
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+`inertia_sgd` is the paper's Algorithm-1 update rule expressed as an
+optimizer transform: constant rate alpha = rho/T^2 scaled by N/sigma, plus
+the l_inf projection. It is stateless — the *inertia* lives in the trainer
+(the theta_bar blend), not here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+class OptState(NamedTuple):
+    mu: Any = None
+    nu: Any = None
+    count: jax.Array = None
+
+
+def apply_updates(params, updates):
+    return tmap(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                params, updates)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array], momentum: float = 0.0):
+    def init(params):
+        mu = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else None
+        return OptState(mu=mu, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        del params
+        if momentum:
+            mu = tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                      state.mu, grads)
+            upd = tmap(lambda m: -lr(state.count) * m, mu)
+            return upd, OptState(mu=mu, count=state.count + 1)
+        upd = tmap(lambda g: -lr(state.count) * g.astype(jnp.float32), grads)
+        return upd, OptState(count=state.count + 1)
+
+    return init, update
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array], b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(mu=tmap(z, params), nu=tmap(z, params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        mu = tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state.mu, grads)
+        nu = tmap(lambda v, g: b2 * v + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        mhat = tmap(lambda m: m / (1 - b1 ** c), mu)
+        vhat = tmap(lambda v: v / (1 - b2 ** c), nu)
+        upd = tmap(lambda m, v, p: -lr(state.count)
+                   * (m / (jnp.sqrt(v) + eps)
+                      + weight_decay * p.astype(jnp.float32)),
+                   mhat, vhat, params)
+        return upd, OptState(mu=mu, nu=nu, count=c)
+
+    return init, update
+
+
+def inertia_sgd(n_owners: int, horizon: int, rho: float, sigma: float,
+                theta_max: float):
+    """Algorithm 1's constant-rate projected step (owner-copy side, eq. 5)."""
+    alpha = n_owners * rho / (horizon ** 2 * sigma)
+
+    def init(params):
+        return OptState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        upd = tmap(lambda g, p: jnp.clip(
+            p.astype(jnp.float32) - alpha * g.astype(jnp.float32),
+            -theta_max, theta_max) - p.astype(jnp.float32), grads, params)
+        return upd, OptState(count=state.count + 1)
+
+    return init, update

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return lr * w
+    return f
+
+
+def cosine_decay(lr: float, total: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0) if warmup else 1.0
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return w * (floor + (lr - floor) * cos)
+    return f

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (axis_size, batch_specs, cache_specs,
+                                  data_axes, named, param_specs,
+                                  spec_for_param)

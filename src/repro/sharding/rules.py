@@ -1,0 +1,211 @@
+"""Path-based sharding rules: param/batch/cache pytrees -> PartitionSpec.
+
+Strategy (single-pod mesh (data=16, model=16); multi-pod adds pod=2):
+  * weights: FSDP over 'data' on the d_model-like axis, TP over 'model' on
+    heads / d_ff / experts / vocab. Replicated across 'pod' (pure DP between
+    pods; cross-pod FSDP is a recorded §Perf candidate).
+  * activations/batch: batch dim over ('pod','data'); long_500k (B=1)
+    shards the KV-cache/sequence axis over ('pod','data') instead.
+  * every rule degrades to None when the dim is not divisible by the axis
+    size (e.g. MQA kv=1 -> shard head_dim instead of kv heads).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, a) for a in name]))
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    return axis if _div(dim, axis_size(mesh, axis)) else None
+
+
+def _path_tokens(path) -> Tuple[str, ...]:
+    toks = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                toks.append(str(getattr(p, attr)))
+                break
+        else:
+            toks.append(str(p))
+    return tuple(toks)
+
+
+def spec_for_param(path_tokens: Tuple[str, ...], shape: Tuple[int, ...],
+                   cfg: ModelConfig, mesh: Mesh) -> P:
+    t = set(path_tokens)
+    last = path_tokens[-1] if path_tokens else ""
+    M, D = "model", "data"
+    ms = axis_size(mesh, M)
+
+    if len(shape) <= 1:
+        return P()  # norms, scalar gate params — replicate
+
+    # --- embeddings -------------------------------------------------
+    if last == "embed":
+        return P(_maybe(mesh, M, shape[0]), _maybe(mesh, D, shape[1]))
+    if last == "unembed":
+        return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]))
+    if last in ("patch_proj",):
+        return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]))
+    if last == "enc_pos":
+        return P(None, None)
+
+    # --- attention --------------------------------------------------
+    if "attn" in t or "self" in t or "cross" in t or last == "shared_attn" \
+            or any(x in ("attn", "self", "cross", "shared_attn")
+                   for x in path_tokens):
+        if last == "wq":
+            return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]), None)
+        if last in ("wk", "wv"):
+            if _div(shape[1], ms):
+                return P(_maybe(mesh, D, shape[0]), M, None)
+            return P(_maybe(mesh, D, shape[0]), None, _maybe(mesh, M, shape[2]))
+        if last == "wo":
+            return P(_maybe(mesh, M, shape[0]), None, _maybe(mesh, D, shape[2]))
+        if last == "bq":
+            return P(_maybe(mesh, M, shape[0]), None)
+        if last in ("bk", "bv"):
+            if _div(shape[0], ms):
+                return P(M, None)
+            return P(None, _maybe(mesh, M, shape[1]))
+
+    # --- MoE ----------------------------------------------------------
+    if last == "router":
+        return P(_maybe(mesh, D, shape[0]), None)
+    if last in ("w_gate", "w_up") and len(shape) == 3:   # (E, d, f)
+        if _div(shape[0], ms):
+            return P(M, _maybe(mesh, D, shape[1]), None)
+        return P(None, _maybe(mesh, D, shape[1]), _maybe(mesh, M, shape[2]))
+    if last == "w_down" and len(shape) == 3:             # (E, f, d)
+        if _div(shape[0], ms):
+            return P(M, None, _maybe(mesh, D, shape[2]))
+        return P(None, _maybe(mesh, M, shape[1]), _maybe(mesh, D, shape[2]))
+
+    # --- dense MLP ----------------------------------------------------
+    if last in ("w_gate", "w_up"):                       # (d, f)
+        return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]))
+    if last == "w_down":                                 # (f, d)
+        return P(_maybe(mesh, M, shape[0]), _maybe(mesh, D, shape[1]))
+
+    # --- Mamba2 ---------------------------------------------------------
+    if last in ("w_z", "w_x"):                           # (d, d_in)
+        return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]))
+    if last in ("w_B", "w_C", "w_dt"):                   # (d, N|H)
+        return P(_maybe(mesh, D, shape[0]), None)
+    if last == "conv":
+        return P(None, None)
+    if last == "w_out":                                  # (d_in, d)
+        return P(_maybe(mesh, M, shape[0]), _maybe(mesh, D, shape[1]))
+
+    # --- xLSTM ----------------------------------------------------------
+    if last in ("w_q", "w_k", "w_v") and len(shape) == 3:  # (dm, H, N)
+        return P(_maybe(mesh, M, shape[0]), None, None)
+    if last in ("w_i", "w_f"):                           # (dm, H)
+        return P(_maybe(mesh, M, shape[0]), None)
+    if last == "w_in" and len(shape) == 4:               # (d, H, hd, 4)
+        return P(_maybe(mesh, D, shape[0]), None, None, None)
+    if last == "r":                                      # (H, hd, hd, 4)
+        return P(None, None, None, None)
+
+    # --- generic 2D fallback: FSDP x TP -------------------------------
+    if len(shape) == 2:
+        return P(_maybe(mesh, D, shape[0]), _maybe(mesh, M, shape[1]))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh,
+                bank_axis: bool = False) -> Any:
+    """PartitionSpec pytree for params (or the owner bank if bank_axis)."""
+    # stacked layer axis: scan-family blocks leaves carry a leading L dim —
+    # strip it. List-family blocks (xLSTM) have a numeric index in the path
+    # and NO leading layer dim.
+    def g(path, leaf):
+        toks = _path_tokens(path)
+        shape = tuple(leaf.shape)
+        off = 1 if bank_axis else 0
+        core = shape[off:]
+        is_list_block = any(t.isdigit() for t in toks)
+        if ("blocks" in toks or "enc_blocks" in toks) and not is_list_block:
+            spec = spec_for_param(toks, core[1:], cfg, mesh)
+            spec = P(None, *spec)
+        else:
+            spec = spec_for_param(toks, core, cfg, mesh)
+        if bank_axis:
+            spec = P(None, *spec)
+        return spec
+    return jax.tree_util.tree_map_with_path(g, params)
+
+
+def batch_specs(batch: Any, shape_cfg: ShapeConfig, mesh: Mesh,
+                microbatches: int = 0) -> Any:
+    """tokens/labels (B,S) or microbatch-major (G,m,S); patches/frames get
+    one extra trailing dim."""
+    B = shape_cfg.global_batch
+    da = data_axes(mesh)
+    rows = B // microbatches if microbatches else B
+    bshard = da if _div(rows, axis_size(mesh, da)) else None
+
+    def f(path, leaf):
+        nd = len(leaf.shape)
+        if microbatches:                       # (G, m, ...)
+            return P(*((None, bshard) + (None,) * (nd - 2)))
+        return P(*((bshard,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    """KV caches (L,B,C,Kv,hd) / states. B==1 -> shard cache seq axis."""
+    da = data_axes(mesh)
+    ds = axis_size(mesh, da)
+    ms = axis_size(mesh, "model")
+    bshard = da if _div(batch, ds) else None
+
+    def f(path, leaf):
+        toks = _path_tokens(path)
+        s = tuple(leaf.shape)
+        if "kv" in toks or "cross" in toks or "shared" in toks:
+            # (L,B,C,Kv,hd) stacked or (B,C,Kv,hd) per-layer
+            off = 1 if len(s) == 5 else 0
+            Bc, C, Kv, hd = s[off:]
+            kv_ax = ("model" if _div(Kv, ms) else None)
+            hd_ax = (None if kv_ax else ("model" if _div(hd, ms) else None))
+            if bshard is not None:
+                spec = (bshard, None, kv_ax, hd_ax)
+            else:
+                spec = (None, da if _div(C, ds) else None, kv_ax, hd_ax)
+            return P(*((None,) * off + spec))
+        if "mamba" in toks:                      # h (B,H,N,P) / conv (B,K,C)
+            if len(s) == 4:
+                return P(bshard, "model" if _div(s[1], ms) else None, None, None)
+            return P(bshard, None, "model" if _div(s[2], ms) else None)
+        if "states" in toks:                     # xlstm states
+            return P(*((bshard,) + (None,) * (len(s) - 1)))
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,78 @@
+"""Algorithm 1 (paper-faithful) behaviour on the paper's convex problem."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Algo1Config, fitness, make_problem, relative_fitness,
+                        run_algorithm1, run_many)
+from repro.data import owner_shards
+
+REG, SIGMA = 1e-5, 2e-5
+
+
+@pytest.fixture(scope="module")
+def problem():
+    shards = owner_shards("lending", [30_000] * 3, seed=0)
+    return make_problem(shards, reg=REG, theta_max=2.0)
+
+
+def _final_psi(problem, eps, T=400, rho=1.0, runs=8, seed=0):
+    prob, owners = problem
+    cfg = Algo1Config(horizon=T, rho=rho, sigma=SIGMA,
+                      epsilons=[eps] * len(owners))
+    tr = run_many(jax.random.PRNGKey(seed), prob, owners, cfg, runs)
+    return float(jnp.mean(tr.psi[:, -1]))
+
+
+def test_noiseless_convergence(problem):
+    prob, owners = problem
+    cfg = Algo1Config(horizon=400, rho=1.0, sigma=SIGMA,
+                      epsilons=[1.0] * 3, noiseless=True)
+    tr = run_algorithm1(jax.random.PRNGKey(0), prob, owners, cfg)
+    psi = np.asarray(tr.psi)
+    assert psi[-1] < 0.05                      # converges near theta*
+    assert psi[-1] < psi[9] / 5                # and actually decreased
+
+
+def test_psi_nonnegative_and_projected(problem):
+    prob, owners = problem
+    cfg = Algo1Config(horizon=100, rho=1.0, sigma=SIGMA, epsilons=[0.5] * 3)
+    tr = run_algorithm1(jax.random.PRNGKey(1), prob, owners, cfg)
+    assert float(jnp.min(tr.psi)) >= 0.0       # psi >= 0 by definition
+    assert float(jnp.max(jnp.abs(tr.theta_L))) <= prob.theta_max + 1e-6
+    assert float(jnp.max(jnp.abs(tr.theta_bank))) <= prob.theta_max + 1e-6
+
+
+def test_more_privacy_budget_helps(problem):
+    lo = _final_psi(problem, eps=1.0)
+    hi = _final_psi(problem, eps=100.0)
+    assert hi < lo                              # eps up -> cost of privacy down
+
+
+def test_owner_selection_uniform(problem):
+    prob, owners = problem
+    cfg = Algo1Config(horizon=3000, rho=1.0, sigma=SIGMA, epsilons=[1.0] * 3)
+    tr = run_algorithm1(jax.random.PRNGKey(2), prob, owners, cfg)
+    counts = np.bincount(np.asarray(tr.owners_seq), minlength=3)
+    assert counts.min() > 3000 / 3 * 0.8        # roughly uniform
+
+
+def test_beyond_paper_composition_reduces_noise(problem):
+    paper = _final_psi(problem, eps=2.0)
+    prob, owners = problem
+    cfg = Algo1Config(horizon=400, rho=1.0, sigma=SIGMA, epsilons=[2.0] * 3,
+                      composition="per_owner_rounds")
+    tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, 8)
+    capped = float(jnp.mean(tr.psi[:, -1]))
+    assert capped < paper                       # same eps, less noise
+
+
+def test_fitness_minimum_at_theta_star(problem):
+    prob, _ = problem
+    key = jax.random.PRNGKey(3)
+    for _ in range(5):
+        key, k = jax.random.split(key)
+        theta = prob.theta_star + 0.1 * jax.random.normal(k, prob.theta_star.shape)
+        assert float(fitness(prob, theta)) >= float(prob.f_star) - 1e-9
+        assert float(relative_fitness(prob, theta)) >= -1e-9

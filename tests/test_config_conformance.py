@@ -1,0 +1,81 @@
+"""Assignment conformance: every architecture config must carry the EXACT
+published dimensions from the assignment table (guards against silent config
+drift) and every reduced variant must obey the smoke-test contract."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "zamba2-2.7b": ("hybrid", 54, 2560, 32, 32, 10240, 32000),
+    "mixtral-8x22b": ("moe", 56, 6144, 48, 8, 16384, 32768),
+    "internvl2-2b": ("vlm", 24, 2048, 16, 8, 8192, 92553),
+    "qwen1.5-110b": ("dense", 80, 8192, 64, 8, 49152, 152064),
+    "yi-6b": ("dense", 32, 4096, 32, 4, 11008, 64000),
+    "whisper-medium": ("audio", 24, 1024, 16, 16, 4096, 51865),
+    "xlstm-125m": ("ssm", 12, 768, 4, 4, 0, 50304),
+    "granite-20b": ("dense", 52, 6144, 48, 1, 24576, 49152),
+    "qwen3-moe-30b-a3b": ("moe", 48, 2048, 32, 4, 768, 151936),
+    "command-r-35b": ("dense", 40, 8192, 64, 8, 22528, 256000),
+}
+
+
+def test_all_assigned_archs_present():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_exact_assigned_dims(arch):
+    fam, L, d, H, Kv, ff, V = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == Kv
+    assert cfg.d_ff == ff and cfg.vocab == V
+    assert cfg.source, "every config must cite its source"
+
+
+def test_special_features():
+    assert get_config("zamba2-2.7b").ssm.d_state == 64
+    assert get_config("mixtral-8x22b").moe.n_experts == 8
+    assert get_config("mixtral-8x22b").moe.top_k == 2
+    assert get_config("mixtral-8x22b").sliding_window == 4096
+    assert get_config("qwen3-moe-30b-a3b").moe.n_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").moe.top_k == 8
+    assert get_config("qwen1.5-110b").qkv_bias is True
+    assert get_config("command-r-35b").qkv_bias is False
+    assert get_config("whisper-medium").enc_layers == 24
+    assert get_config("whisper-medium").enc_seq == 1500
+    assert get_config("internvl2-2b").n_patches == 256
+    assert get_config("granite-20b").n_kv_heads == 1       # MQA
+
+
+def test_assigned_input_shapes():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+    assert s["decode_32k"].kind == "decode" and s["long_500k"].kind == "decode"
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_contract(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_count_sanity(arch):
+    """Analytic param counts land near the models' nominal sizes."""
+    nominal = {"zamba2-2.7b": 2.7e9, "mixtral-8x22b": 141e9,
+               "internvl2-2b": 2.0e9, "qwen1.5-110b": 111e9,
+               "yi-6b": 6e9, "whisper-medium": 0.77e9,
+               "xlstm-125m": 0.125e9, "granite-20b": 20e9,
+               "qwen3-moe-30b-a3b": 30.5e9, "command-r-35b": 35e9}[arch]
+    got = get_config(arch).param_count()
+    assert 0.35 * nominal < got < 1.6 * nominal, (got, nominal)

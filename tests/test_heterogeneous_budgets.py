@@ -1,0 +1,51 @@
+"""Per-owner heterogeneous privacy budgets: Theorem 2's bound depends on
+the budgets only through S = sum_i 1/eps_i^2 — two budget profiles with
+equal S should land at statistically comparable CoP, and the noisier owner
+dominates S as eps_i^-2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Algo1Config, make_problem, run_many
+from repro.core.cop import budget_sum
+from repro.data import owner_shards
+
+REG, SIGMA, T = 1e-5, 2e-5, 400
+
+
+@pytest.fixture(scope="module")
+def problem():
+    shards = owner_shards("lending", [20_000] * 4, seed=5,
+                          heterogeneity=0.0)
+    return make_problem(shards, reg=REG, theta_max=2.0)
+
+
+def _psi(problem, epsilons, runs=10, seed=0):
+    prob, owners = problem
+    cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA, epsilons=epsilons)
+    tr = run_many(jax.random.PRNGKey(seed), prob, owners, cfg, runs)
+    return float(jnp.mean(tr.psi[:, -1]))
+
+
+def test_equal_budget_sum_comparable_cop(problem):
+    # uniform: 4 owners at eps=2          -> S = 4/4        = 1.0
+    # skewed:  [sqrt(2), sqrt(2), 2, 2]^-2 -> 0.5+0.5+0.25+0.25 = 1.5... pick
+    # profiles with EXACTLY equal S instead:
+    uniform = [2.0] * 4                       # S = 1.0
+    skewed = [np.sqrt(2.0), np.sqrt(2.0), 1e6, 1e6]   # S = 0.5+0.5 = 1.0
+    assert budget_sum(uniform) == pytest.approx(budget_sum(skewed), rel=1e-6)
+    a = _psi(problem, uniform)
+    b = _psi(problem, skewed)
+    # same S -> same predicted CoP; allow 2.5x statistical slack
+    assert a / b < 2.5 and b / a < 2.5, (a, b)
+
+
+def test_one_paranoid_owner_dominates(problem):
+    # a single tight-budget owner dominates S and hence the CoP
+    relaxed = [10.0] * 4
+    one_tight = [10.0, 10.0, 10.0, 0.5]
+    assert budget_sum(one_tight) > 100 * budget_sum(relaxed)
+    a = _psi(problem, relaxed)
+    b = _psi(problem, one_tight)
+    assert b > 2.0 * a, (a, b)

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps per kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dp_clip_noise.ops import dp_privatize_tree
+from repro.kernels.dp_clip_noise.kernel import scale_noise_2d, sqnorm_2d, LANES
+from repro.kernels.dp_clip_noise.ref import (laplace_from_bits,
+                                             scale_noise_ref, sqnorm_ref)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan.ops import ssd_chunked_pallas
+from repro.kernels.ssm_scan.ref import ssd_ref
+
+
+# --------------------------- flash attention ------------------------------
+@pytest.mark.parametrize("B,S,H,Kv,hd,win", [
+    (2, 128, 4, 2, 64, None),
+    (1, 256, 4, 4, 32, 64),
+    (2, 96, 2, 1, 128, None),       # MQA + ragged final block
+    (1, 128, 8, 8, 80, 32),         # non-128 head dim (padded)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Kv, hd, win, dtype, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win, bq=64, bk=64,
+                          interpret=True)
+    G = H // Kv
+    ref = attention_ref(q.transpose(0, 2, 1, 3),
+                        jnp.repeat(k, G, 2).transpose(0, 2, 1, 3),
+                        jnp.repeat(v, G, 2).transpose(0, 2, 1, 3),
+                        causal=True, window=win).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# --------------------------- dp clip + noise ------------------------------
+@pytest.mark.parametrize("shape", [(256, LANES), (512, LANES)])
+def test_scale_noise_blocks_match_ref(shape, rng_key):
+    g = jax.random.normal(rng_key, shape, jnp.float32)
+    bits = jax.random.bits(rng_key, shape, jnp.uint32)
+    cs = jnp.full((1, 1), 0.37, jnp.float32)
+    ns = jnp.full((1, 1), 1.7, jnp.float32)
+    out = scale_noise_2d(g, bits, cs, ns, block_rows=128, interpret=True)
+    ref = scale_noise_ref(g, bits, 0.37, 1.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_sqnorm_matches_ref(rng_key):
+    g = jax.random.normal(rng_key, (512, LANES), jnp.float32)
+    out = sqnorm_2d(g, block_rows=128, interpret=True)
+    assert float(out) == pytest.approx(float(sqnorm_ref(g)), rel=1e-5)
+
+
+@pytest.mark.parametrize("shapes", [
+    {"a": (300, 77), "b": (5000,)},
+    {"w": (64, 64), "v": (8, 8, 8)},
+])
+def test_dp_privatize_tree_clip_only(shapes, rng_key):
+    tree = {k: jax.random.normal(jax.random.fold_in(rng_key, i), s)
+            for i, (k, s) in enumerate(shapes.items())}
+    xi = 0.5
+    out = dp_privatize_tree(tree, rng_key, xi, 0.0, block_rows=8,
+                            interpret=True)
+    gn = float(jnp.sqrt(sum(jnp.sum(l ** 2)
+                            for l in jax.tree_util.tree_leaves(tree))))
+    scale = min(1.0, xi / gn)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(tree[k] * scale), atol=1e-5)
+
+
+def test_dp_privatize_tree_noise_stats(rng_key):
+    tree = {"a": jnp.zeros((120_000,))}
+    b = 3.0
+    out = dp_privatize_tree(tree, rng_key, 1e9, b, block_rows=8,
+                            interpret=True)
+    x = np.asarray(out["a"])
+    assert abs(x.mean()) < 0.05
+    assert x.std() == pytest.approx(b * np.sqrt(2), rel=0.03)
+
+
+def test_laplace_bits_transform_range(rng_key):
+    bits = jax.random.bits(rng_key, (4096,), jnp.uint32)
+    lap = laplace_from_bits(bits)
+    assert bool(jnp.all(jnp.isfinite(lap)))
+
+
+# --------------------------- ssm chunk scan -------------------------------
+@pytest.mark.parametrize("B,S,H,N,P,Q", [
+    (2, 128, 3, 16, 32, 32),
+    (1, 100, 2, 8, 16, 32),         # ragged last chunk
+    (2, 64, 4, 64, 64, 64),
+    (1, 256, 1, 32, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_scan_sweep(B, S, H, N, P, Q, dtype, rng_key):
+    ks = jax.random.split(rng_key, 5)
+    v = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, N), dtype)
+    q = jax.random.normal(ks[2], (B, S, H, N), dtype)
+    ld = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H))).astype(jnp.float32)
+    g = jax.nn.sigmoid(jax.random.normal(ks[4], (B, S, H))).astype(jnp.float32)
+    y1, h1 = ssd_chunked_pallas(v, ld, k, q, g, chunk=Q, interpret=True)
+    y2, h2 = ssd_ref(v, ld, k, q, g, chunk=Q)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=tol)

@@ -1,0 +1,60 @@
+"""Theorem-1 mechanism + accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.privacy import (PrivacyAccountant, capped_rounds,
+                                laplace_noise, laplace_scale_theorem1)
+
+
+def test_theorem1_scale_formula():
+    # b = 2 Xi T / (n eps)
+    assert laplace_scale_theorem1(2.0, 1000, 10_000, 1.0) == pytest.approx(0.4)
+    assert laplace_scale_theorem1(1.0, 1, 1, 1.0) == pytest.approx(2.0)
+
+
+def test_theorem1_scale_monotonicity():
+    base = laplace_scale_theorem1(1.0, 1000, 10_000, 1.0)
+    assert laplace_scale_theorem1(1.0, 2000, 10_000, 1.0) > base   # more rounds
+    assert laplace_scale_theorem1(1.0, 1000, 20_000, 1.0) < base   # more data
+    assert laplace_scale_theorem1(1.0, 1000, 10_000, 2.0) < base   # more budget
+
+
+def test_strict_l1_slack():
+    paper = laplace_scale_theorem1(1.0, 10, 100, 1.0)
+    strict = laplace_scale_theorem1(1.0, 10, 100, 1.0, p=16, l1_slack="strict")
+    assert strict == pytest.approx(4.0 * paper)
+
+
+def test_laplace_noise_statistics(rng_key):
+    x = laplace_noise(rng_key, (200_000,), scale=3.0)
+    # Laplace(b): std = b*sqrt(2), mean 0
+    assert abs(float(jnp.mean(x))) < 0.05
+    assert float(jnp.std(x)) == pytest.approx(3.0 * np.sqrt(2), rel=0.02)
+
+
+def test_accountant_paper_composition():
+    acct = PrivacyAccountant({0: 1.0, 1: 2.0}, horizon=10)
+    for _ in range(10):
+        assert acct.record_response(0)
+    assert not acct.record_response(0)          # horizon exhausted
+    s = acct.summary()
+    assert s[0]["spent"] == pytest.approx(1.0)  # full budget
+    assert s[1]["spent"] == 0.0
+
+
+def test_accountant_capped_rounds():
+    # beyond-paper: cap at 2T/N responses -> per-response budget is larger,
+    # so the noise scale shrinks by ~N/2
+    T, N = 1000, 10
+    acct = PrivacyAccountant({i: 1.0 for i in range(N)}, T,
+                             composition="per_owner_rounds", n_owners=N)
+    cap = capped_rounds(T, N)
+    assert cap == 200
+    s_paper = laplace_scale_theorem1(1.0, T, 1000, 1.0)
+    s_capped = acct.scale_for(0, 1.0, 1000)
+    assert s_capped == pytest.approx(s_paper * cap / T)
+    for _ in range(cap):
+        assert acct.record_response(0)
+    assert not acct.record_response(0)

@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.roofline import roofline_terms
+from repro.core.cop import bound_asymptotic, budget_sum
+from repro.core.dp_sgd import clip_tree
+from repro.core.linear import make_problem, relative_fitness
+from repro.core.privacy import capped_rounds, laplace_scale_theorem1
+from repro.data import owner_shards
+
+SET = dict(max_examples=25, deadline=None, derandomize=True)
+
+
+@given(st.lists(st.floats(0.05, 100.0), min_size=1, max_size=8),
+       st.integers(1_000, 10_000_000))
+@settings(**SET)
+def test_cop_bound_monotone_in_n(epsilons, n):
+    b1 = bound_asymptotic(n, epsilons, 1.0, 1.0)
+    b2 = bound_asymptotic(2 * n, epsilons, 1.0, 1.0)
+    assert b2 < b1
+    assert b1 >= 0.0
+
+
+@given(st.floats(0.05, 50.0), st.floats(1.1, 4.0),
+       st.integers(100, 100_000), st.integers(1, 10_000))
+@settings(**SET)
+def test_theorem1_scale_scaling_laws(eps, mult, horizon, n):
+    b = laplace_scale_theorem1(1.0, horizon, n, eps)
+    assert laplace_scale_theorem1(1.0, horizon, n, eps * mult) < b
+    assert laplace_scale_theorem1(mult, horizon, n, eps) > b
+    # exact inverse proportionality
+    np.testing.assert_allclose(
+        laplace_scale_theorem1(1.0, horizon, n, eps * mult) * mult, b,
+        rtol=1e-9)
+
+
+@given(st.integers(1, 100_000), st.integers(1, 512))
+@settings(**SET)
+def test_capped_rounds_bounds(T, N):
+    c = capped_rounds(T, N)
+    assert 1 <= c
+    assert c >= T / N            # never less than the expected load
+
+
+@given(st.lists(st.floats(-10.0, 10.0), min_size=1, max_size=64),
+       st.floats(0.01, 10.0))
+@settings(**SET)
+def test_clip_tree_invariant(values, xi):
+    tree = {"x": jnp.asarray(values, jnp.float32)}
+    clipped, _ = clip_tree(tree, xi)
+    norm = float(jnp.linalg.norm(clipped["x"]))
+    assert norm <= xi * (1 + 1e-4)
+    # direction preserved
+    orig = jnp.asarray(values, jnp.float32)
+    if float(jnp.linalg.norm(orig)) > 1e-6:
+        cos = float(jnp.dot(clipped["x"], orig)
+                    / (jnp.linalg.norm(clipped["x"]) * jnp.linalg.norm(orig)
+                       + 1e-12))
+        assert cos > 0.999
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_relative_fitness_nonnegative(seed):
+    shards = owner_shards("lending", [500, 500], seed=seed % 97)
+    prob, _ = make_problem(shards, reg=1e-5, theta_max=3.0)
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.uniform(key, prob.theta_star.shape, minval=-3.0,
+                               maxval=3.0)
+    assert float(relative_fitness(prob, theta)) >= -1e-6
+
+
+@given(st.floats(1e6, 1e18), st.floats(1e6, 1e15), st.floats(0, 1e15))
+@settings(**SET)
+def test_roofline_terms_consistency(flops, byts, coll):
+    t = roofline_terms(flops, byts, coll)
+    assert t["step_lower_bound_s"] == max(t["compute_s"], t["memory_s"],
+                                          t["collective_s"])
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert t[f"{t['dominant']}_s"] == t["step_lower_bound_s"]
+
+
+@given(st.lists(st.floats(0.05, 100.0), min_size=1, max_size=16))
+@settings(**SET)
+def test_budget_sum_positive_and_additive(epsilons):
+    s = budget_sum(epsilons)
+    assert s > 0
+    np.testing.assert_allclose(budget_sum(epsilons + epsilons), 2 * s,
+                               rtol=1e-9)

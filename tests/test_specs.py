@@ -1,0 +1,58 @@
+"""input_specs contract: every dry-run input is a ShapeDtypeStruct with the
+assigned shapes, including the modality-stub carve-outs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import specs as S
+from repro.models import build_model
+
+
+def test_vlm_patch_stub_carveout():
+    cfg = get_config("internvl2-2b")
+    shape = INPUT_SHAPES["train_4k"]
+    b = S.train_batch_specs(cfg, shape)
+    # tokens shrink by n_patches; patch embeddings provided pre-computed
+    assert b["tokens"].shape == (256, 4096 - 256)
+    assert b["patches"].shape == (256, 256, 2048)
+    assert b["patches"].dtype == jnp.bfloat16
+
+
+def test_audio_frame_stub_carveout():
+    cfg = get_config("whisper-medium")
+    shape = INPUT_SHAPES["train_4k"]
+    b = S.train_batch_specs(cfg, shape)
+    assert b["frames"].shape == (256, 1500, 1024)
+    assert b["tokens"].shape == (256, 4096)
+
+
+def test_microbatch_major_layout():
+    cfg = get_config("yi-6b")
+    shape = INPUT_SHAPES["train_4k"]
+    b = S.train_batch_specs(cfg, shape, microbatches=8)
+    assert b["tokens"].shape == (8, 32, 4096)
+
+
+@pytest.mark.parametrize("arch,shape,window", [
+    ("mixtral-8x22b", "long_500k", 4096),      # native SWA
+    ("yi-6b", "long_500k", 8192),              # documented override
+    ("yi-6b", "prefill_32k", None),            # full attention elsewhere
+    ("xlstm-125m", "long_500k", None),         # recurrent: no window needed
+])
+def test_effective_window_policy(arch, shape, window):
+    cfg = get_config(arch)
+    assert S.effective_window(cfg, INPUT_SHAPES[shape]) == window
+
+
+@pytest.mark.parametrize("shape_name", sorted(INPUT_SHAPES))
+def test_decode_cache_capacity(shape_name):
+    """Windowed archs get ring caches of window size, not seq_len."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind != "decode":
+        pytest.skip("decode shapes only")
+    cfg = get_config("mixtral-8x22b")
+    model = build_model(cfg)
+    cache = S.cache_specs_struct(model, shape)
+    cap = cache["kv"].k.shape[2]
+    assert cap == min(shape.seq_len, cfg.sliding_window)

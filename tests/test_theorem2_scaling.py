@@ -1,0 +1,68 @@
+"""Theorem 2 validation: cost of privacy ~ (1/n^2) * sum 1/eps_i^2.
+
+These are the paper's central claims (eqs. 10-11, Figs. 4/5/10) run at
+test scale: CoP decreases with n and eps, and the fitted eq.-(11) bound
+dominates the observations while staying within an order of magnitude at
+the fit points (tightness).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Algo1Config, bound_asymptotic, fit_constants, make_problem, run_many
+from repro.core.cop import budget_sum
+from repro.data import owner_shards
+
+REG, SIGMA, T, RUNS = 1e-5, 2e-5, 400, 6
+
+
+def _cop(n_per_owner, eps, seed=0):
+    shards = owner_shards("lending", [n_per_owner] * 3, seed=seed)
+    prob, owners = make_problem(shards, reg=REG, theta_max=2.0)
+    cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA, epsilons=[eps] * 3)
+    tr = run_many(jax.random.PRNGKey(seed), prob, owners, cfg, RUNS)
+    noiseless = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                            epsilons=[eps] * 3, noiseless=True)
+    tr0 = run_many(jax.random.PRNGKey(seed), prob, owners, noiseless, 2)
+    # cost of privacy: excess relative fitness attributable to DP noise
+    return max(float(jnp.mean(tr.psi[:, -1]) - jnp.mean(tr0.psi[:, -1])), 1e-9)
+
+
+@pytest.fixture(scope="module")
+def cop_grid():
+    ns = [10_000, 40_000]
+    epss = [2.0, 8.0]
+    return {(n, e): _cop(n, e) for n in ns for e in epss}
+
+
+def test_cop_decreases_with_n(cop_grid):
+    for e in (2.0, 8.0):
+        assert cop_grid[(40_000, e)] < cop_grid[(10_000, e)]
+
+
+def test_cop_decreases_with_eps(cop_grid):
+    for n in (10_000, 40_000):
+        assert cop_grid[(n, 8.0)] < cop_grid[(n, 2.0)]
+
+
+def test_cop_scaling_rate(cop_grid):
+    # eq. (11): at fixed eps, CoP ~ 1/n^2 (second term dominates at small
+    # eps*n). 4x n should cut CoP by well over 4x in that regime.
+    ratio = cop_grid[(10_000, 2.0)] / cop_grid[(40_000, 2.0)]
+    assert ratio > 4.0
+
+
+def test_fitted_bound_dominates(cop_grid):
+    ns, ss, obs = [], [], []
+    for (n, e), v in cop_grid.items():
+        ns.append(3 * n)
+        ss.append(budget_sum([e] * 3))
+        obs.append(v)
+    c1, c2 = fit_constants(np.array(ns), np.array(ss), np.array(obs))
+    # inflate to a strict upper bound (the paper fits by eye, Figs. 4/5)
+    c1b, c2b = 2.0 * c1 + 1e-12, 2.0 * c2 + 1e-12
+    for (n, e), v in cop_grid.items():
+        bound = bound_asymptotic(3 * n, [e] * 3, c1b, c2b)
+        assert bound >= v * 0.99
+        assert bound < max(v * 50.0, 1e-6)     # and not vacuous
