@@ -1,65 +1,39 @@
 """Related-work comparator ([14]-style synchronous DP): asynchronous
 Algorithm 1 vs a synchronous all-owners-per-round DP baseline at equal
-total privacy budget, plus the beyond-paper capped-rounds composition."""
+total privacy budget, plus the beyond-paper capped-rounds composition —
+all three behind the same `Federation` session surface (the sync baseline
+is just strategy='sync')."""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import Algo1Config, make_problem, run_many
-from repro.core.linear import owner_grad, reg_grad
-from repro.core.privacy import laplace_scale_theorem1
 from repro.data import owner_shards
+from repro.federation import (Federation, FederationConfig, federate_problem,
+                              with_budgets)
 
 N, N_PER, T, RUNS, SIGMA = 5, 50_000, 800, 10, 2e-5
-
-
-def _sync_dp(key, prob, owners, eps, T, lr=0.4):
-    """Every round queries ALL owners (the synchronous pattern the paper
-    argues does not scale); same per-owner budget split over T rounds."""
-    p = prob.G.shape[0]
-    scales = jnp.asarray([laplace_scale_theorem1(o.xi, T, o.n, eps)
-                          for o in owners])
-    n_i = jnp.asarray([o.n for o in owners], jnp.float32)
-    A = jnp.stack([o.A for o in owners])
-    b = jnp.stack([o.b for o in owners])
-
-    def step(theta, k):
-        ks = jax.random.fold_in(key, k)
-        noise = scales[:, None] * jax.random.laplace(ks, (len(owners), p))
-        q = 2.0 * (jnp.einsum("npq,q->np", A, theta) - b) + noise
-        g = reg_grad(prob, theta) + jnp.einsum(
-            "n,np->p", n_i / prob.n_total, q)
-        theta = jnp.clip(theta - lr * g, -prob.theta_max, prob.theta_max)
-        return theta, None
-
-    theta, _ = jax.lax.scan(step, jnp.zeros(p), jnp.arange(T))
-    return theta
 
 
 def run(dataset: str = "lending"):
     rows = []
     shards = owner_shards(dataset, [N_PER] * N, seed=4, heterogeneity=0.0)
-    prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
-    from repro.core.linear import relative_fitness
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA)
+    prob, base_owners = federate_problem(shards, 1.0, reg=1e-5, theta_max=2.0)
     for eps in (1.0, 5.0):
+        owners = with_budgets(base_owners, eps)
         t0 = time.perf_counter()
-        cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA, epsilons=[eps] * N)
-        tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, RUNS)
+        tr = Federation(owners, cfg).run(
+            jax.random.PRNGKey(0), prob, n_runs=RUNS)
         psi_async = float(jnp.mean(tr.psi[:, -1]))
-        cfgc = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
-                           epsilons=[eps] * N,
-                           composition="per_owner_rounds")
-        trc = run_many(jax.random.PRNGKey(0), prob, owners, cfgc, RUNS)
+        trc = Federation(owners, cfg, mechanism="per_owner_rounds").run(
+            jax.random.PRNGKey(0), prob, n_runs=RUNS)
         psi_capped = float(jnp.mean(trc.psi[:, -1]))
-        psis = []
-        for r in range(RUNS):
-            th = _sync_dp(jax.random.PRNGKey(100 + r), prob, owners, eps, T)
-            psis.append(float(relative_fitness(prob, th)))
-        psi_sync = float(np.mean(psis))
+        trs = Federation(owners, cfg, strategy="sync").run_sync(
+            jax.random.PRNGKey(100), prob, lr=0.4, n_runs=RUNS)
+        psi_sync = float(jnp.mean(trs.psi[:, -1]))
         us = (time.perf_counter() - t0) * 1e6 / (3 * RUNS * T)
         rows.append((f"async_vs_sync/{dataset}/eps{eps}", us,
                      f"psi_async={psi_async:.4g};psi_sync={psi_sync:.4g};"

@@ -1,5 +1,6 @@
 """Figs. 6 & 7: the value of collaboration — private N-owner training
-vs the non-private isolated model of a single owner.
+vs the non-private isolated model of a single owner, measured through the
+`Federation` session surface.
 
 The paper's headline: with n_i = 10,000 records each, collaboration wins
 for >10 owners at eps >= 1 (fewer owners needed at higher budgets)."""
@@ -11,8 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Algo1Config, make_problem, relative_fitness, run_many
+from repro.core import relative_fitness
 from repro.data import owner_shards
+from repro.federation import (Federation, FederationConfig, federate_problem,
+                              with_budgets)
 
 N_PER, T, RUNS, SIGMA = 10_000, 1000, 12, 2e-5
 NS = (2, 5, 10, 25, 50)
@@ -21,10 +24,11 @@ EPS = (1.0, 2.5, 10.0)
 
 def run(dataset: str = "lending"):
     rows = []
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA)
     t0 = time.perf_counter()
     for N in NS:
         shards = owner_shards(dataset, [N_PER] * N, seed=2)
-        prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+        prob, owners = federate_problem(shards, 1.0, reg=1e-5, theta_max=2.0)
         # isolated, non-private exact model of owner 0
         X0, y0 = shards[0]
         G0, h0 = X0.T @ X0 / N_PER, X0.T @ y0 / N_PER
@@ -32,9 +36,8 @@ def run(dataset: str = "lending"):
         theta_iso = np.linalg.solve(G0 + 1e-5 * np.eye(p), h0)
         psi_iso = float(relative_fitness(prob, jnp.asarray(theta_iso)))
         for eps in EPS:
-            cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
-                              epsilons=[eps] * N)
-            tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, RUNS)
+            fed = Federation(with_budgets(owners, eps), cfg)
+            tr = fed.run(jax.random.PRNGKey(0), prob, n_runs=RUNS)
             psi = float(jnp.mean(tr.psi[:, -1]))
             wins = psi < psi_iso
             rows.append((f"collaboration/{dataset}/N{N}/eps{eps}",

@@ -1,15 +1,16 @@
 """Figs. 2 & 8: percentile statistics of relative fitness psi(theta_L,k)
-over 100 runs for three privacy budgets, lending + health datasets."""
+over 100 runs for three privacy budgets, lending + health datasets — one
+vmapped `Federation` session per (dataset, eps) cell."""
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Algo1Config, make_problem, run_many
 from repro.data import owner_shards
+from repro.federation import (Federation, FederationConfig, federate_problem,
+                              with_budgets)
 
 N_OWNERS, N_PER, T, RUNS = 3, 10_000, 1000, 100
 SIGMA = 2e-5
@@ -17,14 +18,15 @@ SIGMA = 2e-5
 
 def run(n_runs: int = RUNS):
     rows = []
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA)
     for dataset in ("lending", "health"):
-        shards = owner_shards(dataset, [N_PER] * N_OWNERS, seed=0, heterogeneity=0.0)
-        prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+        shards = owner_shards(dataset, [N_PER] * N_OWNERS, seed=0,
+                              heterogeneity=0.0)
+        prob, owners = federate_problem(shards, 1.0, reg=1e-5, theta_max=2.0)
         for eps in (3.0, 7.0, 10.0):
-            cfg = Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
-                              epsilons=[eps] * N_OWNERS)
+            fed = Federation(with_budgets(owners, eps), cfg)
             t0 = time.perf_counter()
-            tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, n_runs)
+            tr = fed.run(jax.random.PRNGKey(0), prob, n_runs=n_runs)
             dt = (time.perf_counter() - t0) * 1e6 / (n_runs * T)
             psi = np.asarray(tr.psi)
             for k in (10, 100, 500, T):

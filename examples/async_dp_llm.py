@@ -1,6 +1,7 @@
 """End-to-end deep-model driver: asynchronously DP-train a ~120M-param LM
 across 4 private data owners for a few hundred steps on CPU — the same
-AsyncDPTrainer code path the pod-scale dry-run lowers at 512 devices.
+bank-sharded code path the pod-scale dry-run lowers at 512 devices, driven
+through the unified `repro.federation.Federation` session.
 
     PYTHONPATH=src python examples/async_dp_llm.py [--steps 300] [--tiny]
     PYTHONPATH=src python examples/async_dp_llm.py --arch xlstm-125m
@@ -11,7 +12,8 @@ xlstm-125m's sLSTM vjp takes very long to compile on this 1-core CPU).
 
 Each step: uniform owner draw (Poisson clocks), Theorem-1 Laplace noise on
 the clipped owner gradient, the paper's inertia update (eqs. 5-7), owner
-bank write-back, privacy ledger accounting.
+bank write-back. Privacy accounting lives INSIDE the session's mechanism —
+budget-exhausted owners are refused by `fed.step` itself.
 """
 import argparse
 import time
@@ -27,10 +29,8 @@ DENSE_124M = ModelConfig(
     name="dense-124m", family="dense", n_layers=12, d_model=768,
     n_heads=12, n_kv_heads=4, d_ff=2048, vocab=50304,
     source="gpt2-small-like demo config")
-from repro.core.async_trainer import (AsyncDPConfig, init_state,
-                                      make_train_step)
-from repro.core.dp_sgd import PrivatizerConfig
-from repro.core.privacy import PrivacyAccountant
+from repro.federation import (DataOwner, Federation, FederationConfig,
+                              PrivatizerConfig)
 from repro.data import OwnerDataPipeline, synthetic_owner_shards
 from repro.models import build_model
 
@@ -47,8 +47,9 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05,
                     help="target effective owner-update rate; converted to "
-                         "the paper's lr_scale (recorded deviation — the "
-                         "paper's exact rho/T^2 rate is ~0 for deep nets)")
+                         "the paper's lr_scale by FederationConfig."
+                         "from_target_lr (recorded deviation — the paper's "
+                         "exact rho/T^2 rate is ~0 for deep nets)")
     args = ap.parse_args()
 
     cfg = DENSE_124M if args.arch == "dense-124m" else get_config(args.arch)
@@ -66,32 +67,30 @@ def main():
     shards = synthetic_owner_shards(N, 2048, args.seq, cfg.vocab, seed=0)
     pipe = OwnerDataPipeline(shards, args.batch, seed=0)
     horizon = max(args.steps, 100)
-    acct = PrivacyAccountant({i: args.eps for i in range(N)}, horizon)
-    sigma = 1e-2
-    # effective owner rate = lr_scale * N * rho / (T^2 sigma)  ==  --lr
-    lr_scale = args.lr * horizon ** 2 * sigma / N
-    acfg = AsyncDPConfig(
-        n_owners=N, horizon=horizon, rho=1.0, sigma=sigma,
-        epsilons=tuple([args.eps] * N), owner_sizes=tuple(pipe.owner_sizes),
-        xi=1.0, theta_max=100.0,
-        privatizer=PrivatizerConfig(xi=1.0, granularity="microbatch",
-                                    n_microbatches=2),
-        lr_scale=lr_scale)
+    fcfg = FederationConfig.from_target_lr(
+        args.lr, n_owners=N, horizon=horizon, sigma=1e-2, theta_max=100.0)
+    owners = [DataOwner(n=sz, epsilon=args.eps, xi=1.0)
+              for sz in pipe.owner_sizes]
+    fed = Federation(owners, fcfg)
 
     loss_fn = lambda p, b: model.loss(p, b)[0]
-    step = jax.jit(make_train_step(loss_fn, acfg), donate_argnums=0)
-    state = init_state(params, acfg)
+    fed.make_step(loss_fn,
+                  privatizer=PrivatizerConfig(xi=1.0,
+                                              granularity="microbatch",
+                                              n_microbatches=2),
+                  donate=True)
+    state = fed.init_state(params)
 
     it = iter(pipe)
     losses = []
     t0 = time.time()
     for k in range(1, args.steps + 1):
         owner, batch = next(it)
-        if not acct.record_response(owner):
-            continue
         batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
         key, sub = jax.random.split(key)
-        state, m = step(state, batch, jnp.int32(owner), sub)
+        state, m = fed.step(state, batch, owner, sub)
+        if m["refused"]:
+            continue
         if k % 25 == 0 or k == 1:
             l = float(loss_fn(state.theta_L, batch))
             losses.append(l)
@@ -99,9 +98,9 @@ def main():
                   f"clip={float(m['clip_frac']):.2f} "
                   f"[{(time.time()-t0)/k:.2f}s/step]")
     print("\nprivacy ledger:")
-    for i, s in acct.summary().items():
+    for i, s in fed.ledger().items():
         print(f"  owner {i}: eps={s['epsilon']} responses={s['responses']} "
-              f"spent={s['spent']:.3f}")
+              f"spent={s['spent']:.3f} refused={s['refused']}")
     if len(losses) >= 2:
         print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
               f"({'improved' if losses[-1] < losses[0] else 'flat'})")

@@ -1,7 +1,8 @@
 """Value-of-collaboration forecasting (the paper's Fig. 6 + Section 6
 data-market story): given pilot measurements, fit the Theorem-2 constants
 and PREDICT how many owners at which privacy budget make collaboration
-beat training alone — without anyone revealing their data.
+beat training alone — without anyone revealing their data. Every pilot
+measurement is one `Federation` session on the convex fast path.
 
     PYTHONPATH=src python examples/collaboration_forecast.py
 """
@@ -9,19 +10,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Algo1Config, fit_constants, make_problem,
-                        min_owners_for_benefit, relative_fitness, run_many)
+from repro.core import fit_constants, min_owners_for_benefit, relative_fitness
 from repro.core.cop import bound_asymptotic, budget_sum
 from repro.data import owner_shards
+from repro.federation import Federation, FederationConfig, federate_problem
 
 N_PILOT, N_I, T = 5, 10_000, 1000
 
 
 def measure(N, eps, seed=3, runs=8):
     shards = owner_shards("lending", [N_I] * N, seed=seed)
-    prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
-    cfg = Algo1Config(horizon=T, rho=1.0, sigma=2e-5, epsilons=[eps] * N)
-    tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, runs)
+    prob, owners = federate_problem(shards, eps, reg=1e-5, theta_max=2.0)
+    fed = Federation(owners, FederationConfig(horizon=T, rho=1.0, sigma=2e-5))
+    tr = fed.run(jax.random.PRNGKey(0), prob, n_runs=runs)
     return prob, shards, float(jnp.mean(tr.psi[:, -1]))
 
 

@@ -1,35 +1,35 @@
-"""Quickstart: Algorithm 1 on synthetic lending data (the paper's Fig. 2).
+"""Quickstart: the federation API on synthetic lending data (Fig. 2).
 
     PYTHONPATH=src python examples/quickstart.py
 
-Three banks, 100k records each, three privacy budgets. Prints the relative
-fitness trajectory and the Theorem-2 forecast — everything the paper's
-Section 5.1 does, at laptop scale.
+Three banks, 10k records each, three privacy budgets. One `Federation`
+session per budget runs the convex lax.scan fast path; then the Theorem-2
+forecast — everything the paper's Section 5.1 does, at laptop scale.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Algo1Config, bound_asymptotic, fit_constants,
-                        make_problem, run_many)
+from repro.core import bound_asymptotic, fit_constants
 from repro.core.cop import budget_sum
 from repro.data import owner_shards
+from repro.federation import (Federation, FederationConfig, federate_problem,
+                              with_budgets)
 
 
 def main():
     N, n_i, T = 3, 10_000, 1000
     shards = owner_shards("lending", [n_i] * N, seed=0, heterogeneity=0.0)
-    prob, owners = make_problem(shards, reg=1e-5, theta_max=2.0)
+    prob, owners = federate_problem(shards, 1.0, reg=1e-5, theta_max=2.0)
     print(f"{N} owners x {n_i} records; Xi = "
           f"{max(o.xi for o in owners):.1f}; theta* within "
           f"[{float(prob.theta_star.min()):.2f}, "
           f"{float(prob.theta_star.max()):.2f}]")
 
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=2 * prob.reg)
     obs = {}
     for eps in (3.0, 7.0, 10.0):
-        cfg = Algo1Config(horizon=T, rho=1.0, sigma=2 * prob.reg,
-                          epsilons=[eps] * N)
-        tr = run_many(jax.random.PRNGKey(0), prob, owners, cfg, 30)
+        fed = Federation(with_budgets(owners, eps), cfg)
+        tr = fed.run(jax.random.PRNGKey(0), prob, n_runs=30)
         psi = np.asarray(tr.psi)
         med = np.median(psi, axis=0)
         obs[eps] = float(np.mean(psi[:, -1]))

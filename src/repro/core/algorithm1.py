@@ -1,101 +1,9 @@
-"""Algorithm 1 (paper-faithful): asynchronous DP learning, convex problems.
+"""Deprecated shim — Algorithm 1's convex engine moved to
+``repro.federation.convex`` as part of the unified federation API. The
+session-level entrypoint is ``repro.federation.Federation`` (pluggable
+Mechanism + Schedule, ledger inside); this module keeps the old names
+importable and behaving exactly as before."""
+from repro.federation.convex import (Algo1Config, Algo1Trace, run_algorithm1,
+                                     run_many)
 
-Per iteration k = 1..T (eqs. 5-7):
-    i_k ~ Uniform{1..N}
-    theta_bar = (theta_L + theta_{i_k}) / 2                       (6)
-    Qbar     = Q_{i_k}(theta_bar) + Laplace(b_{i_k})              (4)
-    theta_{i_k} = Proj[ theta_bar - (N rho / (T^2 sigma)) *
-                        ( (1/2N) grad g(theta_bar) + (n_i/n) Qbar ) ]   (5)
-    theta_L  = Proj[ theta_bar - ((N-1) rho / (N T^2 sigma)) grad g ]   (7)
-
-Everything is a single jax.lax.scan; vmap over `run_algorithm1` gives the
-100-run percentile statistics of Figs. 2/8 in seconds on CPU.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import List, NamedTuple, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.clocks import uniform_schedule
-from repro.core.linear import (LinearProblem, Owner, owner_grad, reg_grad,
-                               relative_fitness)
-from repro.core.privacy import laplace_scale_theorem1
-
-
-@dataclasses.dataclass(frozen=True)
-class Algo1Config:
-    horizon: int                 # T
-    rho: float                   # step-size knob; alpha = rho / T^2
-    sigma: float                 # strong-convexity modulus of g
-    epsilons: Sequence[float]    # per-owner privacy budgets
-    composition: str = "paper"   # 'paper' | 'per_owner_rounds' (beyond-paper)
-    cap_slack: float = 2.0
-    noiseless: bool = False      # eps -> inf (for cost-of-privacy deltas)
-
-
-class Algo1Trace(NamedTuple):
-    theta_L: jax.Array           # (p,) final central model
-    psi: jax.Array               # (T,) relative fitness of theta_L over time
-    owners_seq: jax.Array        # (T,) i_k sequence
-    theta_bank: jax.Array        # (N, p) final owner copies
-
-
-def run_algorithm1(key, prob: LinearProblem, owners: List[Owner],
-                   cfg: Algo1Config) -> Algo1Trace:
-    N = len(owners)
-    p = prob.G.shape[0]
-    T = cfg.horizon
-    n = prob.n_total
-
-    A = jnp.stack([o.A for o in owners])              # (N,p,p)
-    b = jnp.stack([o.b for o in owners])              # (N,p)
-    n_i = jnp.asarray([o.n for o in owners], jnp.float32)
-    if cfg.composition == "per_owner_rounds":
-        from repro.core.privacy import capped_rounds
-        T_eff = capped_rounds(T, N, cfg.cap_slack)
-    else:
-        T_eff = T
-    scales = jnp.asarray([
-        0.0 if cfg.noiseless else
-        laplace_scale_theorem1(o.xi, T_eff, o.n, e)
-        for o, e in zip(owners, cfg.epsilons)], jnp.float32)
-
-    k_sched, k_noise = jax.random.split(key)
-    owners_seq = uniform_schedule(k_sched, N, T)
-    noise_keys = jax.random.split(k_noise, T)
-
-    lr_own = N * cfg.rho / (T ** 2 * cfg.sigma)
-    lr_L = (N - 1) * cfg.rho / (N * T ** 2 * cfg.sigma)
-    proj = lambda t: jnp.clip(t, -prob.theta_max, prob.theta_max)
-
-    def step(carry, xs):
-        theta_L, bank = carry
-        i_k, nk = xs
-        theta_i = bank[i_k]
-        theta_bar = 0.5 * (theta_L + theta_i)                       # (6)
-        q = 2.0 * (A[i_k] @ theta_bar - b[i_k])                     # (3)
-        w = scales[i_k] * jax.random.laplace(nk, (p,))              # Thm 1
-        qbar = q + w                                                # (4)
-        gg = reg_grad(prob, theta_bar)
-        new_i = proj(theta_bar - lr_own * (gg / (2 * N)
-                                           + (n_i[i_k] / n) * qbar))  # (5)
-        new_L = proj(theta_bar - lr_L * gg)                           # (7)
-        bank = bank.at[i_k].set(new_i)
-        psi = relative_fitness(prob, new_L)
-        return (new_L, bank), psi
-
-    theta0 = jnp.zeros((p,))
-    bank0 = jnp.zeros((N, p))
-    (theta_L, bank), psis = jax.lax.scan(step, (theta0, bank0),
-                                         (owners_seq, noise_keys))
-    return Algo1Trace(theta_L, psis, owners_seq, bank)
-
-
-def run_many(key, prob: LinearProblem, owners: List[Owner], cfg: Algo1Config,
-             n_runs: int) -> Algo1Trace:
-    """vmapped multi-seed runs (percentile statistics of Figs. 2/8)."""
-    keys = jax.random.split(key, n_runs)
-    return jax.vmap(lambda k: run_algorithm1(k, prob, owners, cfg))(keys)
+__all__ = ["Algo1Config", "Algo1Trace", "run_algorithm1", "run_many"]

@@ -1,43 +1,10 @@
-"""Poisson-clock owner scheduling (Section 3).
+"""Deprecated shim — Poisson-clock scheduling moved to
+``repro.federation.clocks`` as part of the unified federation API. Import
+from ``repro.federation`` instead; this module keeps the old names
+importable. The session-level pluggable schedules (uniform / Poisson /
+availability-trace) live in ``repro.federation.schedules``."""
+from repro.federation.clocks import (Schedule, owner_counts,
+                                     poisson_schedule, uniform_schedule)
 
-Each owner carries an independent rate-1 Poisson point process; whenever a
-clock ticks, that owner communicates with the learner. Symmetric rates make
-the communicating-owner sequence i_k i.i.d. uniform over owners — which is
-exactly line 3 of Algorithm 1. We provide both the continuous-time
-simulation (for communication-timing figures, Figs. 3/9) and the uniform
-shortcut used inside training loops.
-"""
-from __future__ import annotations
-
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-
-class Schedule(NamedTuple):
-    times: jax.Array    # (T,) fp32 — communication instants t_k
-    owners: jax.Array   # (T,) int32 — communicating owner i_k
-
-
-def poisson_schedule(key, n_owners: int, horizon: int, rate: float = 1.0
-                     ) -> Schedule:
-    """Continuous-time simulation: superpose N rate-`rate` processes.
-
-    The superposition is a rate-(N*rate) Poisson process whose marks are
-    i.i.d. uniform — we sample inter-arrival gaps and marks directly.
-    """
-    k1, k2 = jax.random.split(key)
-    gaps = jax.random.exponential(k1, (horizon,)) / (n_owners * rate)
-    times = jnp.cumsum(gaps)
-    owners = jax.random.randint(k2, (horizon,), 0, n_owners)
-    return Schedule(times, owners)
-
-
-def uniform_schedule(key, n_owners: int, horizon: int) -> jax.Array:
-    """The i.i.d.-uniform i_k sequence (equivalent in distribution)."""
-    return jax.random.randint(key, (horizon,), 0, n_owners)
-
-
-def owner_counts(owners: jax.Array, n_owners: int) -> jax.Array:
-    return jnp.bincount(owners, length=n_owners)
+__all__ = ["Schedule", "owner_counts", "poisson_schedule",
+           "uniform_schedule"]

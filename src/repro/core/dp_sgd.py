@@ -1,125 +1,8 @@
-"""Scalable gradient privatization: Xi-enforcement for non-convex models.
+"""Deprecated shim — gradient privatization moved to
+``repro.federation.dp_sgd`` as part of the unified federation API. Import
+from ``repro.federation`` instead; this module keeps the old names
+importable."""
+from repro.federation.dp_sgd import (LossFn, PrivatizerConfig, clip_tree,
+                                     private_grad)
 
-Assumption 2 (bounded per-record gradient) does not hold for transformers;
-we enforce it by clipping before averaging — the standard DP-SGD adaptation.
-Granularities:
-
-  'example'    — per-example grads via vmap(grad), clip each to xi, average.
-                 Exact Assumption-2 enforcement; memory O(batch * params):
-                 use for small models / smoke tests.
-  'microbatch' — lax.scan over microbatch groups; each *group* gradient is
-                 clipped to xi and groups are averaged. Memory O(params);
-                 required at 100B scale. DP adjacency unit becomes a GROUP
-                 (group-level DP) — the accountant records n = n_groups.
-
-The fused clip+noise hot-path has a Pallas kernel
-(`repro.kernels.dp_clip_noise`) — a single HBM pass instead of three.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Callable, Dict, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.privacy import laplace_noise_tree
-
-LossFn = Callable[[Any, Dict[str, jax.Array]], jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class PrivatizerConfig:
-    xi: float                       # clip norm (== Assumption-2 bound)
-    granularity: str = "microbatch"  # 'example' | 'microbatch'
-    n_microbatches: int = 8
-    mechanism: str = "laplace"      # 'laplace' | 'gaussian' (beyond-paper)
-    # pre_grouped: batch leaves arrive (G, B/G, ...) microbatch-major.
-    # §Perf iteration 11: the in-graph (B,)->(G,B/G) reshape of a
-    # batch-sharded tensor defeats GSPMD on the multi-pod mesh
-    # ("involuntary full rematerialization" -> pod axis replicated, train
-    # steps get NO multi-pod speedup). Grouping at the input layout fixes it.
-    pre_grouped: bool = False
-
-
-def _global_norm(tree) -> jax.Array:
-    leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
-
-
-def clip_tree(tree, max_norm: float):
-    norm = _global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree_util.tree_map(
-        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
-
-
-def _group_batch(batch, n_groups):
-    """Reshape every leaf (B, ...) -> (G, B/G, ...) for scan-over-groups."""
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape((n_groups, a.shape[0] // n_groups) + a.shape[1:]),
-        batch)
-
-
-def private_grad(loss_fn: LossFn, params, batch, key, *,
-                 cfg: PrivatizerConfig, noise_scale: float
-                 ) -> Tuple[Any, Dict[str, jax.Array]]:
-    """Clipped-average gradient + mechanism noise (the DP response, eq. 4).
-
-    noise_scale is the Theorem-1 scale for the *averaged* query; returns
-    (noisy grad pytree, metrics).
-    """
-    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
-    if cfg.pre_grouped and cfg.granularity == "microbatch":
-        B = cfg.n_microbatches * jax.tree_util.tree_leaves(batch)[0].shape[1]
-
-    if cfg.granularity == "example":
-        def one(ex):
-            ex1 = jax.tree_util.tree_map(lambda a: a[None], ex)
-            return jax.grad(lambda p: loss_fn(p, ex1))(params)
-        grads = jax.vmap(one)(batch)                 # leaves (B, ...)
-        norms = jax.vmap(lambda i: _global_norm(
-            jax.tree_util.tree_map(lambda l: l[i], grads)))(jnp.arange(B))
-        scale = jnp.minimum(1.0, cfg.xi / jnp.maximum(norms, 1e-12))
-        mean_grad = jax.tree_util.tree_map(
-            lambda l: jnp.mean(l.astype(jnp.float32)
-                               * scale.reshape((-1,) + (1,) * (l.ndim - 1)),
-                               axis=0), grads)
-        clip_frac = jnp.mean((norms > cfg.xi).astype(jnp.float32))
-        max_norm = jnp.max(norms)
-    elif cfg.granularity == "microbatch":
-        G = cfg.n_microbatches
-        assert B % G == 0, (B, G)
-
-        def body(carry, mb):
-            acc, nclip, mx = carry
-            g = jax.grad(lambda p: loss_fn(p, mb))(params)
-            g, norm = clip_tree(g, cfg.xi)
-            acc = jax.tree_util.tree_map(
-                lambda a, x: a + x.astype(jnp.float32), acc, g)
-            return (acc, nclip + (norm > cfg.xi), jnp.maximum(mx, norm)), None
-
-        zeros = jax.tree_util.tree_map(
-            lambda l: jnp.zeros(l.shape, jnp.float32), params)
-        xs = batch if cfg.pre_grouped else _group_batch(batch, G)
-        (acc, nclip, max_norm), _ = jax.lax.scan(
-            body, (zeros, jnp.zeros((), jnp.float32),
-                   jnp.zeros((), jnp.float32)), xs)
-        mean_grad = jax.tree_util.tree_map(lambda a: a / G, acc)
-        clip_frac = nclip / G
-    else:
-        raise ValueError(cfg.granularity)
-
-    if cfg.mechanism == "laplace":
-        noise = laplace_noise_tree(key, mean_grad, noise_scale)
-    elif cfg.mechanism == "gaussian":
-        leaves, treedef = jax.tree_util.tree_flatten(mean_grad)
-        ks = jax.random.split(key, len(leaves))
-        noise = jax.tree_util.tree_unflatten(
-            treedef, [noise_scale * jax.random.normal(k, l.shape, jnp.float32)
-                      for k, l in zip(ks, leaves)])
-    else:
-        raise ValueError(cfg.mechanism)
-    noisy = jax.tree_util.tree_map(lambda g, w: g + w, mean_grad, noise)
-    return noisy, {"clip_frac": clip_frac, "max_grad_norm": max_norm}
+__all__ = ["LossFn", "PrivatizerConfig", "clip_tree", "private_grad"]

@@ -1,0 +1,28 @@
+# The federation as a first-class API: DataOwners + FederationConfig +
+# pluggable Mechanism/Schedule -> one Federation session surface that
+# dispatches to the convex lax.scan fast path (LinearProblem) or the jitted
+# bank-sharded deep-model path, with the privacy ledger inside the
+# mechanism. repro.core re-exports the legacy names as shims.
+from repro.federation.clocks import (Schedule, owner_counts,
+                                     poisson_schedule, uniform_schedule)
+from repro.federation.config import FederationConfig
+from repro.federation.convex import (Algo1Config, Algo1Trace, SyncTrace,
+                                     run_algorithm1, run_many, scan_engine,
+                                     stack_gram, sync_scan_engine)
+from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
+                                   make_sync_dp_step, make_train_step)
+from repro.federation.dp_sgd import PrivatizerConfig, clip_tree, private_grad
+from repro.federation.linear import (LinearProblem, Owner, fitness,
+                                     make_problem, owner_grad,
+                                     record_grad_bound, relative_fitness)
+from repro.federation.mechanisms import (CappedRoundsMechanism, Mechanism,
+                                         PaperMechanism, StrictMechanism,
+                                         make_mechanism)
+from repro.federation.owners import DataOwner, federate_problem, with_budgets
+from repro.federation.privacy import (PrivacyAccountant, capped_rounds,
+                                      laplace_noise, laplace_noise_tree,
+                                      laplace_scale_theorem1)
+from repro.federation.schedules import (AvailabilityTraceSchedule,
+                                        PoissonSchedule, ScheduleProtocol,
+                                        UniformSchedule)
+from repro.federation.session import Federation

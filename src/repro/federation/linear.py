@@ -1,0 +1,98 @@
+"""The paper's convex learning problem (Section 5): ridge linear regression.
+
+Canonical home of the federation's convex primitives; ``repro.core.linear``
+is a compatibility shim over this module.
+
+    f(theta) = reg * ||theta||^2 + (1/n) sum_j ||y_j - theta^T x_j||^2
+
+Per-owner gradient queries (eq. 3) reduce to Gram-matrix form
+    Q_i(theta) = 2 (A_i theta - b_i),   A_i = X_i^T X_i / n_i,  b_i = X_i^T y_i / n_i
+so each Algorithm-1 iteration is O(p^2) regardless of n_i. The bound Xi
+(Assumption 2) is computed from public data bounds; because it is a true
+upper bound, per-record clipping never binds and the Gram shortcut is exact.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Owner(NamedTuple):
+    A: jax.Array        # (p, p) = X^T X / n
+    b: jax.Array        # (p,)   = X^T y / n
+    n: int
+    xi: float           # per-record gradient norm bound for this owner
+
+
+class LinearProblem(NamedTuple):
+    G: jax.Array        # (p, p) global X^T X / n
+    h: jax.Array        # (p,)   global X^T y / n
+    c: jax.Array        # ()     mean y^2
+    reg: float
+    theta_max: float
+    theta_star: jax.Array
+    f_star: jax.Array
+    n_total: int
+    xi: float           # global Xi = max_i xi_i
+
+
+def record_grad_bound(X: np.ndarray, y: np.ndarray, theta_max: float) -> float:
+    """Xi = sup_theta max_j ||grad l_j||_2 <= 2 max_j ||x_j|| (theta_max ||x_j||_1 + |y_j|)."""
+    xn2 = np.linalg.norm(X, axis=1)
+    xn1 = np.abs(X).sum(axis=1)
+    return float(2.0 * np.max(xn2 * (theta_max * xn1 + np.abs(y))))
+
+
+def fitness(prob: LinearProblem, theta: jax.Array) -> jax.Array:
+    quad = theta @ prob.G @ theta - 2.0 * theta @ prob.h + prob.c
+    return prob.reg * theta @ theta + quad
+
+
+def relative_fitness(prob: LinearProblem, theta: jax.Array) -> jax.Array:
+    """psi(theta) = f(theta)/f(theta*) - 1 >= 0 (Section 5)."""
+    return fitness(prob, theta) / prob.f_star - 1.0
+
+
+def owner_grad(owner: Owner, theta: jax.Array) -> jax.Array:
+    """Q_i(theta) of eq. (3) for the squared loss."""
+    return 2.0 * (owner.A @ theta - owner.b)
+
+
+def reg_grad(prob: LinearProblem, theta: jax.Array) -> jax.Array:
+    return 2.0 * prob.reg * theta
+
+
+def make_problem(shards: List[Tuple[np.ndarray, np.ndarray]], *,
+                 reg: float = 1e-5, theta_max: float = 10.0
+                 ) -> Tuple[LinearProblem, List[Owner]]:
+    """shards: [(X_i, y_i)] per owner."""
+    p = shards[0][0].shape[1]
+    owners = []
+    G = np.zeros((p, p))
+    h = np.zeros(p)
+    c = 0.0
+    n_total = sum(X.shape[0] for X, _ in shards)
+    for X, y in shards:
+        n_i = X.shape[0]
+        A = X.T @ X / n_i
+        b = X.T @ y / n_i
+        xi = record_grad_bound(X, y, theta_max)
+        owners.append(Owner(jnp.asarray(A), jnp.asarray(b), n_i, xi))
+        G += X.T @ X
+        h += X.T @ y
+        c += float(y @ y)
+    G, h, c = G / n_total, h / n_total, c / n_total
+    theta_star = np.linalg.solve(G + reg * np.eye(p), h)
+    assert np.max(np.abs(theta_star)) <= theta_max, (
+        "theta_max too small: unconstrained optimum outside Theta "
+        f"(max |theta*| = {np.max(np.abs(theta_star)):.3f})")
+    f_star = reg * theta_star @ theta_star + (
+        theta_star @ G @ theta_star - 2 * theta_star @ h + c)
+    prob = LinearProblem(jnp.asarray(G), jnp.asarray(h), jnp.asarray(c),
+                         reg, theta_max, jnp.asarray(theta_star),
+                         jnp.asarray(f_star), n_total,
+                         max(o.xi for o in owners))
+    return prob, owners

@@ -1,0 +1,188 @@
+"""Pluggable privacy Mechanisms — noise calibration WITH the ledger inside.
+
+A Mechanism owns both sides of Theorem 1: it calibrates every owner's
+Laplace scale AND ledgers every authorized response in an internal
+PrivacyAccountant, so accounting can never drift from the noise actually
+emitted (previously the accountant was wired in by hand in example
+scripts — or not at all). Budget-exhausted owners are refused at this
+layer; the Federation session turns a refusal into a no-op round.
+
+Variants:
+  'paper'            — Theorem 1's exact scale b_i = 2 Xi T / (n_i eps_i).
+  'strict'           — rigorous L1 slack: multiplies by sqrt(p)
+                       (||v||_1 <= sqrt(p) ||v||_2; see privacy.py's
+                       faithfulness note).
+  'per_owner_rounds' — beyond-paper composition: owners enforce a hard
+                       response cap R_i = ceil(slack*T/N), so the same
+                       eps_i is met with scale 2 Xi R_i/(n_i eps_i); the
+                       cap is actually ENFORCED here (refusal), unlike the
+                       legacy Algo1Config path which only rescaled noise.
+
+DP-FTRL-style tree aggregation or Gaussian/RDP composition (see PAPERS.md)
+slot in as further Mechanism implementations without touching the engines.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, Sequence, Union, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.federation.config import FederationConfig
+from repro.federation.owners import DataOwner
+from repro.federation.privacy import (PrivacyAccountant,
+                                      laplace_scale_theorem1)
+
+
+@runtime_checkable
+class Mechanism(Protocol):
+    """What the Federation session needs from a privacy mechanism."""
+
+    name: str
+
+    @property
+    def cap(self) -> Optional[int]:
+        """Per-owner response cap the engine must enforce (None = T)."""
+        ...
+
+    def scales(self, p: Optional[int] = None,
+               clip_norm: Optional[float] = None) -> jnp.ndarray:
+        """(N,) per-owner noise scales; p is the query dimension.
+
+        clip_norm overrides each owner's Xi_i as the sensitivity bound —
+        the deep path passes its privatizer's clip norm here, because the
+        ENFORCED norm is the true sensitivity (per-owner Xi_i would
+        under-noise any owner whose gradients are clipped to a larger
+        norm than its own bound)."""
+        ...
+
+    def authorize(self, owner_idx: int) -> bool:
+        """Ledger one response; False = refused (budget exhausted)."""
+        ...
+
+    def authorize_many(self, owner_idx: int, count: int) -> int:
+        """Bulk-ledger `count` responses, returning how many were granted
+        (the Federation session falls back to repeated authorize() if a
+        custom mechanism does not provide this)."""
+        ...
+
+    def ledger(self) -> Dict[int, Dict]:
+        """Per-owner accounting summary, including refusals."""
+        ...
+
+
+class _LedgeredMechanism:
+    """Shared ledger plumbing for the Theorem-1 mechanism family."""
+
+    name = "base"
+
+    def __init__(self, owners: Sequence[DataOwner], cfg: FederationConfig, *,
+                 composition: str = "paper", cap_slack: float = 2.0):
+        self.owners = list(owners)
+        self.cfg = cfg
+        self._accountant = PrivacyAccountant(
+            {i: o.epsilon for i, o in enumerate(self.owners)}, cfg.horizon,
+            composition=composition, cap_slack=cap_slack,
+            n_owners=len(self.owners))
+        self.refusals = {i: 0 for i in range(len(self.owners))}
+
+    @property
+    def cap(self) -> Optional[int]:
+        return self._accountant.ledgers[0].cap if self.owners else None
+
+    def effective_horizon(self) -> int:
+        c = self.cap
+        return c if c is not None else self.cfg.horizon
+
+    def _scale_one(self, owner: DataOwner, p: Optional[int],
+                   xi: float) -> float:
+        raise NotImplementedError
+
+    def scales(self, p: Optional[int] = None,
+               clip_norm: Optional[float] = None) -> jnp.ndarray:
+        return jnp.asarray([
+            0.0 if self.cfg.noiseless else
+            self._scale_one(o, p, clip_norm if clip_norm is not None
+                            else o.xi)
+            for o in self.owners], jnp.float32)
+
+    def authorize(self, owner_idx: int) -> bool:
+        ok = self._accountant.record_response(int(owner_idx))
+        if not ok:
+            self.refusals[int(owner_idx)] += 1
+        return ok
+
+    def authorize_many(self, owner_idx: int, count: int) -> int:
+        """Bulk-ledger `count` responses for one owner (order-free: how
+        many are granted depends only on the cap, not the sequence)."""
+        granted = self._accountant.record_responses(int(owner_idx),
+                                                    int(count))
+        self.refusals[int(owner_idx)] += int(count) - granted
+        return granted
+
+    def ledger(self) -> Dict[int, Dict]:
+        summary = self._accountant.summary()
+        for i, r in self.refusals.items():
+            summary[i]["refused"] = r
+        return summary
+
+
+class PaperMechanism(_LedgeredMechanism):
+    name = "paper"
+
+    def _scale_one(self, owner: DataOwner, p: Optional[int],
+                   xi: float) -> float:
+        return laplace_scale_theorem1(xi, self.cfg.horizon, owner.n,
+                                      owner.epsilon)
+
+
+class StrictMechanism(_LedgeredMechanism):
+    name = "strict"
+
+    def _scale_one(self, owner: DataOwner, p: Optional[int],
+                   xi: float) -> float:
+        if p is None:
+            raise ValueError("strict L1 slack needs the query dimension p")
+        return laplace_scale_theorem1(xi, self.cfg.horizon, owner.n,
+                                      owner.epsilon, p=p, l1_slack="strict")
+
+
+class CappedRoundsMechanism(_LedgeredMechanism):
+    name = "per_owner_rounds"
+
+    def __init__(self, owners, cfg, *, cap_slack: float = 2.0):
+        super().__init__(owners, cfg, composition="per_owner_rounds",
+                         cap_slack=cap_slack)
+
+    def _scale_one(self, owner: DataOwner, p: Optional[int],
+                   xi: float) -> float:
+        return laplace_scale_theorem1(xi, self.effective_horizon(),
+                                      owner.n, owner.epsilon)
+
+
+_MECHANISMS = {
+    "paper": PaperMechanism,
+    "strict": StrictMechanism,
+    "per_owner_rounds": CappedRoundsMechanism,
+}
+
+
+def make_mechanism(spec: Union[str, Mechanism],
+                   owners: Sequence[DataOwner], cfg: FederationConfig, *,
+                   cap_slack: Optional[float] = None) -> Mechanism:
+    if not isinstance(spec, str):
+        if cap_slack is not None:
+            raise ValueError("cap_slack cannot be applied to a "
+                             "pre-built mechanism instance")
+        return spec
+    try:
+        cls = _MECHANISMS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown mechanism {spec!r}; one of {sorted(_MECHANISMS)}")
+    if cls is CappedRoundsMechanism:
+        return cls(owners, cfg, cap_slack=2.0 if cap_slack is None
+                   else cap_slack)
+    if cap_slack is not None:
+        raise ValueError("cap_slack only applies to "
+                         "mechanism='per_owner_rounds'")
+    return cls(owners, cfg)

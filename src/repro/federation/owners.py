@@ -1,0 +1,74 @@
+"""DataOwner: one private participant of the federation.
+
+An owner is (n_i records, budget eps_i, gradient bound Xi_i) plus an
+optional convex Gram payload (A_i, b_i) that unlocks the O(p^2) lax.scan
+fast path. Deep-model owners carry no payload — their data arrives per-step
+as batches from the host-side pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation.linear import (LinearProblem, Owner, make_problem,
+                                     record_grad_bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataOwner:
+    n: int                       # records held (n_i)
+    epsilon: float               # privacy budget (eps_i)
+    xi: float                    # Assumption-2 gradient-norm bound (Xi_i)
+    gram: Optional[Owner] = None  # convex fast-path payload (A_i, b_i)
+
+    @classmethod
+    def from_arrays(cls, X: np.ndarray, y: np.ndarray, epsilon: float, *,
+                    theta_max: float) -> "DataOwner":
+        """Build a convex owner from its raw records (never leaves the
+        owner's side; only Gram aggregates enter the engine)."""
+        n_i = X.shape[0]
+        A = jnp.asarray(X.T @ X / n_i)
+        b = jnp.asarray(X.T @ y / n_i)
+        xi = record_grad_bound(X, y, theta_max)
+        return cls(n=n_i, epsilon=epsilon, xi=xi,
+                   gram=Owner(A, b, n_i, xi))
+
+    @classmethod
+    def from_gram(cls, owner: Owner, epsilon: float) -> "DataOwner":
+        return cls(n=owner.n, epsilon=epsilon, xi=owner.xi, gram=owner)
+
+
+def _broadcast_budgets(epsilons: Union[float, Sequence[float]],
+                       n_owners: int) -> List[float]:
+    if isinstance(epsilons, (int, float)):
+        return [float(epsilons)] * n_owners
+    epsilons = list(epsilons)
+    if len(epsilons) != n_owners:
+        raise ValueError(f"{len(epsilons)} budgets for {n_owners} owners")
+    return [float(e) for e in epsilons]
+
+
+def federate_problem(shards: List[Tuple[np.ndarray, np.ndarray]],
+                     epsilons: Union[float, Sequence[float]], *,
+                     reg: float = 1e-5, theta_max: float = 10.0
+                     ) -> Tuple[LinearProblem, List[DataOwner]]:
+    """shards [(X_i, y_i)] + per-owner budgets -> (LinearProblem, owners).
+
+    The convex analogue of handing each owner's records to its own
+    DataOwner: builds the global problem and the per-owner Gram payloads in
+    one pass (a scalar budget is broadcast to every owner).
+    """
+    prob, gram = make_problem(shards, reg=reg, theta_max=theta_max)
+    eps = _broadcast_budgets(epsilons, len(gram))
+    return prob, [DataOwner.from_gram(o, e) for o, e in zip(gram, eps)]
+
+
+def with_budgets(owners: Sequence[DataOwner],
+                 epsilons: Union[float, Sequence[float]]
+                 ) -> List[DataOwner]:
+    """Same owners, renegotiated budgets (Section 6's budget negotiation)."""
+    eps = _broadcast_budgets(epsilons, len(owners))
+    return [dataclasses.replace(o, epsilon=e) for o, e in zip(owners, eps)]

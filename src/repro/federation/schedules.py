@@ -1,0 +1,106 @@
+"""Pluggable owner Schedules — who communicates at tick k.
+
+A Schedule turns a PRNG key into the (T,) i_k owner sequence the engines
+scan over. All three variants are jit/vmap-safe, so multi-seed statistics
+stay one vmap away.
+
+  UniformSchedule           — line 3 of Algorithm 1: i.i.d. uniform draws
+                              (the distributional shortcut for symmetric
+                              rate-1 Poisson clocks).
+  PoissonSchedule           — the continuous-time simulation itself, for
+                              communication-timing studies (Figs. 3/9).
+  AvailabilityTraceSchedule — beyond-paper: geographically-scattered owners
+                              that only answer inside per-owner availability
+                              windows of a recurring period (e.g. business
+                              hours across timezones). Ticks still arrive
+                              from superposed Poisson clocks; the mark is
+                              drawn uniformly among the owners whose window
+                              contains that instant.
+
+DP-FTRL-style participation schedules (see PAPERS.md) are further
+implementations of the same one-method protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.federation.clocks import (Schedule, poisson_schedule,
+                                     uniform_schedule)
+
+
+@runtime_checkable
+class ScheduleProtocol(Protocol):
+    def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
+        """(T,) int32 owner sequence."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSchedule:
+    def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
+        return uniform_schedule(key, n_owners, horizon)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonSchedule:
+    rate: float = 1.0
+
+    def draw_with_times(self, key, n_owners: int, horizon: int) -> Schedule:
+        return poisson_schedule(key, n_owners, horizon, self.rate)
+
+    def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
+        return self.draw_with_times(key, n_owners, horizon).owners
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTraceSchedule:
+    """Per-owner availability windows over a recurring period.
+
+    windows[i] = (start, end) as fractions of `period` in [0, 1);
+    wrap-around windows (start > end) model e.g. an owner whose business
+    hours straddle the period boundary. If no owner is available at a tick
+    (a gap in the trace), every owner is considered available so the clock
+    keeps ticking — the learner never idles on an empty federation.
+    """
+    windows: Tuple[Tuple[float, float], ...]
+    period: float = 24.0
+    rate: float = 1.0
+
+    def draw_with_times(self, key, n_owners: int, horizon: int) -> Schedule:
+        if len(self.windows) != n_owners:
+            raise ValueError(
+                f"{len(self.windows)} windows for {n_owners} owners")
+        k_time, k_pick = jax.random.split(key)
+        times = poisson_schedule(k_time, n_owners, horizon, self.rate).times
+        inside = self.available(times, fallback=True)            # (T, N)
+        gumbel = jax.random.gumbel(k_pick, (horizon, n_owners))
+        owners = jnp.argmax(jnp.where(inside, gumbel, -jnp.inf),
+                            axis=1).astype(jnp.int32)
+        return Schedule(times, owners)
+
+    def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
+        return self.draw_with_times(key, n_owners, horizon).owners
+
+    def available(self, times: jax.Array,
+                  fallback: bool = False) -> jax.Array:
+        """(T, N) availability mask at the given instants.
+
+        fallback=True applies the same everyone-available escape hatch at
+        trace gaps that draw_with_times uses, so the mask matches what the
+        draw actually sampled from; fallback=False is the raw window
+        membership (for tests/plots)."""
+        phase = (times / self.period) % 1.0
+        starts = jnp.asarray([w[0] for w in self.windows])
+        ends = jnp.asarray([w[1] for w in self.windows])
+        inside = jnp.where(
+            starts <= ends,
+            (phase[:, None] >= starts) & (phase[:, None] < ends),
+            (phase[:, None] >= starts) | (phase[:, None] < ends))
+        if fallback:
+            inside = jnp.where(inside.any(axis=1, keepdims=True), inside,
+                               True)
+        return inside

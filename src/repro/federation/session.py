@@ -1,0 +1,237 @@
+"""Federation: the one session surface over every path in the repo.
+
+A Federation is the paper's central object — a learner interacting
+one-on-one with N private DataOwners under per-owner budgets and Theorem-1
+noise. One construction serves every workload:
+
+    fed = Federation(owners, FederationConfig(horizon=1000, sigma=2e-5))
+
+    # convex (LinearProblem, lax.scan fast path; Figs. 2/6/8)
+    trace = fed.run(key, prob)                  # ledgered single session
+    traces = fed.run(key, prob, n_runs=100)     # vmapped percentile stats
+
+    # deep models (jitted bank-sharded path)
+    step = fed.make_step(loss_fn)
+    state = fed.init_state(params)
+    state, metrics = fed.step(state, batch, owner_idx, key)
+
+    fed.ledger()                                # per-owner spend + refusals
+
+The Mechanism (noise calibration + internal PrivacyAccountant) and the
+Schedule (who communicates when) are pluggable; budget-exhausted owners are
+refused AT THIS LAYER — a refused round is a no-op for model state and is
+reported in the ledger, so accounting can never drift from the noise that
+was actually emitted. The synchronous all-owners-per-round DP baseline is
+the same surface with strategy="sync".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation.config import FederationConfig
+from repro.federation.convex import (Algo1Trace, SyncTrace, scan_engine,
+                                     stack_gram, sync_scan_engine)
+from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
+                                   make_sync_dp_step, make_train_step)
+from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.linear import LinearProblem
+from repro.federation.mechanisms import Mechanism, make_mechanism
+from repro.federation.owners import DataOwner
+from repro.federation.schedules import ScheduleProtocol, UniformSchedule
+
+_STRATEGIES = ("async", "sync")
+
+
+class Federation:
+    def __init__(self, owners: Sequence[DataOwner], config: FederationConfig,
+                 *, mechanism: Union[str, Mechanism] = "paper",
+                 schedule: Optional[ScheduleProtocol] = None,
+                 strategy: str = "async",
+                 cap_slack: Optional[float] = None):
+        if strategy not in _STRATEGIES:
+            raise ValueError(f"strategy must be one of {_STRATEGIES}")
+        self.owners = list(owners)
+        self.config = config
+        self.schedule = schedule if schedule is not None else UniformSchedule()
+        self.strategy = strategy
+        self.mechanism = make_mechanism(mechanism, self.owners, config,
+                                        cap_slack=cap_slack)
+        self._step_fn = None
+        self._ran = False
+
+    def _claim_session(self):
+        # The jitted engines start from fresh per-owner counters, so a
+        # second ledgered run would emit responses the cumulative ledger
+        # refuses — budget spend and accounting would silently drift apart.
+        if self._ran:
+            raise RuntimeError(
+                "this Federation already ran its ledgered session; use "
+                "n_runs for statistical replicas or build a new Federation "
+                "to renegotiate budgets")
+        self._ran = True
+
+    @property
+    def n_owners(self) -> int:
+        return len(self.owners)
+
+    def ledger(self) -> Dict[int, Dict]:
+        return self.mechanism.ledger()
+
+    def _authorize_many(self, owner_idx: int, count: int) -> int:
+        bulk = getattr(self.mechanism, "authorize_many", None)
+        if bulk is not None:
+            return bulk(owner_idx, count)
+        return sum(self.mechanism.authorize(owner_idx)
+                   for _ in range(count))
+
+    # ------------------------- convex fast path ---------------------------
+    def _gram(self):
+        if any(o.gram is None for o in self.owners):
+            raise ValueError("convex path needs Gram payloads on every "
+                             "owner (DataOwner.from_arrays/from_gram)")
+        return stack_gram([o.gram for o in self.owners])
+
+    def run(self, key, problem: LinearProblem,
+            n_runs: Optional[int] = None) -> Algo1Trace:
+        """Run the asynchronous session on a LinearProblem.
+
+        n_runs=None runs ONE ledgered session (every response — and
+        refusal — lands in .ledger()). n_runs=k vmaps k statistical
+        replicas for percentile figures; replicas model hypothetical
+        re-runs, so they are NOT ledgered.
+        """
+        if self.strategy != "async":
+            raise ValueError("run() is the async path; use run_sync()")
+        A, b, n_i = self._gram()
+        scales = self.mechanism.scales(p=problem.G.shape[0])
+        cfg = self.config
+
+        def run_one(k):
+            return scan_engine(k, problem, A, b, n_i, scales,
+                               horizon=cfg.horizon, rho=cfg.rho,
+                               sigma=cfg.sigma, lr_scale=cfg.lr_scale,
+                               draw=self.schedule.draw,
+                               cap=self.mechanism.cap)
+
+        if n_runs is None:
+            self._claim_session()
+            trace = run_one(key)
+            counts = np.bincount(np.asarray(trace.owners_seq),
+                                 minlength=self.n_owners)
+            for i, c in enumerate(counts):
+                self._authorize_many(i, int(c))
+            return trace
+        return jax.vmap(run_one)(jax.random.split(key, n_runs))
+
+    def run_sync(self, key, problem: LinearProblem,
+                 lr: float, n_runs: Optional[int] = None) -> SyncTrace:
+        """The synchronous all-owners-per-round baseline on the same
+        surface (strategy='sync' federations only)."""
+        if self.strategy != "sync":
+            raise ValueError("run_sync() needs strategy='sync'")
+        if self.mechanism.cap is not None:
+            raise ValueError(
+                "per_owner_rounds is an asynchronous composition: the sync "
+                "engine queries every owner all T rounds, so a capped noise "
+                "scale would violate the owners' budgets; use 'paper' or "
+                "'strict'")
+        A, b, n_i = self._gram()
+        scales = self.mechanism.scales(p=problem.G.shape[0])
+        cfg = self.config
+
+        def run_one(k):
+            return sync_scan_engine(k, problem, A, b, n_i, scales,
+                                    horizon=cfg.horizon, lr=lr)
+
+        if n_runs is None:
+            self._claim_session()
+            trace = run_one(key)
+            for i in range(self.n_owners):
+                self._authorize_many(i, cfg.horizon)
+            return trace
+        return jax.vmap(run_one)(jax.random.split(key, n_runs))
+
+    # -------------------------- deep-model path ---------------------------
+    def as_async_config(self, privatizer: Optional[PrivatizerConfig] = None
+                        ) -> AsyncDPConfig:
+        """The low-level engine config this session implies."""
+        xi = max(o.xi for o in self.owners)
+        cfg = self.config
+        return AsyncDPConfig(
+            n_owners=self.n_owners, horizon=cfg.horizon, rho=cfg.rho,
+            sigma=cfg.sigma,
+            epsilons=tuple(o.epsilon for o in self.owners),
+            owner_sizes=tuple(o.n for o in self.owners),
+            xi=xi, theta_max=cfg.theta_max,
+            privatizer=privatizer or PrivatizerConfig(xi=xi),
+            lr_scale=cfg.lr_scale)
+
+    def init_state(self, params) -> AsyncDPState:
+        return init_state(params, self.as_async_config())
+
+    def make_step(self, loss_fn, *,
+                  privatizer: Optional[PrivatizerConfig] = None,
+                  lr: Optional[float] = None, n_params: Optional[int] = None,
+                  jit: bool = True, donate: bool = False):
+        """Build (and cache for .step()) the jitted per-round function.
+
+        async: step(state, batch, owner_idx, key) -> (state, metrics)
+        sync:  step(params, batches, key[, weights]) -> params  (needs lr)
+        n_params feeds dimension-aware mechanisms (e.g. 'strict').
+
+        Deep-path sensitivity is the privatizer's ENFORCED clip norm, not
+        each owner's nominal Xi_i — clipping to a norm above an owner's
+        bound would otherwise under-noise that owner.
+        """
+        acfg = self.as_async_config(privatizer)
+        scales = self.mechanism.scales(p=n_params,
+                                       clip_norm=acfg.privatizer.xi)
+        if self.strategy == "sync":
+            if lr is None:
+                raise ValueError("sync strategy needs an explicit lr")
+            step = make_sync_dp_step(loss_fn, acfg, lr, scales=scales)
+        else:
+            step = make_train_step(loss_fn, acfg, scales=scales)
+        if jit:
+            step = jax.jit(step, donate_argnums=(0,) if donate else ())
+        self._step_fn = step
+        return step
+
+    def _require_step(self):
+        if self._step_fn is None:
+            raise RuntimeError("call make_step(loss_fn) before step()")
+        return self._step_fn
+
+    def step(self, state: AsyncDPState, batch, owner_idx, key
+             ) -> Tuple[AsyncDPState, Dict[str, Any]]:
+        """One ledgered asynchronous round. A budget-exhausted owner is
+        refused: model state (central AND bank) is returned untouched and
+        the refusal is recorded in the ledger."""
+        if self.strategy != "async":
+            raise ValueError("step() is the async path; use sync_round()")
+        step_fn = self._require_step()
+        i = int(owner_idx)
+        if not self.mechanism.authorize(i):
+            return state, {"refused": True, "owner": i}
+        new_state, metrics = step_fn(state, batch, jnp.int32(i), key)
+        metrics = dict(metrics)
+        metrics.update(refused=False, owner=i)
+        return new_state, metrics
+
+    def sync_round(self, params, batches, key):
+        """One ledgered synchronous round: every live owner contributes;
+        exhausted owners are zero-weighted out. A fully-refused round is a
+        no-op (the regularizer must not keep shrinking a model nobody is
+        training)."""
+        if self.strategy != "sync":
+            raise ValueError("sync_round() needs strategy='sync'")
+        step_fn = self._require_step()
+        live = [self.mechanism.authorize(i) for i in range(self.n_owners)]
+        if not any(live):
+            return params
+        return step_fn(params, batches, key,
+                       jnp.asarray(live, jnp.float32))

@@ -1,0 +1,320 @@
+"""The unified `repro.federation` API: equivalence with the legacy paths
+(bit-for-bit under fixed PRNG keys), shim imports, mechanisms, schedules,
+and budget exhaustion at the session layer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import owner_shards
+from repro.federation import (AvailabilityTraceSchedule, DataOwner,
+                              Federation, FederationConfig, PaperMechanism,
+                              PoissonSchedule, PrivatizerConfig,
+                              StrictMechanism, UniformSchedule,
+                              federate_problem, with_budgets)
+
+T, SIGMA = 200, 2e-5
+
+
+@pytest.fixture(scope="module")
+def convex():
+    shards = owner_shards("lending", [2_000] * 3, seed=0)
+    prob, owners = federate_problem(shards, 2.0, reg=1e-5, theta_max=2.0)
+    return prob, owners
+
+
+@pytest.fixture(scope="module")
+def toy_deep():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (3,)), "b": jnp.zeros(())}
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 3)),
+             "y": jax.random.normal(jax.random.PRNGKey(2), (4,))}
+    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batch, loss_fn, priv
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# ------------------------- equivalence: convex -----------------------------
+def test_convex_run_matches_run_algorithm1_exactly(convex):
+    from repro.core import Algo1Config, run_algorithm1
+    prob, owners = convex
+    key = jax.random.PRNGKey(7)
+    old = run_algorithm1(key, prob, [o.gram for o in owners],
+                         Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                                     epsilons=[o.epsilon for o in owners]))
+    fed = Federation(owners, FederationConfig(horizon=T, rho=1.0,
+                                              sigma=SIGMA))
+    new = fed.run(key, prob)
+    for a, b in zip(old, new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_convex_run_many_matches_exactly(convex):
+    from repro.core import Algo1Config, run_many
+    prob, owners = convex
+    key = jax.random.PRNGKey(3)
+    old = run_many(key, prob, [o.gram for o in owners],
+                   Algo1Config(horizon=T, rho=1.0, sigma=SIGMA,
+                               epsilons=[o.epsilon for o in owners]), 6)
+    new = Federation(owners, FederationConfig(horizon=T, rho=1.0,
+                                              sigma=SIGMA)).run(
+        key, prob, n_runs=6)
+    np.testing.assert_array_equal(np.asarray(old.psi), np.asarray(new.psi))
+    np.testing.assert_array_equal(np.asarray(old.theta_L),
+                                  np.asarray(new.theta_L))
+
+
+def test_convex_noiseless_flag(convex):
+    prob, owners = convex
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA, noiseless=True)
+    fed = Federation(owners, cfg)
+    assert float(jnp.max(fed.mechanism.scales(p=10))) == 0.0
+    tr = fed.run(jax.random.PRNGKey(0), prob)
+    assert float(tr.psi[-1]) < float(tr.psi[9])      # converges noiselessly
+
+
+# ------------------------- equivalence: deep -------------------------------
+def test_deep_step_matches_make_train_step_exactly(toy_deep):
+    from repro.core.async_trainer import (AsyncDPConfig, init_state,
+                                          make_train_step)
+    params, batch, loss_fn, priv = toy_deep
+    acfg = AsyncDPConfig(n_owners=3, horizon=50, rho=1.0, sigma=1e-2,
+                         epsilons=(1.0,) * 3, owner_sizes=(100,) * 3, xi=1.0,
+                         theta_max=10.0, privatizer=priv, lr_scale=5.0)
+    key = jax.random.PRNGKey(9)
+    old_step = jax.jit(make_train_step(loss_fn, acfg))
+    s1, m1 = old_step(init_state(params, acfg), batch, jnp.int32(1), key)
+
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0) for _ in range(3)]
+    fed = Federation(owners, FederationConfig(horizon=50, rho=1.0,
+                                              sigma=1e-2, theta_max=10.0,
+                                              lr_scale=5.0))
+    fed.make_step(loss_fn, privatizer=priv)
+    f1, m2 = fed.step(fed.init_state(params), batch, 1, key)
+    assert _trees_equal(s1, f1)
+    assert float(m1["grad_noise_scale"]) == float(m2["grad_noise_scale"])
+    assert m2["refused"] is False
+
+
+# ------------------------- shims ------------------------------------------
+def test_legacy_names_still_import():
+    from repro.core import Algo1Config, run_many            # noqa: F401
+    from repro.core.async_trainer import make_train_step    # noqa: F401
+    from repro.core.algorithm1 import Algo1Trace, run_algorithm1  # noqa
+    from repro.core.dp_sgd import clip_tree, private_grad   # noqa: F401
+    from repro.core.privacy import PrivacyAccountant        # noqa: F401
+    from repro.core.clocks import poisson_schedule          # noqa: F401
+    from repro.core.linear import make_problem              # noqa: F401
+    import repro.core.algorithm1 as old
+    import repro.federation.convex as new
+    assert old.run_algorithm1 is new.run_algorithm1         # thin, not a fork
+
+
+# ------------------------- budget exhaustion -------------------------------
+def test_exhausted_owner_refused_and_bank_untouched(toy_deep):
+    params, batch, loss_fn, priv = toy_deep
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0) for _ in range(2)]
+    fed = Federation(owners, FederationConfig(horizon=2, sigma=1e-2,
+                                              theta_max=10.0))
+    fed.make_step(loss_fn, privatizer=priv)
+    state = fed.init_state(params)
+    key = jax.random.PRNGKey(4)
+    for _ in range(2):                                  # spend owner 0's cap
+        state, m = fed.step(state, batch, 0, key)
+        assert m["refused"] is False
+    before = state
+    state, m = fed.step(state, batch, 0, key)
+    assert m["refused"] is True
+    assert _trees_equal(before, state)                  # bank + central frozen
+    led = fed.ledger()
+    assert led[0]["exhausted"] and led[0]["refused"] == 1
+    assert led[0]["responses"] == 2
+    assert led[1]["responses"] == 0 and led[1]["refused"] == 0
+    # an unexhausted owner still gets through
+    state, m = fed.step(state, batch, 1, key)
+    assert m["refused"] is False
+
+
+def test_session_is_one_shot(convex):
+    # a second ledgered run would emit responses the cumulative ledger
+    # refuses — the session refuses reuse instead of drifting
+    prob, owners = convex
+    fed = Federation(owners, FederationConfig(horizon=20, sigma=SIGMA))
+    fed.run(jax.random.PRNGKey(0), prob)
+    with pytest.raises(RuntimeError, match="already ran"):
+        fed.run(jax.random.PRNGKey(1), prob)
+    # statistical replicas stay available on a fresh session
+    fed2 = Federation(owners, FederationConfig(horizon=20, sigma=SIGMA))
+    fed2.run(jax.random.PRNGKey(0), prob, n_runs=2)
+    fed2.run(jax.random.PRNGKey(1), prob, n_runs=2)     # replicas reusable
+
+
+def test_convex_capped_mechanism_enforces_cap(convex):
+    prob, owners = convex
+    fed = Federation(owners, FederationConfig(horizon=T, rho=1.0,
+                                              sigma=SIGMA),
+                     mechanism="per_owner_rounds", cap_slack=0.5)
+    cap = fed.mechanism.cap
+    assert cap is not None and cap < T // len(owners)
+    tr = fed.run(jax.random.PRNGKey(0), prob)
+    led = fed.ledger()
+    counts = np.bincount(np.asarray(tr.owners_seq), minlength=len(owners))
+    for i, c in enumerate(counts):
+        assert led[i]["responses"] == min(int(c), cap)
+        assert led[i]["refused"] == max(0, int(c) - cap)
+
+
+# ------------------------- mechanisms & config -----------------------------
+def test_cap_slack_rejected_on_uncapped_mechanisms(convex):
+    _, owners = convex
+    cfg = FederationConfig(horizon=T, sigma=SIGMA)
+    with pytest.raises(ValueError, match="per_owner_rounds"):
+        Federation(owners, cfg, cap_slack=0.5)   # paper mechanism: no cap
+
+
+def test_strict_mechanism_sqrt_p_slack(convex):
+    _, owners = convex
+    cfg = FederationConfig(horizon=T, sigma=SIGMA)
+    paper = PaperMechanism(owners, cfg).scales()
+    strict = StrictMechanism(owners, cfg).scales(p=16)
+    np.testing.assert_allclose(np.asarray(strict),
+                               4.0 * np.asarray(paper), rtol=1e-6)
+    with pytest.raises(ValueError):
+        StrictMechanism(owners, cfg).scales()           # p is required
+
+
+def test_deep_scales_use_enforced_clip_norm_not_owner_xi(toy_deep):
+    # An owner whose gradients are clipped to a LARGER norm than its
+    # nominal Xi_i must get noise calibrated to the enforced norm —
+    # otherwise its real epsilon exceeds the ledgered one.
+    params, batch, loss_fn, priv = toy_deep
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0),
+              DataOwner(n=100, epsilon=1.0, xi=10.0)]
+    fed = Federation(owners, FederationConfig(horizon=50, sigma=1e-2,
+                                              theta_max=10.0))
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=10.0, granularity="example"))   # clips at 10.0, above owner 0's Xi
+    state, m = fed.step(fed.init_state(params), batch, 0, jax.random.PRNGKey(0))
+    assert float(m["grad_noise_scale"]) == pytest.approx(
+        2 * 10.0 * 50 / (100 * 1.0))       # Theorem 1 at the CLIP norm
+    np.testing.assert_allclose(
+        np.asarray(fed.mechanism.scales(clip_norm=10.0)),
+        np.asarray(PaperMechanism(
+            [dataclasses.replace(o, xi=10.0) for o in owners],
+            fed.config).scales()))
+
+
+def test_sync_rejects_capped_composition(convex):
+    prob, owners = convex
+    fed = Federation(owners, FederationConfig(horizon=100, sigma=SIGMA),
+                     mechanism="per_owner_rounds", strategy="sync")
+    with pytest.raises(ValueError, match="asynchronous composition"):
+        fed.run_sync(jax.random.PRNGKey(0), prob, lr=0.4)
+
+
+def test_availability_trace_gap_falls_back_to_everyone(rng_key):
+    # nobody is awake in phase [0.4, 1.0): draw falls back to everyone,
+    # and available(..., fallback=True) reports the mask actually sampled
+    sched = AvailabilityTraceSchedule(
+        windows=((0.0, 0.4), (0.1, 0.4)), period=3.0)
+    drawn = sched.draw_with_times(rng_key, 2, 2000)
+    owners = np.asarray(drawn.owners)
+    raw = np.asarray(sched.available(drawn.times))
+    eff = np.asarray(sched.available(drawn.times, fallback=True))
+    assert not raw.any(axis=1).all()                    # the trace has gaps
+    assert eff[np.arange(len(owners)), owners].all()    # draw matches mask
+    assert eff[~raw.any(axis=1)].all()                  # gaps -> everyone
+
+
+def test_from_target_lr_roundtrip():
+    cfg = FederationConfig.from_target_lr(0.05, n_owners=4, horizon=300,
+                                          sigma=1e-2)
+    assert cfg.effective_lr(4) == pytest.approx(0.05)
+    # matches the legacy inline conversion from async_dp_llm.py
+    assert cfg.lr_scale == pytest.approx(0.05 * 300 ** 2 * 1e-2 / 4)
+
+
+def test_with_budgets_and_broadcast(convex):
+    _, owners = convex
+    re = with_budgets(owners, 7.0)
+    assert all(o.epsilon == 7.0 for o in re)
+    assert [o.n for o in re] == [o.n for o in owners]
+    with pytest.raises(ValueError):
+        with_budgets(owners, [1.0, 2.0])                # wrong length
+
+
+# ------------------------- schedules ---------------------------------------
+def test_schedules_are_interchangeable(convex, rng_key):
+    prob, owners = convex
+    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA)
+    for sched in (UniformSchedule(), PoissonSchedule(),
+                  AvailabilityTraceSchedule(
+                      windows=((0.0, 0.5), (0.25, 0.75), (0.5, 1.0)))):
+        tr = Federation(owners, cfg, schedule=sched).run(rng_key, prob)
+        assert tr.owners_seq.shape == (T,)
+        assert 0 <= int(tr.owners_seq.min()) <= int(tr.owners_seq.max()) < 3
+        assert np.isfinite(np.asarray(tr.psi)).all()
+
+
+def test_availability_trace_respects_windows(rng_key):
+    sched = AvailabilityTraceSchedule(
+        windows=((0.0, 0.5), (0.5, 1.0)), period=10.0)
+    drawn = sched.draw_with_times(rng_key, 2, 4000)
+    avail = np.asarray(sched.available(drawn.times))
+    owners = np.asarray(drawn.owners)
+    assert avail[np.arange(len(owners)), owners].all()  # only awake owners
+    assert set(np.unique(owners)) == {0, 1}             # both get daylight
+
+
+def test_availability_trace_wraparound_window(rng_key):
+    # owner 0's "business hours" straddle the period boundary
+    sched = AvailabilityTraceSchedule(
+        windows=((0.75, 0.25), (0.25, 0.75)), period=5.0)
+    drawn = sched.draw_with_times(rng_key, 2, 2000)
+    avail = np.asarray(sched.available(drawn.times))
+    owners = np.asarray(drawn.owners)
+    assert avail[np.arange(len(owners)), owners].all()
+
+
+# ------------------------- sync strategy -----------------------------------
+def test_sync_strategy_same_surface(convex):
+    prob, owners = convex
+    fed = Federation(owners, FederationConfig(horizon=100, sigma=SIGMA),
+                     strategy="sync")
+    tr = fed.run_sync(jax.random.PRNGKey(0), prob, lr=0.4)
+    assert np.isfinite(np.asarray(tr.psi)).all()
+    assert fed.ledger()[0]["responses"] == 100           # every round answers
+    with pytest.raises(ValueError):
+        fed.run(jax.random.PRNGKey(0), prob)             # wrong strategy
+
+    vm = Federation(owners, FederationConfig(horizon=100, sigma=SIGMA),
+                    strategy="sync").run_sync(jax.random.PRNGKey(0), prob,
+                                              lr=0.4, n_runs=3)
+    assert vm.psi.shape == (3, 100)
+
+
+def test_sync_deep_weights_drop_exhausted_owner(toy_deep):
+    params, batch, loss_fn, priv = toy_deep
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0) for _ in range(2)]
+    fed = Federation(owners, FederationConfig(horizon=1, sigma=1e-2,
+                                              theta_max=10.0),
+                     strategy="sync")
+    fed.make_step(loss_fn, privatizer=priv, lr=1e-3)
+    batches = jax.tree_util.tree_map(lambda a: jnp.stack([a] * 2), batch)
+    key = jax.random.PRNGKey(0)
+    p1 = fed.sync_round(params, batches, key)            # both live
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(p1))
+    p2 = fed.sync_round(params, batches, key)            # both now exhausted
+    assert _trees_equal(p2, params)                      # no-op round
+    led = fed.ledger()
+    assert all(led[i]["refused"] == 1 for i in range(2))
+    with pytest.raises(ValueError, match="async path"):
+        fed.step(None, batch, 0, key)                    # wrong strategy

@@ -115,8 +115,9 @@ def test_checkpoint_roundtrip(tmp_path, rng_key):
 
 # ------------------------------ sharding rules -----------------------------
 def _abstract_mesh(shape, names):
+    # AbstractMesh takes ((name, size), ...) pairs, not separate tuples.
     from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, names)
+    return AbstractMesh(tuple(zip(names, shape)))
 
 
 @pytest.mark.parametrize("arch", sorted(all_configs()))
