@@ -2,7 +2,10 @@
 Algorithm 1 vs a synchronous all-owners-per-round DP baseline at equal
 total privacy budget, plus the beyond-paper capped-rounds composition —
 all three behind the same `Federation` session surface (the sync baseline
-is just strategy='sync')."""
+is just strategy='sync'). Also times the deep path's two async drivers
+head-to-head at 32 owners: the host-authorized per-round `step()` loop vs
+the fused `run_rounds` scan (device-resident ledger, K rounds/dispatch) —
+the workload and timing harness are bench_fused_rounds', imported."""
 from __future__ import annotations
 
 import time
@@ -10,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import bench_fused_rounds
 from repro.data import owner_shards
 from repro.federation import (Federation, FederationConfig, federate_problem,
                               with_budgets)
@@ -17,30 +21,47 @@ from repro.federation import (Federation, FederationConfig, federate_problem,
 N, N_PER, T, RUNS, SIGMA = 5, 50_000, 800, 10, 2e-5
 
 
-def run(dataset: str = "lending"):
+def _deep_driver_row(fast: bool):
+    """rounds/sec: fused run_rounds vs the per-round step() loop."""
+    k = 128 if fast else 512
+    dt_loop, dt_fused = bench_fused_rounds.measure(k)
+    return (f"async_vs_sync/deep_fused/owners{bench_fused_rounds.N_OWNERS}",
+            dt_fused / k * 1e6,
+            bench_fused_rounds.derived_row(dt_loop, dt_fused, k))
+
+
+def run(dataset: str = "lending", fast: bool = False):
     rows = []
+    t = 200 if fast else T
+    runs = 3 if fast else RUNS
     shards = owner_shards(dataset, [N_PER] * N, seed=4, heterogeneity=0.0)
-    cfg = FederationConfig(horizon=T, rho=1.0, sigma=SIGMA)
+    cfg = FederationConfig(horizon=t, rho=1.0, sigma=SIGMA)
     prob, base_owners = federate_problem(shards, 1.0, reg=1e-5, theta_max=2.0)
     for eps in (1.0, 5.0):
         owners = with_budgets(base_owners, eps)
         t0 = time.perf_counter()
         tr = Federation(owners, cfg).run(
-            jax.random.PRNGKey(0), prob, n_runs=RUNS)
+            jax.random.PRNGKey(0), prob, n_runs=runs)
         psi_async = float(jnp.mean(tr.psi[:, -1]))
         trc = Federation(owners, cfg, mechanism="per_owner_rounds").run(
-            jax.random.PRNGKey(0), prob, n_runs=RUNS)
+            jax.random.PRNGKey(0), prob, n_runs=runs)
         psi_capped = float(jnp.mean(trc.psi[:, -1]))
         trs = Federation(owners, cfg, strategy="sync").run_sync(
-            jax.random.PRNGKey(100), prob, lr=0.4, n_runs=RUNS)
+            jax.random.PRNGKey(100), prob, lr=0.4, n_runs=runs)
         psi_sync = float(jnp.mean(trs.psi[:, -1]))
-        us = (time.perf_counter() - t0) * 1e6 / (3 * RUNS * T)
+        us = (time.perf_counter() - t0) * 1e6 / (3 * runs * t)
         rows.append((f"async_vs_sync/{dataset}/eps{eps}", us,
                      f"psi_async={psi_async:.4g};psi_sync={psi_sync:.4g};"
                      f"psi_async_capped={psi_capped:.4g}"))
+    rows.append(_deep_driver_row(fast))
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
     from benchmarks.common import fmt_rows
-    print(fmt_rows(run()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced run counts (CI mode)")
+    args = ap.parse_args()
+    print(fmt_rows(run(fast=args.fast)))

@@ -1,0 +1,102 @@
+"""Fused multi-round driver vs the per-round step() loop.
+
+The deep path's wall-clock at small models is dispatch-bound: every
+`Federation.step()` is one host round-trip (Python authorize + jitted call)
+for microseconds of compute. `run_rounds` scans K rounds per dispatch with
+the privacy ledger resident on-device, so the dispatch cost amortizes
+K-fold. Reported: us/round for both drivers and the rounds/sec speedup at
+each rounds-per-dispatch K.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.federation import (DataOwner, Federation, FederationConfig,
+                              PrivatizerConfig)
+
+# Dispatch-bound regime: a model small enough that per-round compute is
+# microseconds, so the measured gap is the driver overhead itself.
+N_OWNERS, DIM, BATCH = 32, 16, 4
+
+
+def _setup(horizon):
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (DIM, DIM)) / DIM,
+              "b": jnp.zeros((DIM,))}
+    loss_fn = lambda p, b: jnp.mean(
+        (b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    owners = [DataOwner(n=10_000, epsilon=2.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              lr_scale=5.0))
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="microbatch", n_microbatches=1))
+    return fed, params
+
+
+def _batches(k):
+    return {"x": jax.random.normal(jax.random.PRNGKey(1), (k, BATCH, DIM)),
+            "y": jax.random.normal(jax.random.PRNGKey(2), (k, BATCH, DIM))}
+
+
+def _time_loop(fed, state, batches, owner_seq, keys):
+    k = owner_seq.shape[0]
+    t0 = time.perf_counter()
+    for i in range(k):
+        b = jax.tree_util.tree_map(lambda a: a[i], batches)
+        state, _ = fed.step(state, b, int(owner_seq[i]), keys[i])
+    jax.block_until_ready(state.theta_L)
+    return time.perf_counter() - t0
+
+
+def _time_fused(fed, state, batches, owner_seq, key):
+    t0 = time.perf_counter()
+    state, _ = fed.run_rounds(state, batches, owner_seq, key=key)
+    jax.block_until_ready(state.theta_L)
+    return time.perf_counter() - t0
+
+
+def measure(k: int):
+    """(dt_loop, dt_fused) seconds for K rounds under each driver (after a
+    warmup/compile pass each). Shared with bench_async_vs_sync's
+    deep-driver row so both suites measure the identical workload."""
+    horizon = 4 * k  # nobody exhausts: measure the granted hot path
+    batches = _batches(k)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    keys = jax.random.split(root, k)
+
+    fed_l, params = _setup(horizon)
+    state_l = fed_l.init_state(params)
+    _time_loop(fed_l, state_l, batches, owner_seq, keys)       # warmup
+    dt_loop = _time_loop(fed_l, state_l, batches, owner_seq, keys)
+
+    fed_f, _ = _setup(horizon)
+    state_f = fed_f.init_state(params)
+    _time_fused(fed_f, state_f, batches, owner_seq, root)      # warmup+jit
+    dt_fused = _time_fused(fed_f, state_f, batches, owner_seq, root)
+    return dt_loop, dt_fused
+
+
+def derived_row(dt_loop: float, dt_fused: float, k: int) -> str:
+    return (f"rounds_per_sec_fused={k / dt_fused:.0f};"
+            f"rounds_per_sec_step={k / dt_loop:.0f};"
+            f"speedup={dt_loop / dt_fused:.1f}x")
+
+
+def run(fast: bool = False):
+    rows = []
+    ks = (64, 256) if fast else (64, 256, 1024)
+    for k in ks:
+        dt_loop, dt_fused = measure(k)
+        rows.append((f"fused_rounds/owners{N_OWNERS}/K{k}",
+                     dt_fused / k * 1e6, derived_row(dt_loop, dt_fused, k)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

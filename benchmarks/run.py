@@ -9,6 +9,11 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     bench_collaboration -> Figs. 6 & 7 (value of collaboration)
     bench_async_vs_sync -> Sec. 2 comparison ([14]-style sync baseline)
                            + beyond-paper capped-rounds composition
+                           + deep-path fused vs per-round driver
+    bench_fused_rounds  -> beyond-paper: rounds/sec scaling of the fused
+                           multi-round driver (device-resident ledger)
+    bench_serving       -> beyond-paper: serving-path latency (no paper
+                           figure; guards the hybrid-serving example)
     bench_kernels       -> kernel-path microbenches (CPU)
     bench_roofline      -> §Roofline table from the dry-run artifacts
 """
@@ -28,8 +33,8 @@ def main() -> None:
 
     from benchmarks import (bench_async_vs_sync, bench_collaboration,
                             bench_comm_timing, bench_convergence,
-                            bench_cop_surface, bench_kernels, bench_roofline,
-                            bench_serving)
+                            bench_cop_surface, bench_fused_rounds,
+                            bench_kernels, bench_roofline, bench_serving)
 
     suites = {
         "comm_timing": bench_comm_timing.run,
@@ -40,7 +45,8 @@ def main() -> None:
         else bench_convergence.run,
         "cop_surface": bench_cop_surface.run,
         "collaboration": bench_collaboration.run,
-        "async_vs_sync": bench_async_vs_sync.run,
+        "async_vs_sync": lambda: bench_async_vs_sync.run(fast=args.fast),
+        "fused_rounds": lambda: bench_fused_rounds.run(fast=args.fast),
     }
     print("name,us_per_call,derived")
     failures = 0

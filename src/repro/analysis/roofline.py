@@ -15,7 +15,7 @@ module, so dividing by per-chip peaks is identical to the spec's
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip

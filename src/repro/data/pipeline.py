@@ -49,6 +49,19 @@ class OwnerDataPipeline:
             i = int(self.rng.integers(0, len(self.shards)))
             yield i, self.shards[i].next_batch(self.batch)
 
+    def batches_for(self, owner_seq: np.ndarray) -> Dict[str, np.ndarray]:
+        """Stack one batch per round for a (K,) owner sequence — the input
+        layout of the fused multi-round driver (`Federation.run_rounds`):
+        leaf k holds owner_seq[k]'s next microbatch, leaves become
+        (K, batch, ...). Each shard's cursor advances exactly as if the
+        rounds were fetched one-by-one."""
+        per_round = [self.shards[int(i)].next_batch(self.batch)
+                     for i in np.asarray(owner_seq)]
+        if not per_round:
+            raise ValueError("empty owner sequence")
+        return {k: np.stack([b[k] for b in per_round])
+                for k in per_round[0]}
+
 
 def synthetic_owner_shards(n_owners: int, records_per_owner: int,
                            seq_len: int, vocab: int, seed: int = 0

@@ -10,19 +10,23 @@ from repro.federation.convex import (Algo1Config, Algo1Trace, SyncTrace,
                                      run_algorithm1, run_many, scan_engine,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   make_sync_dp_step, make_train_step)
+                                   make_fused_rounds, make_sync_dp_step,
+                                   make_train_step)
 from repro.federation.dp_sgd import PrivatizerConfig, clip_tree, private_grad
 from repro.federation.linear import (LinearProblem, Owner, fitness,
                                      make_problem, owner_grad,
                                      record_grad_bound, relative_fitness)
-from repro.federation.mechanisms import (CappedRoundsMechanism, Mechanism,
+from repro.federation.mechanisms import (CappedRoundsMechanism,
+                                         LedgerDriftError, Mechanism,
                                          PaperMechanism, StrictMechanism,
                                          make_mechanism)
 from repro.federation.owners import DataOwner, federate_problem, with_budgets
-from repro.federation.privacy import (PrivacyAccountant, capped_rounds,
-                                      laplace_noise, laplace_noise_tree,
-                                      laplace_scale_theorem1)
+from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
+                                      capped_rounds, laplace_noise,
+                                      laplace_noise_tree,
+                                      laplace_scale_theorem1,
+                                      make_device_ledger)
 from repro.federation.schedules import (AvailabilityTraceSchedule,
                                         PoissonSchedule, ScheduleProtocol,
-                                        UniformSchedule)
+                                        UniformSchedule, as_owner_seq)
 from repro.federation.session import Federation

@@ -23,6 +23,18 @@ compatibility shim over this module. The session-level entrypoint is
 ``repro.federation.Federation``: it injects per-owner noise `scales` from a
 pluggable ``Mechanism`` (whose internal ledger refuses budget-exhausted
 owners before the step is ever called).
+
+Two drivers share the exact same round math (`_round_math`):
+
+  make_train_step   — one host-authorized round per dispatch (the
+                      mechanism's Python ledger decides refusal).
+  make_fused_rounds — K rounds per dispatch via lax.scan, with budget
+                      accounting device-resident (`AsyncDPState.ledger`, a
+                      privacy.DeviceLedger): authorization is an in-graph
+                      predicate and refusal is jnp.where masking, so
+                      thousands of asynchronous rounds run without a host
+                      round-trip. Bit-for-bit equal to the per-round loop
+                      under the same per-round keys.
 """
 from __future__ import annotations
 
@@ -34,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.federation.config import paper_rates
 from repro.federation.dp_sgd import PrivatizerConfig, private_grad
+from repro.federation.privacy import DeviceLedger, make_device_ledger
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,16 +62,27 @@ class AsyncDPConfig:
     privatizer: PrivatizerConfig = PrivatizerConfig(xi=1.0)
     lr_scale: float = 1.0              # 1.0 == paper-faithful
     init_bank_zero: bool = False       # paper inits all copies to 0
+    caps: Optional[Sequence[int]] = None  # per-owner response caps (None = T)
 
     @property
     def n_total(self) -> int:
         return sum(self.owner_sizes)
+
+    @property
+    def effective_caps(self) -> Tuple[int, ...]:
+        if self.caps is None:
+            return (self.horizon,) * self.n_owners
+        return tuple(self.caps)
 
 
 class AsyncDPState(NamedTuple):
     theta_L: Any                       # central model pytree
     bank: Any                          # same pytree, leaves (N, ...)
     step: jax.Array                    # () int32
+    # Device-resident budget counters (see privacy.DeviceLedger). The
+    # per-round step() leaves it untouched (host authorization); the fused
+    # multi-round driver spends/refuses in-graph.
+    ledger: Optional[DeviceLedger] = None
 
 
 def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
@@ -66,7 +90,8 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
     bank = jax.tree_util.tree_map(
         lambda l: jnp.broadcast_to(l[None], (cfg.n_owners,) + l.shape), params)
-    return AsyncDPState(params, bank, jnp.zeros((), jnp.int32))
+    return AsyncDPState(params, bank, jnp.zeros((), jnp.int32),
+                        make_device_ledger(cfg.effective_caps))
 
 
 def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
@@ -77,15 +102,13 @@ def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
         for n_i, e in zip(cfg.owner_sizes, cfg.epsilons)], jnp.float32)
 
 
-def make_train_step(loss_fn, cfg: AsyncDPConfig,
-                    scales: Optional[jax.Array] = None):
-    """Returns step(state, batch, owner_idx, key) -> (state, metrics).
+def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
+    """The paper's inertia round (eqs. 5-7), shared VERBATIM between the
+    per-round step and the fused multi-round driver so both trace the exact
+    same op sequence (bit-for-bit equivalence under fixed keys).
 
-    loss_fn(params, batch) -> scalar. batch holds ONE owner's microbatch.
-    `scales` overrides the per-owner Theorem-1 noise scales (the Federation
-    session passes its Mechanism's ledgered scales here); None recomputes
-    them from cfg exactly as before.
-    """
+    Returns compute(theta_L, bank, batch, owner_idx, key) ->
+    (new_L, new_i, theta_i, metrics)."""
     scales = _noise_scales(cfg) if scales is None else jnp.asarray(
         scales, jnp.float32)
     n_i = jnp.asarray(cfg.owner_sizes, jnp.float32)
@@ -97,14 +120,13 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
         return jax.tree_util.tree_map(
             lambda l: jnp.clip(l, -cfg.theta_max, cfg.theta_max), tree)
 
-    def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
-             ) -> Tuple[AsyncDPState, Dict]:
+    def compute(theta_L, bank, batch, owner_idx, key):
         theta_i = jax.tree_util.tree_map(
             lambda l: jax.lax.dynamic_index_in_dim(l, owner_idx, 0,
                                                    keepdims=False),
-            state.bank)
+            bank)
         theta_bar = jax.tree_util.tree_map(
-            lambda a, b: 0.5 * (a + b), state.theta_L, theta_i)       # (6)
+            lambda a, b: 0.5 * (a + b), theta_L, theta_i)             # (6)
 
         qbar, pm = private_grad(loss_fn, theta_bar, batch, key,
                                 cfg=cfg.privatizer,
@@ -121,17 +143,92 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
         new_L = project(jax.tree_util.tree_map(
             lambda tb, gg: tb - (lr_L * gg).astype(tb.dtype),
             theta_bar, g_reg))                                         # (7)
-
-        bank = jax.tree_util.tree_map(
-            lambda l, v: jax.lax.dynamic_update_index_in_dim(
-                l, v.astype(l.dtype), owner_idx, 0),
-            state.bank, new_i)
         metrics = {"clip_frac": pm["clip_frac"],
                    "max_grad_norm": pm["max_grad_norm"],
                    "grad_noise_scale": scales[owner_idx]}
-        return AsyncDPState(new_L, bank, state.step + 1), metrics
+        return new_L, new_i, theta_i, metrics
+
+    return compute
+
+
+def _write_bank(bank, value, owner_idx):
+    return jax.tree_util.tree_map(
+        lambda l, v: jax.lax.dynamic_update_index_in_dim(
+            l, v.astype(l.dtype), owner_idx, 0),
+        bank, value)
+
+
+def make_train_step(loss_fn, cfg: AsyncDPConfig,
+                    scales: Optional[jax.Array] = None):
+    """Returns step(state, batch, owner_idx, key) -> (state, metrics).
+
+    loss_fn(params, batch) -> scalar. batch holds ONE owner's microbatch.
+    `scales` overrides the per-owner Theorem-1 noise scales (the Federation
+    session passes its Mechanism's ledgered scales here); None recomputes
+    them from cfg exactly as before. The device ledger (if any) passes
+    through untouched — this path is host-authorized.
+    """
+    compute = _round_math(loss_fn, cfg, scales)
+
+    def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
+             ) -> Tuple[AsyncDPState, Dict]:
+        new_L, new_i, _, metrics = compute(state.theta_L, state.bank,
+                                           batch, owner_idx, key)
+        bank = _write_bank(state.bank, new_i, owner_idx)
+        return AsyncDPState(new_L, bank, state.step + 1,
+                            state.ledger), metrics
 
     return step
+
+
+def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
+                      scales: Optional[jax.Array] = None):
+    """Device-resident multi-round driver: K rounds in ONE dispatch.
+
+    Returns run(state, batches, owner_seq, keys) -> (state, metrics) where
+    every batch leaf carries a leading (K,) round axis, owner_seq is (K,)
+    int32, keys is (K,) PRNG keys, and metrics are stacked (K,) arrays.
+
+    Authorization is in-graph: round k is granted iff
+    `state.ledger.spent[i_k] < cap[i_k]` at that point of the scan. A
+    refused round is a no-op on model state EXACTLY as the host-authorized
+    per-round path — the computed update is discarded with `jnp.where`, the
+    owner's own copy is written back unchanged, and the refusal lands in
+    `ledger.refused` for `Federation.reconcile()` to fold into the host
+    accountant. Granted rounds run the exact same `_round_math` trace as
+    `make_train_step`, so a fused schedule reproduces the per-round loop
+    bit-for-bit under the same per-round keys.
+    """
+    compute = _round_math(loss_fn, cfg, scales)
+
+    def body(state: AsyncDPState, xs):
+        batch, owner_idx, key = xs
+        led = state.ledger
+        ok = led.authorized(owner_idx)
+        oki = ok.astype(jnp.int32)
+        new_L, new_i, theta_i, metrics = compute(state.theta_L, state.bank,
+                                                 batch, owner_idx, key)
+        theta_L = jax.tree_util.tree_map(
+            lambda nl, ol: jnp.where(ok, nl, ol), new_L, state.theta_L)
+        bank = _write_bank(
+            state.bank,
+            jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
+                                   new_i, theta_i),
+            owner_idx)
+        ledger = led.replace(spent=led.spent.at[owner_idx].add(oki),
+                             refused=led.refused.at[owner_idx].add(1 - oki))
+        metrics = dict(metrics)
+        metrics.update(refused=~ok, owner=owner_idx)
+        return AsyncDPState(theta_L, bank, state.step + oki, ledger), metrics
+
+    def run(state: AsyncDPState, batches, owner_seq, keys):
+        if state.ledger is None:
+            raise ValueError(
+                "fused rounds need a device ledger on the state; build the "
+                "state with init_state / Federation.init_state")
+        return jax.lax.scan(body, state, (batches, owner_seq, keys))
+
+    return run
 
 
 def make_sync_dp_step(loss_fn, cfg: AsyncDPConfig, lr: float,

@@ -43,6 +43,15 @@ class PrivatizerConfig:
     # ("involuntary full rematerialization" -> pod axis replicated, train
     # steps get NO multi-pod speedup). Grouping at the input layout fixes it.
     pre_grouped: bool = False
+    # fused_kernel: route the clip-norm reduction and the final
+    # mean+Laplace-add through the Pallas dp_clip_noise kernels (one HBM
+    # pass instead of three), traced-scalar-safe so it fuses into the
+    # multi-round scan body. The in-kernel inverse-CDF Laplace draw is a
+    # different lawful sample than jax.random.laplace, so this backend is
+    # statistically (not bitwise) equivalent to the jnp one. laplace only.
+    fused_kernel: bool = False
+    kernel_block_rows: int = 256
+    kernel_interpret: bool = True   # CPU-dev default; set False on TPU
 
 
 def _global_norm(tree) -> jax.Array:
@@ -98,7 +107,16 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
         def body(carry, mb):
             acc, nclip, mx = carry
             g = jax.grad(lambda p: loss_fn(p, mb))(params)
-            g, norm = clip_tree(g, cfg.xi)
+            if cfg.fused_kernel:
+                from repro.kernels.dp_clip_noise.ops import fused_sqnorm_tree
+                norm = jnp.sqrt(fused_sqnorm_tree(
+                    g, block_rows=cfg.kernel_block_rows,
+                    interpret=cfg.kernel_interpret))
+                s = jnp.minimum(1.0, cfg.xi / jnp.maximum(norm, 1e-12))
+                g = jax.tree_util.tree_map(
+                    lambda l: (l.astype(jnp.float32) * s).astype(l.dtype), g)
+            else:
+                g, norm = clip_tree(g, cfg.xi)
             acc = jax.tree_util.tree_map(
                 lambda a, x: a + x.astype(jnp.float32), acc, g)
             return (acc, nclip + (norm > cfg.xi), jnp.maximum(mx, norm)), None
@@ -113,6 +131,19 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
         clip_frac = nclip / G
     else:
         raise ValueError(cfg.granularity)
+
+    if cfg.fused_kernel:
+        if cfg.mechanism != "laplace":
+            raise ValueError("fused_kernel implements the laplace mechanism")
+        from repro.kernels.dp_clip_noise.ops import fused_scale_noise_tree
+        # One pass: the group-mean divide (gain=1/G) and the Laplace add
+        # fuse with the write-out; for 'example' the mean is already taken.
+        src, gain = ((acc, 1.0 / G) if cfg.granularity == "microbatch"
+                     else (mean_grad, 1.0))
+        noisy = fused_scale_noise_tree(src, key, gain, noise_scale,
+                                       block_rows=cfg.kernel_block_rows,
+                                       interpret=cfg.kernel_interpret)
+        return noisy, {"clip_frac": clip_frac, "max_grad_norm": max_norm}
 
     if cfg.mechanism == "laplace":
         noise = laplace_noise_tree(key, mean_grad, noise_scale)

@@ -26,11 +26,21 @@ from __future__ import annotations
 from typing import Dict, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.federation.config import FederationConfig
 from repro.federation.owners import DataOwner
-from repro.federation.privacy import (PrivacyAccountant,
+from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
                                       laplace_scale_theorem1)
+
+
+class LedgerDriftError(RuntimeError):
+    """The device ledger and the host accountant disagree.
+
+    Raised by reconcile() instead of silently absorbing the mismatch —
+    accounting must never drift from the noise that was actually emitted.
+    Typical cause: host-authorized step() rounds interleaved with fused
+    run_rounds() on a stale state ledger."""
 
 
 @runtime_checkable
@@ -69,6 +79,16 @@ class Mechanism(Protocol):
         """Per-owner accounting summary, including refusals."""
         ...
 
+    def device_ledger(self) -> DeviceLedger:
+        """Snapshot the accountant as device-resident counters (the fused
+        multi-round driver authorizes in-graph against these)."""
+        ...
+
+    def reconcile(self, ledger: DeviceLedger) -> Dict[int, Dict]:
+        """Fold a device ledger back into the host accountant bit-exactly;
+        returns the updated ledger() summary."""
+        ...
+
 
 class _LedgeredMechanism:
     """Shared ledger plumbing for the Theorem-1 mechanism family."""
@@ -84,6 +104,12 @@ class _LedgeredMechanism:
             composition=composition, cap_slack=cap_slack,
             n_owners=len(self.owners))
         self.refusals = {i: 0 for i in range(len(self.owners))}
+        # Device-ledger counters already folded back by reconcile() —
+        # deltas against these make reconcile idempotent over chunked
+        # run_rounds()/reconcile() cycles.
+        self._folded_spent = {i: 0 for i in range(len(self.owners))}
+        self._folded_refused = {i: 0 for i in range(len(self.owners))}
+        self._snapshot_sid = 0       # generation of the live device ledger
 
     @property
     def cap(self) -> Optional[int]:
@@ -124,6 +150,74 @@ class _LedgeredMechanism:
         for i, r in self.refusals.items():
             summary[i]["refused"] = r
         return summary
+
+    def device_ledger(self) -> DeviceLedger:
+        """Snapshot the accountant as a DeviceLedger for in-graph
+        authorization. Both counters are seeded from the CURRENT host
+        totals (spent from responses, refused from ledgered refusals) and
+        the snapshot gets a fresh generation id: only the LATEST
+        snapshot's state chain may reconcile — a superseded state raises
+        instead of folding divergent counters against this baseline."""
+        self._snapshot_sid += 1
+        led = self._accountant.device_ledger()
+        led = led.replace(
+            refused=jnp.asarray([self.refusals[i]
+                                 for i in range(len(self.owners))],
+                                jnp.int32),
+            sid=self._snapshot_sid)
+        for i in range(len(self.owners)):
+            self._folded_spent[i] = self._accountant.ledgers[i].responses
+            self._folded_refused[i] = self.refusals[i]
+        return led
+
+    def reconcile(self, ledger: DeviceLedger) -> Dict[int, Dict]:
+        """Fold the device counters back into the host accountant.
+
+        The delta since the last fold is ledgered via the same
+        record_responses() path host authorization uses; any disagreement
+        (a device grant the host cap refuses, or counters that went
+        backwards) raises LedgerDriftError rather than being absorbed.
+        Validate-then-apply: a raised drift error leaves the accountant
+        untouched, so callers can recover from a consistent state."""
+        spent = np.asarray(ledger.spent)
+        refused = np.asarray(ledger.refused)
+        if spent.shape != (len(self.owners),):
+            raise ValueError(f"device ledger for {spent.shape[0]} owners, "
+                             f"mechanism has {len(self.owners)}")
+        if ledger.sid != self._snapshot_sid:
+            raise LedgerDriftError(
+                f"state ledger is from snapshot {ledger.sid}, but the live "
+                f"snapshot is {self._snapshot_sid}: a newer init_state()/"
+                "device_ledger() superseded this state, so its counters "
+                "cannot be folded against the current baseline (two live "
+                "device states per session would under-count spend)")
+        deltas = []
+        for i in range(len(self.owners)):
+            d_spent = int(spent[i]) - self._folded_spent[i]
+            d_refused = int(refused[i]) - self._folded_refused[i]
+            if d_spent < 0 or d_refused < 0:
+                raise LedgerDriftError(
+                    f"owner {i}: device counters went backwards "
+                    f"(spent {spent[i]} < folded {self._folded_spent[i]} or "
+                    f"refused {refused[i]} < {self._folded_refused[i]}); "
+                    "was the state ledger rebuilt without device_ledger()?")
+            led_i = self._accountant.ledgers[i]
+            room = led_i.effective_horizon - led_i.responses
+            if d_spent > room:
+                raise LedgerDriftError(
+                    f"owner {i}: device granted {d_spent} responses but the "
+                    f"host cap admits only {max(0, room)} — the state ledger "
+                    "is stale (host-authorized rounds ran after the "
+                    "snapshot); take a fresh Federation.init_state / "
+                    "device_ledger()")
+            deltas.append((d_spent, d_refused))
+        for i, (d_spent, d_refused) in enumerate(deltas):
+            granted = self._accountant.record_responses(i, d_spent)
+            assert granted == d_spent, (i, granted, d_spent)
+            self.refusals[i] += d_refused
+            self._folded_spent[i] = int(spent[i])
+            self._folded_refused[i] = int(refused[i])
+        return self.ledger()
 
 
 class PaperMechanism(_LedgeredMechanism):

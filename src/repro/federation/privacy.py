@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +68,69 @@ def laplace_noise_tree(key, tree, scale: float):
     noisy = [laplace_noise(k, l.shape, scale, jnp.float32).astype(l.dtype)
              for k, l in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+@jax.tree_util.register_pytree_node_class
+class DeviceLedger:
+    """Device-resident mirror of the PrivacyAccountant's counters.
+
+    Lives INSIDE the deep-path training state so authorization becomes an
+    in-graph predicate (`spent[i] < cap[i]`) instead of a host round-trip:
+    the fused multi-round driver scans thousands of rounds per dispatch and
+    masks refused rounds with `jnp.where`. `spent` counts responses GRANTED
+    in-graph (seeded from the host accountant at session init); `refused`
+    counts in-graph refusals. The host accountant stays the single source
+    of truth — `Federation.reconcile()` folds these counters back into it
+    bit-exactly after every fused run.
+
+    `sid` is the snapshot generation, carried as STATIC pytree metadata
+    (not a traced leaf): every `device_ledger()` snapshot gets a fresh id,
+    and reconcile only accepts the lineage of the latest snapshot — two
+    live states from one session would otherwise fold divergent counter
+    chains against a single baseline and silently under-count spend.
+    """
+
+    def __init__(self, spent: jax.Array, cap: jax.Array, refused: jax.Array,
+                 sid: int = 0):
+        self.spent = spent      # (N,) int32 — responses granted so far
+        self.cap = cap          # (N,) int32 — per-owner response cap (T_eff)
+        self.refused = refused  # (N,) int32 — in-graph refusals
+        self.sid = sid
+
+    def tree_flatten(self):
+        return (self.spent, self.cap, self.refused), self.sid
+
+    @classmethod
+    def tree_unflatten(cls, sid, children):
+        return cls(*children, sid=sid)
+
+    def replace(self, **kw) -> "DeviceLedger":
+        fields = {"spent": self.spent, "cap": self.cap,
+                  "refused": self.refused, "sid": self.sid}
+        fields.update(kw)
+        return DeviceLedger(**fields)
+
+    def remaining(self) -> jax.Array:
+        return jnp.maximum(self.cap - self.spent, 0)
+
+    def authorized(self, owner_idx: jax.Array) -> jax.Array:
+        """() bool — may `owner_idx` answer one more query?"""
+        return self.spent[owner_idx] < self.cap[owner_idx]
+
+
+def make_device_ledger(caps: Sequence[int],
+                       spent: Optional[Sequence[int]] = None,
+                       refused: Optional[Sequence[int]] = None,
+                       sid: int = 0) -> DeviceLedger:
+    caps = jnp.asarray(caps, jnp.int32)
+    # distinct buffers per field — donated states may not alias leaves
+    return DeviceLedger(
+        spent=(jnp.zeros(caps.shape, jnp.int32) if spent is None
+               else jnp.asarray(spent, jnp.int32)),
+        cap=caps,
+        refused=(jnp.zeros(caps.shape, jnp.int32) if refused is None
+                 else jnp.asarray(refused, jnp.int32)),
+        sid=sid)
 
 
 @dataclasses.dataclass
@@ -131,3 +194,16 @@ class PrivacyAccountant:
         return {i: {"epsilon": l.epsilon, "responses": l.responses,
                     "spent": l.spent, "exhausted": l.exhausted}
                 for i, l in self.ledgers.items()}
+
+    def device_ledger(self) -> DeviceLedger:
+        """Snapshot the counters as a DeviceLedger (owners 0..N-1 dense).
+
+        `spent` is seeded from the CURRENT response counts, so a device
+        ledger created mid-session refuses exactly where the host would.
+        """
+        idx = sorted(self.ledgers)
+        if idx != list(range(len(idx))):
+            raise ValueError("device ledger needs dense owner ids 0..N-1")
+        return make_device_ledger(
+            caps=[self.ledgers[i].effective_horizon for i in idx],
+            spent=[self.ledgers[i].responses for i in idx])

@@ -4,6 +4,13 @@ A Schedule turns a PRNG key into the (T,) i_k owner sequence the engines
 scan over. All three variants are jit/vmap-safe, so multi-seed statistics
 stay one vmap away.
 
+Device contract: `draw` MUST return a device-resident (T,) int32 array
+from jax ops only (no host materialization) — the fused multi-round driver
+(`Federation.run_rounds`) feeds it straight into a `lax.scan`, so a
+schedule that round-trips through numpy would reintroduce the per-round
+host sync the driver exists to remove. `as_owner_seq` is the shared
+normalizer that enforces the dtype/shape of hand-rolled sequences.
+
   UniformSchedule           — line 3 of Algorithm 1: i.i.d. uniform draws
                               (the distributional shortcut for symmetric
                               rate-1 Poisson clocks).
@@ -35,14 +42,31 @@ from repro.federation.clocks import (Schedule, poisson_schedule,
 @runtime_checkable
 class ScheduleProtocol(Protocol):
     def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
-        """(T,) int32 owner sequence."""
+        """(T,) int32 DEVICE owner sequence (jit-safe jax ops only)."""
         ...
+
+
+def as_owner_seq(seq, n_owners: int) -> jax.Array:
+    """Normalize an owner sequence to the engines' (T,) int32 device form,
+    validating statically-known bounds (host lists fail fast here instead
+    of as an out-of-range gather inside the scan)."""
+    seq = jnp.asarray(seq)
+    if seq.ndim != 1:
+        raise ValueError(f"owner sequence must be 1-D, got {seq.shape}")
+    if not jnp.issubdtype(seq.dtype, jnp.integer):
+        raise ValueError(f"owner sequence must be integer, got {seq.dtype}")
+    if isinstance(seq, jax.core.Tracer):
+        return seq.astype(jnp.int32)
+    if seq.size and (int(seq.min()) < 0 or int(seq.max()) >= n_owners):
+        raise ValueError(
+            f"owner sequence out of range for {n_owners} owners")
+    return seq.astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
 class UniformSchedule:
     def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
-        return uniform_schedule(key, n_owners, horizon)
+        return uniform_schedule(key, n_owners, horizon).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +77,8 @@ class PoissonSchedule:
         return poisson_schedule(key, n_owners, horizon, self.rate)
 
     def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
-        return self.draw_with_times(key, n_owners, horizon).owners
+        return self.draw_with_times(key, n_owners, horizon).owners.astype(
+            jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,14 +15,21 @@ noise. One construction serves every workload:
     state = fed.init_state(params)
     state, metrics = fed.step(state, batch, owner_idx, key)
 
+    # fused driver: K rounds per dispatch, accounting on-device
+    state, metrics = fed.run_rounds(state, batches, owner_seq, key)
+    fed.reconcile(state)                        # fold device ledger -> host
+
     fed.ledger()                                # per-owner spend + refusals
 
 The Mechanism (noise calibration + internal PrivacyAccountant) and the
 Schedule (who communicates when) are pluggable; budget-exhausted owners are
 refused AT THIS LAYER — a refused round is a no-op for model state and is
 reported in the ledger, so accounting can never drift from the noise that
-was actually emitted. The synchronous all-owners-per-round DP baseline is
-the same surface with strategy="sync".
+was actually emitted. The fused `run_rounds` driver makes the same
+refusal decision on-device (DeviceLedger masking inside the scan) and
+`reconcile()` folds it back into the host accountant bit-exactly. The
+synchronous all-owners-per-round DP baseline is the same surface with
+strategy="sync".
 """
 from __future__ import annotations
 
@@ -36,12 +43,14 @@ from repro.federation.config import FederationConfig
 from repro.federation.convex import (Algo1Trace, SyncTrace, scan_engine,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   make_sync_dp_step, make_train_step)
+                                   make_fused_rounds, make_sync_dp_step,
+                                   make_train_step)
 from repro.federation.dp_sgd import PrivatizerConfig
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
 from repro.federation.owners import DataOwner
-from repro.federation.schedules import ScheduleProtocol, UniformSchedule
+from repro.federation.schedules import (ScheduleProtocol, UniformSchedule,
+                                        as_owner_seq)
 
 _STRATEGIES = ("async", "sync")
 
@@ -61,6 +70,7 @@ class Federation:
         self.mechanism = make_mechanism(mechanism, self.owners, config,
                                         cap_slack=cap_slack)
         self._step_fn = None
+        self._fused_fn = None
         self._ran = False
 
     def _claim_session(self):
@@ -161,6 +171,7 @@ class Federation:
         """The low-level engine config this session implies."""
         xi = max(o.xi for o in self.owners)
         cfg = self.config
+        cap = self.mechanism.cap
         return AsyncDPConfig(
             n_owners=self.n_owners, horizon=cfg.horizon, rho=cfg.rho,
             sigma=cfg.sigma,
@@ -168,10 +179,17 @@ class Federation:
             owner_sizes=tuple(o.n for o in self.owners),
             xi=xi, theta_max=cfg.theta_max,
             privatizer=privatizer or PrivatizerConfig(xi=xi),
-            lr_scale=cfg.lr_scale)
+            lr_scale=cfg.lr_scale,
+            caps=None if cap is None else (cap,) * self.n_owners)
 
     def init_state(self, params) -> AsyncDPState:
-        return init_state(params, self.as_async_config())
+        state = init_state(params, self.as_async_config())
+        snapshot = getattr(self.mechanism, "device_ledger", None)
+        if snapshot is not None:
+            # In-graph authorization must refuse exactly where the host
+            # would: seed the device counters from the live accountant.
+            state = state._replace(ledger=snapshot())
+        return state
 
     def make_step(self, loss_fn, *,
                   privatizer: Optional[PrivatizerConfig] = None,
@@ -196,6 +214,9 @@ class Federation:
             step = make_sync_dp_step(loss_fn, acfg, lr, scales=scales)
         else:
             step = make_train_step(loss_fn, acfg, scales=scales)
+            fused = make_fused_rounds(loss_fn, acfg, scales=scales)
+            self._fused_fn = jax.jit(
+                fused, donate_argnums=(0,) if donate else ()) if jit else fused
         if jit:
             step = jax.jit(step, donate_argnums=(0,) if donate else ())
         self._step_fn = step
@@ -221,6 +242,57 @@ class Federation:
         metrics = dict(metrics)
         metrics.update(refused=False, owner=i)
         return new_state, metrics
+
+    def run_rounds(self, state: AsyncDPState, batches, owner_seq=None,
+                   key=None) -> Tuple[AsyncDPState, Dict[str, Any]]:
+        """K asynchronous rounds in ONE dispatch (lax.scan over the jitted
+        deep step, authorization decided on-device).
+
+        `batches` leaves carry a leading (K,) round axis (round k consumes
+        owner i_k's microbatch). `owner_seq` is a (K,) int32 device
+        sequence; None draws it from the pluggable Schedule. Per-round keys
+        are `jax.random.split(key, K)` — drive a per-round `step()` loop
+        with the same split and it reproduces this call bit-for-bit
+        (params, bank, and granted-round metrics).
+
+        Budget-exhausted owners are refused IN-GRAPH via the state's
+        DeviceLedger: a refused round is a no-op on model state exactly as
+        in `step()`. Refusals accumulate on-device; call `reconcile(state)`
+        afterwards to fold them into `ledger()` — until then the host
+        accountant lags the device by the rounds of this call.
+
+        metrics are stacked (K,) arrays (refused mask, owner, clip_frac,
+        max_grad_norm, grad_noise_scale).
+        """
+        if self.strategy != "async":
+            raise ValueError("run_rounds() is the async path")
+        if key is None:
+            raise ValueError("run_rounds needs an explicit PRNG key")
+        self._require_step()
+        if self._fused_fn is None:
+            raise RuntimeError("call make_step(loss_fn) before run_rounds()")
+        if owner_seq is None:
+            # schedule-drawn: in-range by construction, stays on-device
+            # (as_owner_seq's bounds check would force a host sync here)
+            k_sched, key = jax.random.split(key)
+            k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            owner_seq = self.schedule.draw(k_sched, self.n_owners,
+                                           k).astype(jnp.int32)
+        else:
+            owner_seq = as_owner_seq(owner_seq, self.n_owners)
+        keys = jax.random.split(key, owner_seq.shape[0])
+        return self._fused_fn(state, batches, owner_seq, keys)
+
+    def reconcile(self, state: AsyncDPState) -> Dict[int, Dict]:
+        """Fold the state's device ledger back into the host accountant
+        (bit-exact, drift raises) and return the updated ledger()."""
+        if state.ledger is None:
+            raise ValueError("state carries no device ledger")
+        fold = getattr(self.mechanism, "reconcile", None)
+        if fold is None:
+            raise NotImplementedError(
+                f"mechanism {self.mechanism.name!r} has no reconcile()")
+        return fold(state.ledger)
 
     def sync_round(self, params, batches, key):
         """One ledgered synchronous round: every live owner contributes;

@@ -16,8 +16,6 @@ Layout: gradients are flattened and padded to (rows, 1024) fp32 blocks of
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

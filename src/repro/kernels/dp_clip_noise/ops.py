@@ -52,3 +52,42 @@ def dp_privatize_tree(grads: Any, key, xi: float, noise_scale: float, *,
                            interpret=interpret)
         out.append(y.reshape(-1)[:n].reshape(leaf.shape).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------- traced-scalar entry points for in-graph (scan-body) use ---------
+# dp_privatize_tree above is a jit boundary of its own; the deep path's
+# fused multi-round driver instead calls these INSIDE its lax.scan body,
+# where xi / noise_scale arrive as traced per-owner scalars gathered from
+# the mechanism's scales array.
+
+def fused_sqnorm_tree(tree: Any, *, block_rows: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Global squared L2 norm of a pytree via the blockwise Pallas pass."""
+    return sum(sqnorm_2d(_pack(l, block_rows)[0], block_rows=block_rows,
+                         interpret=interpret)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def fused_scale_noise_tree(tree: Any, key, gain, noise_scale, *,
+                           block_rows: int = 256,
+                           interpret: bool = False) -> Any:
+    """leaf * gain + Laplace(noise_scale) in ONE fused HBM pass per leaf.
+
+    `gain` and `noise_scale` may be traced scalars (e.g. a clip factor and
+    an owner-indexed Theorem-1 scale). The Laplace bits come from
+    jax.random (threefry), converted in-kernel by inverse CDF — note this
+    is a DIFFERENT lawful draw than jax.random.laplace, so the jnp and
+    fused backends are statistically, not bitwise, equivalent.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    packed = [_pack(l, block_rows) for l in leaves]
+    cs = jnp.asarray(gain, jnp.float32).reshape(1, 1)
+    ns = jnp.asarray(noise_scale, jnp.float32).reshape(1, 1)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (p, n), leaf, k in zip(packed, leaves, keys):
+        bits = jax.random.bits(k, p.shape, jnp.uint32)
+        y = scale_noise_2d(p, bits, cs, ns, block_rows=block_rows,
+                           interpret=interpret)
+        out.append(y.reshape(-1)[:n].reshape(leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -13,8 +13,6 @@ fp32 ~ 0.5 MB at Q=256, N=P=64).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

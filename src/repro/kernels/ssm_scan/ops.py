@@ -6,7 +6,7 @@ implementations (`use_pallas` plumbed from the model when running on TPU).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.hlo_cost import analyze as hlo_analyze
 from repro.analysis.roofline import model_flops, roofline_terms

@@ -11,7 +11,6 @@ KV caches:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

@@ -12,7 +12,7 @@ the l_inf projection. It is stateless — the *inertia* lives in the trainer
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

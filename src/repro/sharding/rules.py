@@ -11,7 +11,7 @@ Strategy (single-pod mesh (data=16, model=16); multi-pod adds pod=2):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

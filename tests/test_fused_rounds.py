@@ -1,0 +1,309 @@
+"""Device-resident privacy ledger + fused multi-round driver.
+
+The contract under test: `Federation.run_rounds` (one lax.scan dispatch,
+authorization via in-graph DeviceLedger masking) reproduces the
+host-authorized per-round `step()` loop BIT-FOR-BIT under the same
+per-round PRNG keys — params, bank, granted-round metrics, refusal
+pattern, and the reconciled host ledger.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federation import (DataOwner, DeviceLedger, Federation,
+                              FederationConfig, LedgerDriftError,
+                              PrivatizerConfig, as_owner_seq,
+                              make_device_ledger)
+
+N_OWNERS, K = 32, 160
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6,)), "b": jnp.zeros(())}
+    batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
+               "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4))}
+    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batches, loss_fn, priv
+
+
+def _make_fed(loss_fn, priv, horizon=3, **kw):
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              theta_max=10.0, lr_scale=5.0),
+                     **kw)
+    fed.make_step(loss_fn, privatizer=priv)
+    return fed
+
+
+# --------------- refusal semantics at scale (32 owners) --------------------
+def test_run_rounds_matches_step_loop_bit_exact_with_exhaustion(toy):
+    # horizon=3 and K=160 uniform draws over 32 owners: most owners blow
+    # through their cap MID-schedule, so granted and refused rounds
+    # interleave heavily — exactly the regime where device and host
+    # accounting could drift.
+    params, batches, loss_fn, priv = toy
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    keys = jax.random.split(root, K)
+
+    fed_loop = _make_fed(loss_fn, priv)
+    s_loop = fed_loop.init_state(params)
+    refused_loop, metrics_loop = [], []
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_loop, m = fed_loop.step(s_loop, b, int(owner_seq[k]), keys[k])
+        refused_loop.append(m["refused"])
+        if not m["refused"]:
+            metrics_loop.append((k, float(m["clip_frac"]),
+                                 float(m["grad_noise_scale"])))
+
+    fed_fused = _make_fed(loss_fn, priv)
+    s_fused = fed_fused.init_state(params)
+    s_fused, ms = fed_fused.run_rounds(s_fused, batches, owner_seq, key=root)
+
+    refused_fused = np.asarray(ms["refused"])
+    assert refused_loop == [bool(r) for r in refused_fused]
+    assert sum(refused_loop) > 20                  # exhaustion really bites
+    assert not all(refused_loop[-N_OWNERS:])       # ...but not a dead tail
+
+    # model state: bit-for-bit
+    assert _leaves_equal(s_loop.theta_L, s_fused.theta_L)
+    assert _leaves_equal(s_loop.bank, s_fused.bank)
+    assert int(s_loop.step) == int(s_fused.step) == K - sum(refused_loop)
+
+    # granted-round metrics: bit-for-bit
+    for k, cf, gs in metrics_loop:
+        assert float(ms["clip_frac"][k]) == cf
+        assert float(ms["grad_noise_scale"][k]) == gs
+
+    # reconciled ledger == the host-authorized loop's ledger, exactly
+    assert fed_fused.reconcile(s_fused) == fed_loop.ledger()
+
+    # and the device ledger agrees with both
+    spent = np.asarray(s_fused.ledger.spent)
+    refused_dev = np.asarray(s_fused.ledger.refused)
+    counts = np.bincount(np.asarray(owner_seq), minlength=N_OWNERS)
+    np.testing.assert_array_equal(spent, np.minimum(counts, 3))
+    np.testing.assert_array_equal(refused_dev, np.maximum(counts - 3, 0))
+
+
+def test_chunked_run_rounds_reconcile_is_idempotent(toy):
+    # reconcile after every chunk must fold only the delta — same final
+    # ledger as one reconcile at the end of an equivalent single schedule.
+    params, batches, loss_fn, priv = toy
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    keys = jax.random.split(jax.random.PRNGKey(4), K)
+
+    fed = _make_fed(loss_fn, priv)
+    state = fed.init_state(params)
+    half = K // 2
+    for sl in (slice(0, half), slice(half, K)):
+        state, _ = fed.run_rounds(
+            state, jax.tree_util.tree_map(lambda a: a[sl], batches),
+            owner_seq[sl], key=jax.random.PRNGKey(10))
+        led = fed.reconcile(state)
+    led_again = fed.reconcile(state)               # no new rounds: no-op
+    assert led == led_again
+    total = sum(led[i]["responses"] + led[i]["refused"]
+                for i in range(N_OWNERS))
+    assert total == K
+    del keys
+
+
+def test_reconcile_detects_stale_ledger_drift(toy):
+    # Host-authorized rounds taken AFTER the device snapshot make the
+    # device cap check permissive; reconcile must refuse to absorb the
+    # overspend instead of silently double-booking epsilon.
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=2)
+    state = fed.init_state(params)
+    b0 = jax.tree_util.tree_map(lambda a: a[0], batches)
+    key = jax.random.PRNGKey(0)
+    for _ in range(2):                     # spend owner 0's cap host-side
+        state, m = fed.step(state, b0, 0, key)
+        assert not m["refused"]
+    # stale device ledger still thinks owner 0 has budget -> grants 2 more
+    seq = jnp.zeros(2, jnp.int32)
+    state, ms = fed.run_rounds(
+        state, jax.tree_util.tree_map(lambda a: a[:2], batches), seq,
+        key=jax.random.PRNGKey(1))
+    assert not np.asarray(ms["refused"]).any()
+    before = fed.ledger()
+    with pytest.raises(LedgerDriftError, match="stale"):
+        fed.reconcile(state)
+    assert fed.ledger() == before      # validate-then-apply: no partial fold
+
+
+def test_superseded_state_cannot_reconcile(toy):
+    # Two live device states from one session would fold divergent counter
+    # chains against a single baseline (silently under-counting emitted
+    # noise); only the LATEST snapshot's chain may reconcile.
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv)                 # horizon (cap) = 3
+    sub = lambda n: jax.tree_util.tree_map(lambda a: a[:n], batches)
+    state_a = fed.init_state(params)
+    state_a, _ = fed.run_rounds(state_a, sub(8), jnp.zeros(8, jnp.int32),
+                                key=jax.random.PRNGKey(1))
+    state_b = fed.init_state(params)               # supersedes state_a
+    # the fresh snapshot re-seeds from host totals (nothing folded yet: 0)
+    np.testing.assert_array_equal(np.asarray(state_b.ledger.spent),
+                                  np.zeros(N_OWNERS, np.int32))
+    state_b, _ = fed.run_rounds(state_b, sub(4), jnp.zeros(4, jnp.int32),
+                                key=jax.random.PRNGKey(2))
+    led = fed.reconcile(state_b)
+    assert led[0]["responses"] == 3 and led[0]["refused"] == 1
+    before = fed.ledger()
+    with pytest.raises(LedgerDriftError, match="superseded"):
+        fed.reconcile(state_a)                     # divergent chain: loud
+    assert fed.ledger() == before
+
+
+def test_re_snapshot_seeds_counters_from_host_totals(toy):
+    # a fresh snapshot after reconciled work starts from the host's
+    # cumulative counters, so its own chain folds exact deltas
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv)                 # horizon (cap) = 3
+    sub = lambda n: jax.tree_util.tree_map(lambda a: a[:n], batches)
+    state = fed.init_state(params)
+    state, _ = fed.run_rounds(state, sub(8), jnp.zeros(8, jnp.int32),
+                              key=jax.random.PRNGKey(1))
+    led = fed.reconcile(state)
+    assert led[0]["responses"] == 3 and led[0]["refused"] == 5
+    fresh = fed.init_state(params)
+    np.testing.assert_array_equal(np.asarray(fresh.ledger.spent)[:1], [3])
+    np.testing.assert_array_equal(np.asarray(fresh.ledger.refused)[:1], [5])
+    fresh, _ = fed.run_rounds(fresh, sub(4), jnp.zeros(4, jnp.int32),
+                              key=jax.random.PRNGKey(2))
+    led = fed.reconcile(fresh)
+    assert led[0]["refused"] == 9                  # 5 + 4, exactly once
+    assert led[0]["responses"] == 3
+
+
+def test_device_ledger_seeded_from_host_accountant(toy):
+    # refusals decided on-device must match what the host would decide,
+    # including budget already spent before the state was built
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=2)
+    for _ in range(2):
+        assert fed.mechanism.authorize(0)          # pre-spend owner 0
+    state = fed.init_state(params)
+    np.testing.assert_array_equal(
+        np.asarray(state.ledger.spent),
+        [2] + [0] * (N_OWNERS - 1))
+    seq = jnp.asarray([0, 1], jnp.int32)
+    state, ms = fed.run_rounds(
+        state, jax.tree_util.tree_map(lambda a: a[:2], batches), seq,
+        key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(ms["refused"]), [True, False])
+    led = fed.reconcile(state)
+    assert led[0]["responses"] == 2 and led[0]["refused"] == 1
+    assert led[1]["responses"] == 1
+
+
+def test_capped_mechanism_caps_reach_the_device(toy):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=64, mechanism="per_owner_rounds",
+                    cap_slack=0.5)
+    state = fed.init_state(params)
+    cap = fed.mechanism.cap
+    assert cap is not None and cap == int(state.ledger.cap[0])
+    np.testing.assert_array_equal(np.asarray(state.ledger.cap),
+                                  [cap] * N_OWNERS)
+
+
+def test_run_rounds_draws_from_pluggable_schedule(toy):
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=64)
+    state = fed.init_state(params)
+    state, ms = fed.run_rounds(state, batches, key=jax.random.PRNGKey(5))
+    drawn = np.asarray(ms["owner"])
+    assert drawn.shape == (K,)
+    assert 0 <= drawn.min() and drawn.max() < N_OWNERS
+    assert len(np.unique(drawn)) > N_OWNERS // 2   # schedule actually mixes
+
+
+# --------------------------- plumbing units --------------------------------
+def test_device_ledger_construction_and_remaining():
+    led = make_device_ledger([3, 5], spent=[1, 5])
+    assert isinstance(led, DeviceLedger)
+    np.testing.assert_array_equal(np.asarray(led.remaining()), [2, 0])
+    assert bool(led.authorized(jnp.int32(0)))
+    assert not bool(led.authorized(jnp.int32(1)))
+
+
+def test_as_owner_seq_validates():
+    out = as_owner_seq([0, 1, 2], 3)
+    assert out.dtype == jnp.int32
+    with pytest.raises(ValueError, match="out of range"):
+        as_owner_seq([0, 3], 3)
+    with pytest.raises(ValueError, match="1-D"):
+        as_owner_seq(np.zeros((2, 2), np.int32), 3)
+
+
+def test_legacy_three_field_state_still_constructs(toy):
+    # downstream code that built AsyncDPState positionally keeps working;
+    # run_rounds demands the ledger explicitly.
+    from repro.federation import AsyncDPState, make_fused_rounds
+    params, batches, loss_fn, priv = toy
+    st = AsyncDPState(params, params, jnp.zeros((), jnp.int32))
+    assert st.ledger is None
+    fed = _make_fed(loss_fn, priv)
+    run = make_fused_rounds(loss_fn, fed.as_async_config(priv))
+    with pytest.raises(ValueError, match="device ledger"):
+        run(st, batches, jnp.zeros(K, jnp.int32),
+            jax.random.split(jax.random.PRNGKey(0), K))
+
+
+# --------------------------- fused kernel path -----------------------------
+def test_fused_kernel_privatizer_in_scan_body(toy):
+    # clip+noise through the Pallas kernels (interpret mode on CPU) inside
+    # the fused scan: finite updates, real refusal masking, and the clip
+    # actually binds (scaled-up loss -> clip_frac == 1).
+    params, batches, loss_fn, priv = toy
+    priv = PrivatizerConfig(xi=1e-3, granularity="microbatch",
+                            n_microbatches=2, fused_kernel=True,
+                            kernel_block_rows=8)
+    fed = _make_fed(loss_fn, priv, horizon=2)
+    state = fed.init_state(params)
+    small = jax.tree_util.tree_map(lambda a: a[:24], batches)
+    seq = jnp.asarray(np.arange(24) % 4, jnp.int32)    # owners 0-3, 6 each
+    state, ms = fed.run_rounds(state, small, seq, key=jax.random.PRNGKey(6))
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(state.theta_L))
+    granted = ~np.asarray(ms["refused"])
+    assert granted.sum() == 8                           # 2 per owner cap
+    assert np.asarray(ms["clip_frac"])[granted].min() == 1.0
+    led = fed.reconcile(state)
+    assert all(led[i]["responses"] == 2 and led[i]["refused"] == 4
+               for i in range(4))
+
+
+def test_fused_kernel_matches_jnp_clip_semantics(toy):
+    # With noise off, the kernel backend must agree with the jnp backend
+    # to float tolerance (same clip math, different reduction path).
+    from repro.federation import private_grad
+    params, batches, loss_fn, _ = toy
+    b = jax.tree_util.tree_map(lambda a: a[0], batches)
+    key = jax.random.PRNGKey(0)
+    kw = dict(xi=1e-3, granularity="microbatch", n_microbatches=2)
+    g_jnp, m_jnp = private_grad(loss_fn, params, b, key,
+                                cfg=PrivatizerConfig(**kw), noise_scale=0.0)
+    g_k, m_k = private_grad(loss_fn, params, b, key,
+                            cfg=PrivatizerConfig(fused_kernel=True,
+                                                 kernel_block_rows=8, **kw),
+                            noise_scale=0.0)
+    for a, c in zip(jax.tree_util.tree_leaves(g_jnp),
+                    jax.tree_util.tree_leaves(g_k)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5,
+                                   atol=1e-8)
+    assert float(m_jnp["clip_frac"]) == float(m_k["clip_frac"])

@@ -2,7 +2,6 @@
 and the roofline pipeline runs end-to-end (the 512-device campaign itself
 runs via `python -m repro.launch.dryrun`; artifacts in results/dryrun)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.analysis.hlo_cost import analyze

@@ -1,5 +1,4 @@
 """Theorem-1 mechanism + accounting."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """input_specs contract: every dry-run input is a ShapeDtypeStruct with the
 assigned shapes, including the modality-stub carve-outs."""
-import jax
 import jax.numpy as jnp
 import pytest
 

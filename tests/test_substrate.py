@@ -1,14 +1,12 @@
 """Substrate: data pipeline, optimizers, checkpointing, sharding rules,
 HLO cost walker, clocks."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
-from repro.configs import INPUT_SHAPES, all_configs, get_config
+from repro.configs import all_configs, get_config
 from repro.core.clocks import owner_counts, poisson_schedule, uniform_schedule
 from repro.data import (OwnerDataPipeline, health, lending, owner_shards,
                         synthetic_owner_shards)

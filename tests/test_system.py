@@ -3,9 +3,8 @@ claim (the paper's headline experiment) at test scale."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (Algo1Config, fitness, make_problem, relative_fitness,
+from repro.core import (Algo1Config, make_problem, relative_fitness,
                         run_many)
 from repro.data import owner_shards
 
