@@ -1,11 +1,22 @@
-"""Fused multi-round driver vs the per-round step() loop.
+"""Fused multi-round driver vs the per-round step() loop, and the
+flat-buffer engine vs the pytree path.
 
-The deep path's wall-clock at small models is dispatch-bound: every
-`Federation.step()` is one host round-trip (Python authorize + jitted call)
-for microseconds of compute. `run_rounds` scans K rounds per dispatch with
-the privacy ledger resident on-device, so the dispatch cost amortizes
-K-fold. Reported: us/round for both drivers and the rounds/sec speedup at
-each rounds-per-dispatch K.
+Two comparisons, one workload family:
+
+  * fused-vs-step (PR 2): the deep path's wall-clock at small models is
+    dispatch-bound — every `Federation.step()` is one host round-trip for
+    microseconds of compute. `run_rounds` scans K rounds per dispatch with
+    the privacy ledger resident on-device, so the dispatch cost amortizes
+    K-fold.
+  * flat-vs-tree (ISSUE 3): with dispatch amortized, the round's own
+    compute is the bound. The flat engine packs the model into one
+    contiguous buffer (bank = one (N, P) matrix, bf16 storage) and runs
+    the whole post-gradient round as a single fused pass (`dp_round`),
+    measured against the reference pytree path on the same schedule at
+    BOTH the dispatch-bound toy config and an MLP-scale model.
+
+Timings are interleaved medians (the two engines alternate within each
+repetition) so machine noise hits both alike.
 """
 from __future__ import annotations
 
@@ -13,6 +24,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.federation import (DataOwner, Federation, FederationConfig,
                               PrivatizerConfig)
@@ -21,25 +33,67 @@ from repro.federation import (DataOwner, Federation, FederationConfig,
 # microseconds, so the measured gap is the driver overhead itself.
 N_OWNERS, DIM, BATCH = 32, 16, 4
 
+# MLP-scale regime: ~0.36M params across 14 leaves (6 hidden layers of
+# 256) — the smallest config where per-round compute, not dispatch,
+# dominates on CPU.
+MLP_DIM, MLP_HIDDEN, MLP_LAYERS, MLP_BATCH = 64, 256, 6, 8
 
-def _setup(horizon):
+
+def _toy_model():
     key = jax.random.PRNGKey(0)
     params = {"w": jax.random.normal(key, (DIM, DIM)) / DIM,
               "b": jnp.zeros((DIM,))}
     loss_fn = lambda p, b: jnp.mean(
         (b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    return params, loss_fn, DIM, BATCH
+
+
+def _mlp_model():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2 * MLP_LAYERS + 2)
+    d_in, layers = MLP_DIM, []
+    for i in range(MLP_LAYERS):
+        layers.append({"w": jax.random.normal(ks[2 * i], (d_in, MLP_HIDDEN))
+                       / np.sqrt(d_in),
+                       "b": jnp.zeros((MLP_HIDDEN,))})
+        d_in = MLP_HIDDEN
+    layers.append({"w": jax.random.normal(ks[-1], (d_in, MLP_DIM))
+                   / np.sqrt(d_in),
+                   "b": jnp.zeros((MLP_DIM,))})
+    params = {"layers": layers}
+
+    def loss_fn(p, b):
+        x = b["x"]
+        for lay in p["layers"][:-1]:
+            x = jax.nn.relu(x @ lay["w"] + lay["b"])
+        out = x @ p["layers"][-1]["w"] + p["layers"][-1]["b"]
+        return jnp.mean((out - b["y"]) ** 2)
+
+    return params, loss_fn, MLP_DIM, MLP_BATCH
+
+
+_MODELS = {"toy": _toy_model, "mlp": _mlp_model}
+
+
+def _make_fed(loss_fn, horizon, *, pack=False, fused=False, bank_dtype=None):
     owners = [DataOwner(n=10_000, epsilon=2.0, xi=1.0)
               for _ in range(N_OWNERS)]
     fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
                                               lr_scale=5.0))
     fed.make_step(loss_fn, privatizer=PrivatizerConfig(
-        xi=1.0, granularity="microbatch", n_microbatches=1))
-    return fed, params
+        xi=1.0, granularity="microbatch", n_microbatches=1,
+        fused_kernel=fused), pack_params=pack, bank_dtype=bank_dtype)
+    return fed
 
 
-def _batches(k):
-    return {"x": jax.random.normal(jax.random.PRNGKey(1), (k, BATCH, DIM)),
-            "y": jax.random.normal(jax.random.PRNGKey(2), (k, BATCH, DIM))}
+def _setup(horizon):
+    params, loss_fn, _, _ = _toy_model()
+    return _make_fed(loss_fn, horizon), params
+
+
+def _batches(k, dim=DIM, batch=BATCH):
+    return {"x": jax.random.normal(jax.random.PRNGKey(1), (k, batch, dim)),
+            "y": jax.random.normal(jax.random.PRNGKey(2), (k, batch, dim))}
 
 
 def _time_loop(fed, state, batches, owner_seq, keys):
@@ -55,7 +109,7 @@ def _time_loop(fed, state, batches, owner_seq, keys):
 def _time_fused(fed, state, batches, owner_seq, key):
     t0 = time.perf_counter()
     state, _ = fed.run_rounds(state, batches, owner_seq, key=key)
-    jax.block_until_ready(state.theta_L)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state.theta_L)[0])
     return time.perf_counter() - t0
 
 
@@ -81,10 +135,40 @@ def measure(k: int):
     return dt_loop, dt_fused
 
 
+def measure_flat_vs_tree(model: str, k: int, reps: int = 9):
+    """Interleaved-median rounds/sec of the flat engine (pack_params +
+    dp_round fused pass + bf16 bank — its production configuration)
+    against the reference pytree path, same schedule and fused driver."""
+    params, loss_fn, dim, batch = _MODELS[model]()
+    batches = _batches(k, dim, batch)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+
+    fed_t = _make_fed(loss_fn, 4 * k)
+    fed_f = _make_fed(loss_fn, 4 * k, pack=True, fused=True,
+                      bank_dtype=jnp.bfloat16)
+    runs = [(fed_t, fed_t.init_state(params)),
+            (fed_f, fed_f.init_state(params))]
+    for fed, st in runs:                                       # compile
+        _time_fused(fed, st, batches, owner_seq, root)
+    times = [[], []]
+    for _ in range(reps):
+        for i, (fed, st) in enumerate(runs):
+            times[i].append(_time_fused(fed, st, batches, owner_seq, root))
+    dt_tree, dt_flat = (float(np.median(ts)) for ts in times)
+    return dt_tree, dt_flat
+
+
 def derived_row(dt_loop: float, dt_fused: float, k: int) -> str:
     return (f"rounds_per_sec_fused={k / dt_fused:.0f};"
             f"rounds_per_sec_step={k / dt_loop:.0f};"
             f"speedup={dt_loop / dt_fused:.1f}x")
+
+
+def flat_row(dt_tree: float, dt_flat: float, k: int) -> str:
+    return (f"rounds_per_sec_flat={k / dt_flat:.0f};"
+            f"rounds_per_sec_tree={k / dt_tree:.0f};"
+            f"speedup={dt_tree / dt_flat:.2f}x")
 
 
 def run(fast: bool = False):
@@ -94,6 +178,13 @@ def run(fast: bool = False):
         dt_loop, dt_fused = measure(k)
         rows.append((f"fused_rounds/owners{N_OWNERS}/K{k}",
                      dt_fused / k * 1e6, derived_row(dt_loop, dt_fused, k)))
+    flat_cfgs = ((("toy", 128), ("mlp", 24)) if fast
+                 else (("toy", 256), ("mlp", 64)))
+    reps = 5 if fast else 9
+    for model, k in flat_cfgs:
+        dt_tree, dt_flat = measure_flat_vs_tree(model, k, reps=reps)
+        rows.append((f"fused_rounds/flat_vs_tree/{model}/K{k}",
+                     dt_flat / k * 1e6, flat_row(dt_tree, dt_flat, k)))
     return rows
 
 

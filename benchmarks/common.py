@@ -1,8 +1,9 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple, Union
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
 
@@ -18,3 +19,42 @@ def timed(fn: Callable, *args, n: int = 3, **kw):
 
 def fmt_rows(rows: List[Row]) -> str:
     return "\n".join(f"{n},{u:.1f},{d}" for n, u, d in rows)
+
+
+def parse_derived(derived: str) -> Dict[str, Union[float, str]]:
+    """'a=12;b=3.4x;note' -> {'a': 12.0, 'b': 3.4, 'note': 'note'}.
+
+    Values parse as floats (a trailing 'x' multiplier is stripped);
+    anything else stays a string, bare fragments key themselves.
+    """
+    out: Dict[str, Union[float, str]] = {}
+    for part in filter(None, (p.strip() for p in derived.split(";"))):
+        key, sep, val = part.partition("=")
+        if not sep:
+            out[key] = key
+            continue
+        try:
+            out[key] = float(val[:-1] if val.endswith("x") else val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def bench_json(suite: str, rows: List[Row], elapsed_s: float) -> dict:
+    """Machine-readable suite result (one BENCH_<suite>.json per suite):
+    us/call (us/round for the round suites) plus every derived metric —
+    rounds/sec included — parsed into numbers, so the perf trajectory is
+    diffable across PRs."""
+    return {
+        "suite": suite,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": n, "us_per_call": round(u, 3),
+                  "derived": parse_derived(d)} for n, u, d in rows],
+    }
+
+
+def write_bench_json(path: str, suite: str, rows: List[Row],
+                     elapsed_s: float) -> None:
+    with open(path, "w") as f:
+        json.dump(bench_json(suite, rows, elapsed_s), f, indent=2)
+        f.write("\n")

@@ -1,8 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+                                            [--json-dir DIR]
 
-Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
+``BENCH_<suite>.json`` per suite into --json-dir (default: cwd; pass
+--json-dir '' to disable) with us/round + every derived metric
+(rounds/sec etc.) parsed into numbers — the cross-PR perf trajectory.
+Mapping to the paper:
     bench_convergence   -> Figs. 2 & 8 (psi percentiles vs k)
     bench_comm_timing   -> Figs. 3 & 9 (Poisson schedule)
     bench_cop_surface   -> Figs. 4, 5 & 10 (CoP vs n, eps + fitted bound)
@@ -20,6 +25,7 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -29,6 +35,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="reduced run counts (CI mode)")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_<suite>.json files land "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (bench_async_vs_sync, bench_collaboration,
@@ -48,6 +57,8 @@ def main() -> None:
         "async_vs_sync": lambda: bench_async_vs_sync.run(fast=args.fast),
         "fused_rounds": lambda: bench_fused_rounds.run(fast=args.fast),
     }
+    from benchmarks.common import write_bench_json
+
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites.items():
@@ -55,8 +66,13 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            if args.json_dir:
+                write_bench_json(
+                    os.path.join(args.json_dir, f"BENCH_{name}.json"),
+                    name, rows, time.time() - t0)
         except Exception as e:  # keep the harness going
             failures += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")

@@ -10,9 +10,12 @@ from repro.federation.convex import (Algo1Config, Algo1Trace, SyncTrace,
                                      run_algorithm1, run_many, scan_engine,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   make_fused_rounds, make_sync_dp_step,
-                                   make_train_step)
-from repro.federation.dp_sgd import PrivatizerConfig, clip_tree, private_grad
+                                   init_state_flat, make_fused_rounds,
+                                   make_sync_dp_step, make_train_step)
+from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
+                                     private_grad, resolve_interpret)
+from repro.federation.flatten import (FlatSpec, ParamFlat, flatten_spec,
+                                      init_flat_bank, pack_params)
 from repro.federation.linear import (LinearProblem, Owner, fitness,
                                      make_problem, owner_grad,
                                      record_grad_bound, relative_fitness)

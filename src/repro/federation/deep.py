@@ -45,7 +45,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.federation.config import paper_rates
-from repro.federation.dp_sgd import PrivatizerConfig, private_grad
+from repro.federation.dp_sgd import (PrivatizerConfig, _group_batch,
+                                     private_grad, resolve_interpret)
+from repro.federation.flatten import (FlatSpec, ParamFlat, init_flat_bank,
+                                      pack_params)
 from repro.federation.privacy import DeviceLedger, make_device_ledger
 
 
@@ -94,6 +97,25 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
                         make_device_ledger(cfg.effective_caps))
 
 
+def init_state_flat(params, cfg: AsyncDPConfig,
+                    bank_dtype=None) -> AsyncDPState:
+    """Flat-buffer state: theta_L is a ParamFlat (one contiguous (P,) f32
+    buffer) and the owner bank is a single (N_owners, P) matrix, so bank
+    gather/scatter is one row slice instead of per-leaf dynamic indexing.
+    Both drivers accept either state kind and dispatch on it.
+
+    `bank_dtype` (None = float32) narrows the bank STORAGE only — e.g.
+    bf16 halves the N*P resident bytes and the fused scan's loop-carry
+    traffic; rows upcast to f32 on gather. f32 keeps the bit-parity
+    contract with the tree path."""
+    if cfg.init_bank_zero:
+        params = jax.tree_util.tree_map(jnp.zeros_like, params)
+    flat = pack_params(params)
+    return AsyncDPState(flat, init_flat_bank(flat, cfg.n_owners, bank_dtype),
+                        jnp.zeros((), jnp.int32),
+                        make_device_ledger(cfg.effective_caps))
+
+
 def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
     """Theorem-1 scale per owner (for the averaged clipped gradient)."""
     from repro.federation.privacy import laplace_scale_theorem1
@@ -108,7 +130,10 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
     same op sequence (bit-for-bit equivalence under fixed keys).
 
     Returns compute(theta_L, bank, batch, owner_idx, key) ->
-    (new_L, new_i, theta_i, metrics)."""
+    (new_L, new_i, theta_i, metrics). The bank-gather-free core is exposed
+    as `compute.inner(theta_L, theta_i, batch, owner_idx, key)`: the flat
+    engine's reference mode traces that SAME function on its unpacked
+    buffers, which is what makes flat-vs-tree bit parity hold."""
     scales = _noise_scales(cfg) if scales is None else jnp.asarray(
         scales, jnp.float32)
     n_i = jnp.asarray(cfg.owner_sizes, jnp.float32)
@@ -120,11 +145,7 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         return jax.tree_util.tree_map(
             lambda l: jnp.clip(l, -cfg.theta_max, cfg.theta_max), tree)
 
-    def compute(theta_L, bank, batch, owner_idx, key):
-        theta_i = jax.tree_util.tree_map(
-            lambda l: jax.lax.dynamic_index_in_dim(l, owner_idx, 0,
-                                                   keepdims=False),
-            bank)
+    def inner(theta_L, theta_i, batch, owner_idx, key):
         theta_bar = jax.tree_util.tree_map(
             lambda a, b: 0.5 * (a + b), theta_L, theta_i)             # (6)
 
@@ -146,12 +167,168 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         metrics = {"clip_frac": pm["clip_frac"],
                    "max_grad_norm": pm["max_grad_norm"],
                    "grad_noise_scale": scales[owner_idx]}
+        return new_L, new_i, metrics
+
+    def compute(theta_L, bank, batch, owner_idx, key):
+        theta_i = jax.tree_util.tree_map(
+            lambda l: jax.lax.dynamic_index_in_dim(l, owner_idx, 0,
+                                                   keepdims=False),
+            bank)
+        new_L, new_i, metrics = inner(theta_L, theta_i, batch, owner_idx,
+                                      key)
         return new_L, new_i, theta_i, metrics
+
+    compute.inner = inner
+    return compute
+
+
+def _flat_clipped_grad_acc(loss_fn, spec: FlatSpec, pcfg: PrivatizerConfig,
+                           tb: jax.Array, batch):
+    """Sum of per-group clipped (P,) gradients at theta_bar + group gain.
+
+    The gradient is the ordinary tree gradient at `spec.unpack(tb)` packed
+    into ONE concat (cheaper than differentiating through the unpack,
+    whose transpose pads every leaf cotangent to (P,)); per-group clip
+    norms run through the blockwise Pallas squared-norm pass (jnp oracle
+    off-TPU). Returns (acc, gain, metrics) with the group-mean divide
+    DEFERRED into `gain` so dp_round can fuse it with the noise add and
+    the inertia updates.
+    """
+    from repro.kernels.dp_clip_noise.ops import fused_sqnorm_tree
+    interp = resolve_interpret(pcfg.kernel_interpret)
+    tb_tree = spec.unpack(tb)
+
+    def flat_grad(mb):
+        return spec.pack(jax.grad(loss_fn)(tb_tree, mb))   # (P,)
+
+    def sqnorm(g):
+        return fused_sqnorm_tree(g, block_rows=pcfg.kernel_block_rows,
+                                 interpret=interp)
+
+    if pcfg.granularity == "example":
+        B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        grads = jax.vmap(lambda ex: flat_grad(
+            jax.tree_util.tree_map(lambda a: a[None], ex)))(batch)  # (B, P)
+        norms = jnp.sqrt(jnp.sum(jnp.square(grads), axis=1))
+        scale = jnp.minimum(1.0, pcfg.xi / jnp.maximum(norms, 1e-12))
+        acc = jnp.sum(grads * scale[:, None], axis=0)
+        return acc, 1.0 / B, {
+            "clip_frac": jnp.mean((norms > pcfg.xi).astype(jnp.float32)),
+            "max_grad_norm": jnp.max(norms)}
+    if pcfg.granularity != "microbatch":
+        raise ValueError(pcfg.granularity)
+
+    G = pcfg.n_microbatches
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if not pcfg.pre_grouped:
+        assert B % G == 0, (B, G)
+
+    if G == 1:
+        # single-group fast path: no scan wrapper, no accumulator init
+        mb = (jax.tree_util.tree_map(lambda a: a[0], batch)
+              if pcfg.pre_grouped else batch)
+        g = flat_grad(mb)
+        norm = jnp.sqrt(sqnorm(g))
+        s = jnp.minimum(1.0, pcfg.xi / jnp.maximum(norm, 1e-12))
+        return g * s, 1.0, {
+            "clip_frac": (norm > pcfg.xi).astype(jnp.float32),
+            "max_grad_norm": norm}
+
+    def body(carry, mb):
+        acc, nclip, mx = carry
+        g = flat_grad(mb)
+        norm = jnp.sqrt(sqnorm(g))
+        s = jnp.minimum(1.0, pcfg.xi / jnp.maximum(norm, 1e-12))
+        return (acc + g * s, nclip + (norm > pcfg.xi),
+                jnp.maximum(mx, norm)), None
+
+    xs = batch if pcfg.pre_grouped else _group_batch(batch, G)
+    (acc, nclip, mx), _ = jax.lax.scan(
+        body, (jnp.zeros_like(tb), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), xs)
+    return acc, 1.0 / G, {"clip_frac": nclip / G, "max_grad_norm": mx}
+
+
+def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
+                     tree_inner):
+    """The same inertia round over the flat representation.
+
+    With `privatizer.fused_kernel=False` this is the REFERENCE mode: the
+    owner's bank row is gathered as ONE (P,) slice, theta_L and the row are
+    unpacked behind an optimization barrier, and the round runs the
+    IDENTICAL `tree_inner` trace as the tree path (same per-leaf RNG
+    splits, same op sequence — the barrier keeps XLA from re-fusing the
+    slice views into it), so results are bit-for-bit `spec.pack()` of the
+    tree path's output for f32 models under the same per-round keys.
+
+    With `fused_kernel=True` the gradient is taken directly w.r.t. the
+    flat buffer and the whole post-gradient round — group mean, Laplace
+    add, eqs. (5)/(7), projection — is ONE `dp_round` Pallas pass over the
+    buffer (in-kernel inverse-CDF noise: statistically, not bitwise,
+    equivalent — PR 2's kernel contract).
+    """
+    scales = _noise_scales(cfg) if scales is None else jnp.asarray(
+        scales, jnp.float32)
+    n_i = jnp.asarray(cfg.owner_sizes, jnp.float32)
+    n = float(cfg.n_total)
+    N = cfg.n_owners
+    lr_own, lr_L = paper_rates(N, cfg.horizon, cfg.rho, cfg.sigma,
+                               cfg.lr_scale)
+    pcfg = cfg.privatizer
+
+    def compute(theta_L: ParamFlat, bank, batch, owner_idx, key):
+        spec = theta_L.spec
+        theta_i = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0,
+                                               keepdims=False)     # (P,)
+        if pcfg.fused_kernel:
+            if pcfg.mechanism != "laplace":
+                raise ValueError(
+                    "fused_kernel implements the laplace mechanism")
+            from repro.kernels.dp_clip_noise.ops import dp_round_flat
+            tb = 0.5 * (theta_L.buf + theta_i)                     # (6)
+            ns = scales[owner_idx]
+            acc, gain, pm = _flat_clipped_grad_acc(loss_fn, spec, pcfg,
+                                                   tb, batch)
+            new_L, new_i = dp_round_flat(                  # (4)+(5)+(7)+Pi
+                tb, acc, key, gain, ns, n_i[owner_idx] / n,
+                sigma=cfg.sigma, lr_own=lr_own, lr_l=lr_L, n_owners=N,
+                theta_max=cfg.theta_max,
+                block_rows=pcfg.kernel_block_rows,
+                interpret=resolve_interpret(pcfg.kernel_interpret))
+            metrics = {"clip_frac": pm["clip_frac"],
+                       "max_grad_norm": pm["max_grad_norm"],
+                       "grad_noise_scale": ns}
+        else:
+            tl_tree, ti_tree = jax.lax.optimization_barrier(
+                (spec.unpack(theta_L.buf), spec.unpack(theta_i)))
+            new_L_t, new_i_t, metrics = tree_inner(tl_tree, ti_tree, batch,
+                                                   owner_idx, key)
+            new_L, new_i = spec.pack(new_L_t), spec.pack(new_i_t)
+        return ParamFlat(new_L, spec), new_i, theta_i, metrics
+
+    return compute
+
+
+def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
+    """Dispatch the round math on the state representation: ParamFlat
+    states run the flat engine, pytree states the reference tree path.
+    Both drivers share this, so one built step function serves either
+    state kind (jit specializes per structure)."""
+    tree_c = _round_math(loss_fn, cfg, scales)
+    flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner)
+
+    def compute(theta_L, bank, batch, owner_idx, key):
+        if isinstance(theta_L, ParamFlat):
+            return flat_c(theta_L, bank, batch, owner_idx, key)
+        return tree_c(theta_L, bank, batch, owner_idx, key)
 
     return compute
 
 
 def _write_bank(bank, value, owner_idx):
+    if isinstance(bank, jax.Array):    # flat (N, P) bank: one row scatter
+        return jax.lax.dynamic_update_index_in_dim(
+            bank, value.astype(bank.dtype), owner_idx, 0)
     return jax.tree_util.tree_map(
         lambda l, v: jax.lax.dynamic_update_index_in_dim(
             l, v.astype(l.dtype), owner_idx, 0),
@@ -167,8 +344,12 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
     session passes its Mechanism's ledgered scales here); None recomputes
     them from cfg exactly as before. The device ledger (if any) passes
     through untouched — this path is host-authorized.
+
+    States built by `init_state_flat` (ParamFlat theta_L + (N, P) bank) run
+    the flat-buffer engine; pytree states run the reference tree path —
+    the same returned step function serves both.
     """
-    compute = _round_math(loss_fn, cfg, scales)
+    compute = _round_compute(loss_fn, cfg, scales)
 
     def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
              ) -> Tuple[AsyncDPState, Dict]:
@@ -197,9 +378,10 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
     `ledger.refused` for `Federation.reconcile()` to fold into the host
     accountant. Granted rounds run the exact same `_round_math` trace as
     `make_train_step`, so a fused schedule reproduces the per-round loop
-    bit-for-bit under the same per-round keys.
+    bit-for-bit under the same per-round keys. Flat states (see
+    `init_state_flat`) run the flat-buffer engine inside the same scan.
     """
-    compute = _round_math(loss_fn, cfg, scales)
+    compute = _round_compute(loss_fn, cfg, scales)
 
     def body(state: AsyncDPState, xs):
         batch, owner_idx, key = xs
@@ -241,6 +423,12 @@ def make_sync_dp_step(loss_fn, cfg: AsyncDPConfig, lr: float,
     step(params, batches, key, weights=None): `weights` (N,) rescales each
     owner's contribution — the Federation session passes 0/1 liveness there
     so budget-exhausted owners drop out of the round.
+
+    The per-owner accumulation is a `lax.scan` over the stacked (N, B, ...)
+    batches, so trace size and compile time stay O(1) in N (the unrolled
+    Python loop grew both linearly — prohibitive at hundreds of owners).
+    The scan body accumulates in the same owner order with the same ops as
+    the old loop, so results are unchanged.
     """
     scales = _noise_scales(cfg) if scales is None else jnp.asarray(
         scales, jnp.float32)
@@ -249,15 +437,19 @@ def make_sync_dp_step(loss_fn, cfg: AsyncDPConfig, lr: float,
 
     def step(params, batches, key, weights=None):
         keys = jax.random.split(key, cfg.n_owners)
-        acc = jax.tree_util.tree_map(
+        w_all = (n_i / n if weights is None
+                 else weights * n_i / n)                       # (N,)
+
+        def body(acc, xs):
+            b_i, k_i, s_i, w_i = xs
+            q, _ = private_grad(loss_fn, params, b_i, k_i,
+                                cfg=cfg.privatizer, noise_scale=s_i)
+            return jax.tree_util.tree_map(
+                lambda a, g: a + w_i * g.astype(jnp.float32), acc, q), None
+
+        zeros = jax.tree_util.tree_map(
             lambda l: jnp.zeros(l.shape, jnp.float32), params)
-        for i in range(cfg.n_owners):
-            b_i = jax.tree_util.tree_map(lambda a: a[i], batches)
-            q, _ = private_grad(loss_fn, params, b_i, keys[i],
-                                cfg=cfg.privatizer, noise_scale=scales[i])
-            w_i = n_i[i] / n if weights is None else weights[i] * n_i[i] / n
-            acc = jax.tree_util.tree_map(
-                lambda a, g: a + w_i * g.astype(jnp.float32), acc, q)
+        acc, _ = jax.lax.scan(body, zeros, (batches, keys, scales, w_all))
         reg = jax.tree_util.tree_map(
             lambda l: cfg.sigma * l.astype(jnp.float32), params)
         new = jax.tree_util.tree_map(

@@ -21,7 +21,7 @@ The fused clip+noise hot-path has a Pallas kernel
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,22 @@ class PrivatizerConfig:
     # statistically (not bitwise) equivalent to the jnp one. laplace only.
     fused_kernel: bool = False
     kernel_block_rows: int = 256
-    kernel_interpret: bool = True   # CPU-dev default; set False on TPU
+    # None = auto-detect the kernel backend: compiled Pallas on TPU, the
+    # kernel's jnp oracle transform elsewhere (same math, no emulation
+    # plumbing). True forces the Pallas interpreter (kernel debugging);
+    # False forces the compiled kernel.
+    kernel_interpret: Optional[bool] = None
+
+
+def resolve_interpret(flag: Optional[bool]):
+    """Kernel-backend auto-detection for the `interpret` argument of the
+    dp_clip_noise ops: explicit True/False forces the Pallas interpreter /
+    compiled kernel; None picks per backend — compiled on TPU (no manual
+    config needed), the op's jnp "oracle" transform elsewhere (the Pallas
+    interpreter is a debugging device, not an execution backend)."""
+    if flag is None:
+        return False if jax.default_backend() == "tpu" else "oracle"
+    return bool(flag)
 
 
 def _global_norm(tree) -> jax.Array:
@@ -111,7 +126,7 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
                 from repro.kernels.dp_clip_noise.ops import fused_sqnorm_tree
                 norm = jnp.sqrt(fused_sqnorm_tree(
                     g, block_rows=cfg.kernel_block_rows,
-                    interpret=cfg.kernel_interpret))
+                    interpret=resolve_interpret(cfg.kernel_interpret)))
                 s = jnp.minimum(1.0, cfg.xi / jnp.maximum(norm, 1e-12))
                 g = jax.tree_util.tree_map(
                     lambda l: (l.astype(jnp.float32) * s).astype(l.dtype), g)
@@ -142,7 +157,8 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
                      else (mean_grad, 1.0))
         noisy = fused_scale_noise_tree(src, key, gain, noise_scale,
                                        block_rows=cfg.kernel_block_rows,
-                                       interpret=cfg.kernel_interpret)
+                                       interpret=resolve_interpret(
+                                           cfg.kernel_interpret))
         return noisy, {"clip_frac": clip_frac, "max_grad_norm": max_norm}
 
     if cfg.mechanism == "laplace":

@@ -1,0 +1,166 @@
+"""Flat-parameter representation for the deep-path round engine.
+
+The inertia round (eqs. 5-7) is elementwise in every parameter: averaging,
+the regularizer gradient, both updates, and the Theta projection never mix
+elements. Running it as ~7 `tree_map` passes over L leaves costs O(L) kernel
+launches per pass and defeats fusion across leaves; the owner BANK pays a
+per-leaf `dynamic_index/update` on top. Packing the model into ONE
+contiguous f32 buffer turns the whole round into a handful of 1-D ops over
+a single array, the bank into an `(N_owners, P)` matrix whose gather/
+scatter is one row slice, and gives the Pallas `dp_round` kernel a layout
+it can stream in a single HBM pass.
+
+    spec = flatten_spec(params)         # static: treedef/shapes/dtypes
+    flat = pack_params(params)          # ParamFlat: (P,) f32 + spec
+    tree = flat.unpack()                # exact round-trip
+
+`ParamFlat` is a registered pytree whose buffer is the only traced leaf and
+whose `FlatSpec` rides as static aux data, so jitted functions specialize
+per model structure exactly as they would on the pytree itself.
+
+Exactness contract: the buffer is float32. Packing is bit-exact for every
+floating dtype of itemsize <= 4 (f32 trivially; f16/bf16 embed exactly in
+f32 and round-trip exactly back). Wider or non-floating leaves would make
+the round-trip lossy, so they are rejected loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_PACKABLE = ("float32", "bfloat16", "float16")
+
+
+def _check_dtype(dt: np.dtype) -> np.dtype:
+    if dt.name not in _PACKABLE:
+        raise TypeError(
+            f"cannot pack dtype {dt.name!r} into the f32 flat buffer "
+            f"without losing bits (packable: {', '.join(_PACKABLE)})")
+    return dt
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static shape/dtype/layout metadata of a packed pytree.
+
+    Hashable (usable as static jit aux data); equality means two buffers
+    describe the same model structure and may be exchanged.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]                # np.dtype per leaf
+    offsets: Tuple[int, ...]               # start of each leaf in the buffer
+    size: int                              # P = total elements
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    def validate(self, tree) -> list:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(f"tree structure mismatch: got {treedef}, "
+                             f"spec has {self.treedef}")
+        for leaf, shape, dt in zip(leaves, self.shapes, self.dtypes):
+            if tuple(leaf.shape) != shape:
+                raise ValueError(f"leaf shape mismatch: got {leaf.shape}, "
+                                 f"spec has {shape}")
+            if np.dtype(leaf.dtype) != dt:
+                # silent astype through the f32 buffer could drop bits
+                # (f64 under x64, ints); the contract is loud rejection
+                raise TypeError(f"leaf dtype mismatch: got {leaf.dtype}, "
+                                f"spec has {dt}")
+        return leaves
+
+    def pack(self, tree) -> jax.Array:
+        """Pytree -> (P,) f32 buffer. Exact (see module docstring)."""
+        leaves = self.validate(tree)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+    def unpack(self, buf: jax.Array) -> Any:
+        """(P,) buffer -> pytree with the original shapes/dtypes."""
+        if buf.shape != (self.size,):
+            raise ValueError(f"buffer shape {buf.shape} != ({self.size},)")
+        leaves = []
+        for off, shape, dt in zip(self.offsets, self.shapes, self.dtypes):
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            leaves.append(buf[off:off + n].reshape(shape).astype(dt))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def flatten_spec(tree) -> FlatSpec:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot flatten a pytree with no array leaves")
+    shapes, dtypes, offsets = [], [], []
+    off = 0
+    for leaf in leaves:
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(_check_dtype(np.dtype(leaf.dtype)))
+        offsets.append(off)
+        off += int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+    return FlatSpec(treedef=treedef, shapes=tuple(shapes),
+                    dtypes=tuple(dtypes), offsets=tuple(offsets), size=off)
+
+
+@jax.tree_util.register_pytree_node_class
+class ParamFlat:
+    """One contiguous f32 master copy of a model pytree.
+
+    Traced leaf: `buf` (P,) f32. Static aux: `spec` (FlatSpec). Elementwise
+    updates on `buf` are bit-identical to the same per-leaf updates on the
+    f32 pytree, which is what makes the flat round engine's
+    `fused_kernel=False` mode exactly reproduce the tree path.
+    """
+
+    def __init__(self, buf: jax.Array, spec: FlatSpec):
+        self.buf = buf
+        self.spec = spec
+
+    def tree_flatten(self):
+        return (self.buf,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], spec)
+
+    @property
+    def size(self) -> int:
+        return self.spec.size
+
+    def unpack(self) -> Any:
+        return self.spec.unpack(self.buf)
+
+    def replace_buf(self, buf: jax.Array) -> "ParamFlat":
+        return ParamFlat(buf, self.spec)
+
+    def __repr__(self) -> str:
+        return (f"ParamFlat(P={self.spec.size}, "
+                f"n_leaves={self.spec.n_leaves})")
+
+
+def pack_params(tree, spec: FlatSpec = None) -> ParamFlat:
+    """Pack a model pytree into a ParamFlat (spec inferred if omitted)."""
+    spec = flatten_spec(tree) if spec is None else spec
+    return ParamFlat(spec.pack(tree), spec)
+
+
+def init_flat_bank(flat: ParamFlat, n_owners: int,
+                   dtype=None) -> jax.Array:
+    """(N_owners, P) owner-copy bank, every row the central buffer.
+
+    `dtype` (default float32) is the bank STORAGE dtype. The bank is the
+    algorithm's dominant memory cost (N_owners copies of the model) and,
+    in the fused multi-round scan, its dominant loop-carry traffic;
+    bf16 storage halves both. Rows are upcast to f32 on gather and
+    re-quantized on scatter (a refused round's untouched row round-trips
+    exactly). Only f32 storage preserves the flat-vs-tree bit-parity
+    contract — narrower banks are a recorded (opt-in) deviation.
+    """
+    bank = jnp.broadcast_to(flat.buf[None], (n_owners, flat.size))
+    return bank if dtype is None else bank.astype(dtype)

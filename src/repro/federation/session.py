@@ -43,8 +43,9 @@ from repro.federation.config import FederationConfig
 from repro.federation.convex import (Algo1Trace, SyncTrace, scan_engine,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   make_fused_rounds, make_sync_dp_step,
-                                   make_train_step)
+                                   init_state_flat, make_fused_rounds,
+                                   make_sync_dp_step, make_train_step)
+from repro.federation.flatten import ParamFlat
 from repro.federation.dp_sgd import PrivatizerConfig
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
@@ -71,6 +72,8 @@ class Federation:
                                         cap_slack=cap_slack)
         self._step_fn = None
         self._fused_fn = None
+        self._pack_params = False
+        self._bank_dtype = None
         self._ran = False
 
     def _claim_session(self):
@@ -182,8 +185,29 @@ class Federation:
             lr_scale=cfg.lr_scale,
             caps=None if cap is None else (cap,) * self.n_owners)
 
-    def init_state(self, params) -> AsyncDPState:
-        state = init_state(params, self.as_async_config())
+    def init_state(self, params, pack_params: Optional[bool] = None,
+                   bank_dtype=None) -> AsyncDPState:
+        """Build the deep-path training state. `pack_params=None` follows
+        the flag given to make_step (default tree); True packs the model
+        into the flat-buffer representation (ParamFlat theta_L + one
+        (N, P) bank matrix) that the flat round engine runs on.
+        `bank_dtype` (flat states only, None follows make_step) narrows
+        the bank storage — bf16 halves the dominant state memory and the
+        fused scan's carry traffic at the cost of quantized owner copies
+        (f32 keeps the bit-parity contract)."""
+        pack = self._pack_params if pack_params is None else pack_params
+        if pack:
+            if bank_dtype is None:
+                bank_dtype = self._bank_dtype
+            state = init_state_flat(params, self.as_async_config(),
+                                    bank_dtype=bank_dtype)
+        else:
+            # the make_step-configured bank dtype is simply irrelevant to
+            # a tree state; only an EXPLICIT request here is an error
+            if bank_dtype is not None:
+                raise ValueError("bank_dtype is a flat-engine option; "
+                                 "pass pack_params=True")
+            state = init_state(params, self.as_async_config())
         snapshot = getattr(self.mechanism, "device_ledger", None)
         if snapshot is not None:
             # In-graph authorization must refuse exactly where the host
@@ -191,20 +215,36 @@ class Federation:
             state = state._replace(ledger=snapshot())
         return state
 
+    def params_of(self, state: AsyncDPState):
+        """The central model as a pytree, whichever representation the
+        state carries (flat buffers are unpacked)."""
+        theta = state.theta_L
+        return theta.unpack() if isinstance(theta, ParamFlat) else theta
+
     def make_step(self, loss_fn, *,
                   privatizer: Optional[PrivatizerConfig] = None,
                   lr: Optional[float] = None, n_params: Optional[int] = None,
-                  jit: bool = True, donate: bool = False):
+                  jit: bool = True, donate: bool = False,
+                  pack_params: bool = False, bank_dtype=None):
         """Build (and cache for .step()) the jitted per-round function.
 
         async: step(state, batch, owner_idx, key) -> (state, metrics)
         sync:  step(params, batches, key[, weights]) -> params  (needs lr)
         n_params feeds dimension-aware mechanisms (e.g. 'strict').
 
+        pack_params=True opts `init_state` into the flat-buffer engine
+        (the model packed into one contiguous (P,) f32 buffer, the bank a
+        single (N, P) matrix). The built step functions serve BOTH
+        representations — they dispatch on the state — so this flag only
+        selects what `init_state` constructs. Default off: the pytree
+        path stays the reference.
+
         Deep-path sensitivity is the privatizer's ENFORCED clip norm, not
         each owner's nominal Xi_i — clipping to a norm above an owner's
         bound would otherwise under-noise that owner.
         """
+        self._pack_params = pack_params
+        self._bank_dtype = bank_dtype
         acfg = self.as_async_config(privatizer)
         scales = self.mechanism.scales(p=n_params,
                                        clip_norm=acfg.privatizer.xi)

@@ -5,6 +5,14 @@
 Two HBM passes total: (1) blockwise squared-norm partials -> global norm ->
 clip factor; (2) fused scale+Laplace-add. The Laplace bits come from
 jax.random (threefry) so the DP guarantee rides on the library RNG.
+
+The traced-scalar entry points accept ``interpret`` as True (Pallas
+interpreter — kernel debugging), False (compiled Pallas — TPU), or the
+string ``"oracle"``: the kernel's pure-jnp transform from ``ref.py``,
+executed directly on the unpadded arrays. The oracle is the production
+backend off-TPU (no interpreter plumbing, no block padding); its noise
+stream differs from the kernel's (unpadded draw shape), which is lawful
+under the same statistical-equivalence contract as the kernel itself.
 """
 from __future__ import annotations
 
@@ -14,7 +22,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dp_clip_noise.kernel import LANES, scale_noise_2d, sqnorm_2d
+from repro.kernels.dp_clip_noise.kernel import (LANES, dp_round_2d,
+                                                scale_noise_2d, sqnorm_2d)
 
 tmap = jax.tree_util.tree_map
 
@@ -54,6 +63,40 @@ def dp_privatize_tree(grads: Any, key, xi: float, noise_scale: float, *,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def dp_round_flat(tb: jax.Array, acc: jax.Array, key, gain, noise_scale,
+                  w, *, sigma: float, lr_own: float, lr_l: float,
+                  n_owners: int, theta_max: float, block_rows: int = 256,
+                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Whole inertia round on a (P,) flat buffer -> (new_L, new_i).
+
+    Fuses group-mean (`gain`), the Laplace add (eq. 4), the eq. (5)/(7)
+    inertia updates and the theta_max projection into ONE HBM pass over the
+    padded 2-D view of the buffer. `gain`, `noise_scale` and `w` may be
+    traced scalars (scan-body safe); the structural round constants are
+    baked into the kernel. The Laplace bits come from jax.random (threefry)
+    converted in-kernel by inverse CDF — a DIFFERENT lawful draw than
+    jax.random.laplace, so this backend is statistically (not bitwise)
+    equivalent to the jnp path: the same contract as fused_scale_noise_tree.
+    """
+    if interpret == "oracle":
+        from repro.kernels.dp_clip_noise.ref import dp_round_ref
+        bits = jax.random.bits(key, tb.shape, jnp.uint32)
+        return dp_round_ref(tb, acc, bits, gain, noise_scale, w,
+                            sigma=sigma, lr_own=lr_own, lr_l=lr_l,
+                            n_owners=n_owners, theta_max=theta_max)
+    (p_tb, n) = _pack(tb, block_rows)
+    (p_acc, _) = _pack(acc, block_rows)
+    bits = jax.random.bits(key, p_tb.shape, jnp.uint32)
+    gn = jnp.asarray(gain, jnp.float32).reshape(1, 1)
+    ns = jnp.asarray(noise_scale, jnp.float32).reshape(1, 1)
+    wv = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    new_l, new_i = dp_round_2d(p_tb, p_acc, bits, gn, ns, wv, sigma=sigma,
+                               lr_own=lr_own, lr_l=lr_l, n_owners=n_owners,
+                               theta_max=theta_max, block_rows=block_rows,
+                               interpret=interpret)
+    return new_l.reshape(-1)[:n], new_i.reshape(-1)[:n]
+
+
 # --------- traced-scalar entry points for in-graph (scan-body) use ---------
 # dp_privatize_tree above is a jit boundary of its own; the deep path's
 # fused multi-round driver instead calls these INSIDE its lax.scan body,
@@ -61,16 +104,20 @@ def dp_privatize_tree(grads: Any, key, xi: float, noise_scale: float, *,
 # the mechanism's scales array.
 
 def fused_sqnorm_tree(tree: Any, *, block_rows: int = 256,
-                      interpret: bool = False) -> jax.Array:
+                      interpret=False) -> jax.Array:
     """Global squared L2 norm of a pytree via the blockwise Pallas pass."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if interpret == "oracle":
+        from repro.kernels.dp_clip_noise.ref import sqnorm_ref
+        return sum(sqnorm_ref(l) for l in leaves)
     return sum(sqnorm_2d(_pack(l, block_rows)[0], block_rows=block_rows,
                          interpret=interpret)
-               for l in jax.tree_util.tree_leaves(tree))
+               for l in leaves)
 
 
 def fused_scale_noise_tree(tree: Any, key, gain, noise_scale, *,
                            block_rows: int = 256,
-                           interpret: bool = False) -> Any:
+                           interpret=False) -> Any:
     """leaf * gain + Laplace(noise_scale) in ONE fused HBM pass per leaf.
 
     `gain` and `noise_scale` may be traced scalars (e.g. a clip factor and
@@ -80,10 +127,16 @@ def fused_scale_noise_tree(tree: Any, key, gain, noise_scale, *,
     fused backends are statistically, not bitwise, equivalent.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    if interpret == "oracle":
+        from repro.kernels.dp_clip_noise.ref import scale_noise_ref
+        out = [scale_noise_ref(l, jax.random.bits(k, l.shape, jnp.uint32),
+                               gain, noise_scale)
+               for l, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
     packed = [_pack(l, block_rows) for l in leaves]
     cs = jnp.asarray(gain, jnp.float32).reshape(1, 1)
     ns = jnp.asarray(noise_scale, jnp.float32).reshape(1, 1)
-    keys = jax.random.split(key, len(leaves))
     out = []
     for (p, n), leaf, k in zip(packed, leaves, keys):
         bits = jax.random.bits(k, p.shape, jnp.uint32)

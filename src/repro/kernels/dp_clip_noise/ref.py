@@ -21,3 +21,16 @@ def scale_noise_ref(g: jnp.ndarray, bits: jnp.ndarray, clip_scale,
 def sqnorm_ref(g: jnp.ndarray) -> jnp.ndarray:
     gf = g.astype(jnp.float32)
     return jnp.sum(gf * gf)
+
+
+def dp_round_ref(tb: jnp.ndarray, acc: jnp.ndarray, bits: jnp.ndarray,
+                 gain, noise_scale, w, *, sigma, lr_own, lr_l, n_owners,
+                 theta_max):
+    """Oracle for the fused dp_round kernel (bit-exact transform)."""
+    tbf = tb.astype(jnp.float32)
+    q = acc.astype(jnp.float32) * gain + noise_scale * laplace_from_bits(bits)
+    g_reg = sigma * tbf
+    new_i = jnp.clip(tbf - lr_own * (g_reg * (1.0 / (2 * n_owners)) + w * q),
+                     -theta_max, theta_max)
+    new_l = jnp.clip(tbf - lr_l * g_reg, -theta_max, theta_max)
+    return new_l, new_i

@@ -1,0 +1,297 @@
+"""Flat-buffer round engine: ParamFlat pack/unpack exactness, flat-vs-tree
+bit parity for both deep drivers, and donation aliasing on the flat state.
+
+The contract under test (ISSUE 3): `init_state_flat` / `pack_params=True`
+states run the paper's inertia round on ONE contiguous (P,) f32 buffer with
+an (N, P) owner bank, and with `fused_kernel=False` reproduce the pytree
+path BIT-FOR-BIT under identical per-round keys — params, bank, ledger,
+and granted-round metrics.
+"""
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.federation import (DataOwner, Federation, FederationConfig,
+                              ParamFlat, PrivatizerConfig, flatten_spec,
+                              pack_params)
+from repro.models import build_model
+
+N_OWNERS, K = 8, 24
+
+
+def _leaves(t):
+    return jax.tree_util.tree_leaves(t)
+
+
+def _assert_tree_equal(a, b):
+    assert (jax.tree_util.tree_structure(a)
+            == jax.tree_util.tree_structure(b))
+    for x, y in zip(_leaves(a), _leaves(b)):
+        assert x.shape == y.shape and x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------- pack/unpack round trip across model pytrees --------------
+@pytest.mark.parametrize("arch", list_archs())
+def test_roundtrip_every_model_architecture(arch, rng_key):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat=False, moe_mode="onehot",
+                        moe_group_tokens=16)
+    params = model.init(rng_key, jnp.float32)
+    flat = pack_params(params)
+    assert flat.buf.dtype == jnp.float32
+    assert flat.buf.shape == (flat.size,)
+    assert flat.size == sum(int(np.prod(l.shape)) if l.shape else 1
+                            for l in _leaves(params))
+    _assert_tree_equal(flat.unpack(), params)
+
+
+class _Block(NamedTuple):
+    w: jax.Array
+    gate: Optional[jax.Array]          # None leaf in the treedef
+    b: jax.Array
+
+
+def test_roundtrip_mixed_dtypes_and_none_leaves(rng_key):
+    ks = jax.random.split(rng_key, 4)
+    tree = {
+        "blk": _Block(w=jax.random.normal(ks[0], (5, 7), jnp.bfloat16),
+                      gate=None,
+                      b=jax.random.normal(ks[1], (7,), jnp.float16)),
+        "scale": jnp.float32(3.25),                      # scalar leaf
+        "deep": [jax.random.normal(ks[2], (2, 3, 4)),
+                 {"t": jax.random.normal(ks[3], (1,), jnp.bfloat16)}],
+    }
+    flat = pack_params(tree)
+    assert flat.buf.dtype == jnp.float32
+    out = flat.unpack()
+    _assert_tree_equal(out, tree)       # f16/bf16 embed exactly in f32
+    assert out["blk"].gate is None
+
+
+def test_pack_rejects_lossy_dtypes():
+    with pytest.raises(TypeError, match="cannot pack"):
+        flatten_spec({"ids": jnp.zeros((3,), jnp.int32)})
+    with pytest.raises(ValueError, match="no array leaves"):
+        flatten_spec({"empty": None})
+
+
+def test_spec_validates_structure_and_shapes(rng_key):
+    tree = {"w": jax.random.normal(rng_key, (4, 2)), "b": jnp.zeros((2,))}
+    spec = flatten_spec(tree)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        spec.pack({"w": jnp.zeros((2, 4)), "b": jnp.zeros((2,))})
+    with pytest.raises(TypeError, match="dtype mismatch"):
+        spec.pack({"w": tree["w"].astype(jnp.bfloat16),
+                   "b": tree["b"]})
+    with pytest.raises(ValueError, match="structure mismatch"):
+        spec.pack({"w": tree["w"]})
+    with pytest.raises(ValueError, match="buffer shape"):
+        spec.unpack(jnp.zeros((spec.size + 1,)))
+
+
+def test_param_flat_is_a_pytree_with_static_spec(rng_key):
+    flat = pack_params({"w": jax.random.normal(rng_key, (3, 3))})
+    doubled = jax.jit(lambda f: jax.tree_util.tree_map(lambda b: 2 * b, f))(
+        flat)
+    assert isinstance(doubled, ParamFlat)
+    assert doubled.spec == flat.spec
+    np.testing.assert_array_equal(np.asarray(doubled.buf),
+                                  2 * np.asarray(flat.buf))
+
+
+# ---------------------- flat-vs-tree bit parity ----------------------------
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6, 3)), "b": jnp.zeros((3,))}
+    batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
+               "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4, 3))}
+    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batches, loss_fn, priv
+
+
+def _make_fed(loss_fn, priv, pack, horizon=3, donate=False, bank_dtype=None,
+              **kw):
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              theta_max=10.0, lr_scale=5.0),
+                     **kw)
+    fed.make_step(loss_fn, privatizer=priv, pack_params=pack, donate=donate,
+                  bank_dtype=bank_dtype)
+    return fed
+
+
+def _assert_states_match(s_tree, s_flat):
+    spec = s_flat.theta_L.spec
+    np.testing.assert_array_equal(
+        np.asarray(spec.pack(s_tree.theta_L)), np.asarray(s_flat.theta_L.buf))
+    for i in range(N_OWNERS):
+        row = jax.tree_util.tree_map(lambda l: l[i], s_tree.bank)
+        np.testing.assert_array_equal(np.asarray(spec.pack(row)),
+                                      np.asarray(s_flat.bank[i]))
+    for f in ("spent", "cap", "refused"):
+        np.testing.assert_array_equal(np.asarray(getattr(s_tree.ledger, f)),
+                                      np.asarray(getattr(s_flat.ledger, f)))
+
+
+def test_step_loop_bit_parity_with_exhaustion(toy):
+    # horizon=3 over 8 owners with K=24 draws: refusals interleave with
+    # granted rounds, so parity covers the masking path too.
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    keys = jax.random.split(jax.random.PRNGKey(4), K)
+
+    fed_t = _make_fed(loss_fn, priv, pack=False)
+    fed_f = _make_fed(loss_fn, priv, pack=True)
+    s_t, s_f = fed_t.init_state(params), fed_f.init_state(params)
+    assert isinstance(s_f.theta_L, ParamFlat)
+    assert s_f.bank.shape == (N_OWNERS, s_f.theta_L.size)
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_t, m_t = fed_t.step(s_t, b, int(seq[k]), keys[k])
+        s_f, m_f = fed_f.step(s_f, b, int(seq[k]), keys[k])
+        assert m_t["refused"] == m_f["refused"]
+        if not m_t["refused"]:
+            assert float(m_t["clip_frac"]) == float(m_f["clip_frac"])
+            assert float(m_t["max_grad_norm"]) == float(m_f["max_grad_norm"])
+    _assert_states_match(s_t, s_f)
+    _assert_tree_equal(fed_f.params_of(s_f), s_t.theta_L)
+    assert fed_f.ledger() == fed_t.ledger()
+
+
+def test_run_rounds_bit_parity(toy):
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+
+    fed_t = _make_fed(loss_fn, priv, pack=False)
+    fed_f = _make_fed(loss_fn, priv, pack=True)
+    s_t, m_t = fed_t.run_rounds(fed_t.init_state(params), batches, seq,
+                                key=root)
+    s_f, m_f = fed_f.run_rounds(fed_f.init_state(params), batches, seq,
+                                key=root)
+    assert int(np.asarray(m_t["refused"]).sum()) > 0
+    for name in m_t:
+        np.testing.assert_array_equal(np.asarray(m_t[name]),
+                                      np.asarray(m_f[name]))
+    _assert_states_match(s_t, s_f)
+    assert fed_f.reconcile(s_f) == fed_t.reconcile(s_t)
+
+
+def test_flat_step_loop_matches_flat_fused_driver(toy):
+    # the PR 2 contract, restated on the flat engine: one scan dispatch ==
+    # the per-round loop bit-for-bit under the same per-round keys
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    keys = jax.random.split(root, K)
+
+    fed_a = _make_fed(loss_fn, priv, pack=True)
+    s_a = fed_a.init_state(params)
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_a, _ = fed_a.step(s_a, b, int(seq[k]), keys[k])
+
+    fed_b = _make_fed(loss_fn, priv, pack=True)
+    s_b, _ = fed_b.run_rounds(fed_b.init_state(params), batches, seq,
+                              key=root)
+    np.testing.assert_array_equal(np.asarray(s_a.theta_L.buf),
+                                  np.asarray(s_b.theta_L.buf))
+    np.testing.assert_array_equal(np.asarray(s_a.bank), np.asarray(s_b.bank))
+
+
+def test_fused_kernel_flat_round_in_scan_body(toy):
+    # dp_round Pallas path (interpret on CPU) inside the fused driver:
+    # finite updates, real refusal masking, binding clip.
+    params, batches, loss_fn, _ = toy
+    priv = PrivatizerConfig(xi=1e-3, granularity="microbatch",
+                            n_microbatches=2, fused_kernel=True,
+                            kernel_block_rows=8)
+    fed = _make_fed(loss_fn, priv, pack=True, horizon=2)
+    state = fed.init_state(params)
+    seq = jnp.asarray(np.arange(K) % 4, jnp.int32)      # owners 0-3, 6 each
+    state, ms = fed.run_rounds(state, batches, seq, key=jax.random.PRNGKey(6))
+    assert np.isfinite(np.asarray(state.theta_L.buf)).all()
+    granted = ~np.asarray(ms["refused"])
+    assert granted.sum() == 8                           # 2 per owner cap
+    assert np.asarray(ms["clip_frac"])[granted].min() == 1.0
+    led = fed.reconcile(state)
+    assert all(led[i]["responses"] == 2 and led[i]["refused"] == 4
+               for i in range(4))
+
+
+def test_flat_state_donation_aliasing(toy):
+    # donate=True must actually release the flat buffers: the K+1'th step
+    # reuses the K'th state's memory instead of doubling the footprint.
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, pack=True, horizon=K, donate=True)
+    state = fed.init_state(params)
+    b0 = jax.tree_util.tree_map(lambda a: a[0], batches)
+    new_state, _ = fed.step(state, b0, 0, jax.random.PRNGKey(0))
+    assert state.theta_L.buf.is_deleted()
+    assert state.bank.is_deleted()
+    assert not new_state.theta_L.buf.is_deleted()
+    # the donated state keeps working across the fused driver too
+    sub = jax.tree_util.tree_map(lambda a: a[:4], batches)
+    final, _ = fed.run_rounds(new_state, sub, jnp.zeros(4, jnp.int32),
+                              key=jax.random.PRNGKey(1))
+    assert new_state.theta_L.buf.is_deleted()
+    assert np.isfinite(np.asarray(final.theta_L.buf)).all()
+
+
+def test_bf16_bank_halves_storage_and_roundtrips_refusals(toy):
+    # bank_dtype=bf16: half the resident bank bytes; a REFUSED round's
+    # row survives the f32 gather -> bf16 scatter round trip bit-exactly,
+    # and granted rounds keep training (finite, quantized copies).
+    params, batches, loss_fn, priv = toy
+    fed32 = _make_fed(loss_fn, priv, pack=True, horizon=2)
+    fed16 = _make_fed(loss_fn, priv, pack=True, horizon=2,
+                      bank_dtype=jnp.bfloat16)
+    s32, s16 = fed32.init_state(params), fed16.init_state(params)
+    assert s16.bank.dtype == jnp.bfloat16
+    assert s16.bank.nbytes * 2 == s32.bank.nbytes
+    bank0 = np.asarray(s16.bank)
+
+    seq = jnp.asarray([0] * 6, jnp.int32)       # owner 0: 2 granted, 4 refused
+    sub = jax.tree_util.tree_map(lambda a: a[:6], batches)
+    s16, ms = fed16.run_rounds(s16, sub, seq, key=jax.random.PRNGKey(1))
+    assert np.asarray(ms["refused"]).sum() == 4
+    np.testing.assert_array_equal(np.asarray(s16.bank)[1:], bank0[1:])
+    assert np.isfinite(np.asarray(s16.theta_L.buf)).all()
+    assert fed16.reconcile(s16)[0] == {"epsilon": 1.0, "responses": 2,
+                                       "spent": 1.0, "exhausted": True,
+                                       "refused": 4}
+
+
+def test_bank_dtype_requires_flat_engine(toy):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, pack=False)
+    with pytest.raises(ValueError, match="flat-engine option"):
+        fed.init_state(params, bank_dtype=jnp.bfloat16)
+
+
+def test_init_state_pack_params_override(toy):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, pack=False)
+    flat_state = fed.init_state(params, pack_params=True)
+    assert isinstance(flat_state.theta_L, ParamFlat)
+    tree_state = fed.init_state(params)
+    assert not isinstance(tree_state.theta_L, ParamFlat)
+
+
+def test_flat_spec_equality_is_structural(toy):
+    # jit caching keys on the spec: same structure -> equal (and hashable),
+    # different structure -> unequal
+    params, _, _, _ = toy
+    spec = flatten_spec(params)
+    assert spec == flatten_spec(
+        jax.tree_util.tree_map(jnp.zeros_like, params))
+    assert hash(spec) == hash(flatten_spec(params))
+    assert spec != flatten_spec({"w": params["w"]})
