@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import relative_fitness
+from repro.federation import relative_fitness
 from repro.data import owner_shards
 from repro.federation import (Federation, FederationConfig, federate_problem,
                               with_budgets)

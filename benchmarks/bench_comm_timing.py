@@ -6,7 +6,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import timed
-from repro.core.clocks import owner_counts, poisson_schedule
+from repro.federation.clocks import owner_counts, poisson_schedule
 
 
 def run():

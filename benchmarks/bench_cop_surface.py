@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Algo1Config, fit_constants, make_problem, run_many
+from repro.core.cop import fit_constants
+from repro.federation import Algo1Config, make_problem, run_many
 from repro.core.cop import bound_asymptotic, budget_sum
 from repro.data import owner_shards
 

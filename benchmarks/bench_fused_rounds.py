@@ -14,8 +14,20 @@ Two comparisons, one workload family:
     the whole post-gradient round as a single fused pass (`dp_round`),
     measured against the reference pytree path on the same schedule at
     BOTH the dispatch-bound toy config and an MLP-scale model.
+  * sharded-vs-replicated bank (ISSUE 4): the flat engine with its state
+    laid out over the host device mesh (`make_host_mesh`) against the
+    single-device layout, at the MLP-scale config. On a 1-device host
+    this measures pure constraint overhead (~0); on a multi-device host
+    it is the mesh-sharded engine's row. The row records its mesh
+    topology in the derived metrics.
+  * grouped-vs-sequential schedule (ISSUE 4): `run_rounds` with
+    owner_parallel=True (conflict-free owner groups vmapped per scan
+    step, max_group bounds padding waste) against the strictly
+    sequential scan at 32 owners. Wins in the compute-bound MLP regime
+    (batched member GEMMs); the dispatch-bound toy regime prefers the
+    sequential scan — both are recorded.
 
-Timings are interleaved medians (the two engines alternate within each
+Timings are interleaved medians (the engines alternate within each
 repetition) so machine noise hits both alike.
 """
 from __future__ import annotations
@@ -28,6 +40,7 @@ import numpy as np
 
 from repro.federation import (DataOwner, Federation, FederationConfig,
                               PrivatizerConfig)
+from repro.launch.mesh import make_host_mesh
 
 # Dispatch-bound regime: a model small enough that per-round compute is
 # microseconds, so the measured gap is the driver overhead itself.
@@ -75,14 +88,16 @@ def _mlp_model():
 _MODELS = {"toy": _toy_model, "mlp": _mlp_model}
 
 
-def _make_fed(loss_fn, horizon, *, pack=False, fused=False, bank_dtype=None):
+def _make_fed(loss_fn, horizon, *, pack=False, fused=False, bank_dtype=None,
+              mesh=None):
     owners = [DataOwner(n=10_000, epsilon=2.0, xi=1.0)
               for _ in range(N_OWNERS)]
     fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
                                               lr_scale=5.0))
     fed.make_step(loss_fn, privatizer=PrivatizerConfig(
         xi=1.0, granularity="microbatch", n_microbatches=1,
-        fused_kernel=fused), pack_params=pack, bank_dtype=bank_dtype)
+        fused_kernel=fused), pack_params=pack, bank_dtype=bank_dtype,
+        mesh=mesh)
     return fed
 
 
@@ -106,9 +121,9 @@ def _time_loop(fed, state, batches, owner_seq, keys):
     return time.perf_counter() - t0
 
 
-def _time_fused(fed, state, batches, owner_seq, key):
+def _time_fused(fed, state, batches, owner_seq, key, **kw):
     t0 = time.perf_counter()
-    state, _ = fed.run_rounds(state, batches, owner_seq, key=key)
+    state, _ = fed.run_rounds(state, batches, owner_seq, key=key, **kw)
     jax.block_until_ready(jax.tree_util.tree_leaves(state.theta_L)[0])
     return time.perf_counter() - t0
 
@@ -149,14 +164,71 @@ def measure_flat_vs_tree(model: str, k: int, reps: int = 9):
                       bank_dtype=jnp.bfloat16)
     runs = [(fed_t, fed_t.init_state(params)),
             (fed_f, fed_f.init_state(params))]
-    for fed, st in runs:                                       # compile
-        _time_fused(fed, st, batches, owner_seq, root)
-    times = [[], []]
-    for _ in range(reps):
-        for i, (fed, st) in enumerate(runs):
-            times[i].append(_time_fused(fed, st, batches, owner_seq, root))
-    dt_tree, dt_flat = (float(np.median(ts)) for ts in times)
+    dt_tree, dt_flat = _interleaved(runs, batches, owner_seq, root, reps)
     return dt_tree, dt_flat
+
+
+def _interleaved(runs, batches, owner_seq, root, reps, kws=None):
+    """Median seconds per engine, engines alternating within each rep."""
+    kws = kws or [{}] * len(runs)
+    for (fed, st), kw in zip(runs, kws):                       # compile
+        _time_fused(fed, st, batches, owner_seq, root, **kw)
+    times = [[] for _ in runs]
+    for _ in range(reps):
+        for i, ((fed, st), kw) in enumerate(zip(runs, kws)):
+            times[i].append(
+                _time_fused(fed, st, batches, owner_seq, root, **kw))
+    return [float(np.median(ts)) for ts in times]
+
+
+def _mesh_label(mesh) -> str:
+    return "x".join(f"{name}{size}" for name, size in
+                    zip(mesh.axis_names, mesh.devices.shape))
+
+
+def measure_sharded_vs_replicated(model: str, k: int, reps: int = 9):
+    """Interleaved-median rounds/sec of the mesh-sharded flat engine
+    (state laid out by flat_shardings over the host mesh, constraints in
+    the scan body) against the single-device flat engine, production
+    configuration (dp_round fused pass + bf16 bank) on both sides."""
+    params, loss_fn, dim, batch = _MODELS[model]()
+    batches = _batches(k, dim, batch)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    mesh = make_host_mesh(model=2 if len(jax.devices()) % 2 == 0 else 1)
+
+    fed_r = _make_fed(loss_fn, 4 * k, pack=True, fused=True,
+                      bank_dtype=jnp.bfloat16)
+    fed_s = _make_fed(loss_fn, 4 * k, pack=True, fused=True,
+                      bank_dtype=jnp.bfloat16, mesh=mesh)
+    runs = [(fed_r, fed_r.init_state(params)),
+            (fed_s, fed_s.init_state(params))]
+    dt_rep, dt_shard = _interleaved(runs, batches, owner_seq, root, reps)
+    return dt_rep, dt_shard, _mesh_label(mesh)
+
+
+def measure_grouped(model: str, k: int, reps: int = 9, max_group: int = 6):
+    """Interleaved-median rounds/sec of owner-parallel grouped execution
+    (conflict-free owner groups vmapped per scan step) against the
+    sequential scan, same schedule/keys, production flat configuration.
+    `max_group` bounds group padding waste — unbounded maximal groups pad
+    every group to the longest (≈2x wasted member slots at 32 owners)."""
+    params, loss_fn, dim, batch = _MODELS[model]()
+    batches = _batches(k, dim, batch)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+
+    # one Federation serves both drivers (make_step builds the sequential
+    # AND grouped programs; the kwarg picks at dispatch) — a second one
+    # would just re-jit identical programs
+    fed = _make_fed(loss_fn, 4 * k, pack=True, fused=True,
+                    bank_dtype=jnp.bfloat16)
+    runs = [(fed, fed.init_state(params)), (fed, fed.init_state(params))]
+    kws = [{}, dict(owner_parallel=True, max_group=max_group)]
+    dt_seq, dt_grp = _interleaved(runs, batches, owner_seq, root, reps, kws)
+    from repro.federation.schedules import partition_conflict_free
+    n_groups = len(partition_conflict_free(np.asarray(owner_seq), max_group))
+    return dt_seq, dt_grp, n_groups
 
 
 def derived_row(dt_loop: float, dt_fused: float, k: int) -> str:
@@ -169,6 +241,18 @@ def flat_row(dt_tree: float, dt_flat: float, k: int) -> str:
     return (f"rounds_per_sec_flat={k / dt_flat:.0f};"
             f"rounds_per_sec_tree={k / dt_tree:.0f};"
             f"speedup={dt_tree / dt_flat:.2f}x")
+
+
+def sharded_row(dt_rep: float, dt_shard: float, k: int, mesh: str) -> str:
+    return (f"rounds_per_sec_sharded={k / dt_shard:.0f};"
+            f"rounds_per_sec_replicated={k / dt_rep:.0f};"
+            f"speedup={dt_rep / dt_shard:.2f}x;mesh={mesh}")
+
+
+def grouped_row(dt_seq: float, dt_grp: float, k: int, n_groups: int) -> str:
+    return (f"rounds_per_sec_grouped={k / dt_grp:.0f};"
+            f"rounds_per_sec_sequential={k / dt_seq:.0f};"
+            f"speedup={dt_seq / dt_grp:.2f}x;n_groups={n_groups}")
 
 
 def run(fast: bool = False):
@@ -185,6 +269,18 @@ def run(fast: bool = False):
         dt_tree, dt_flat = measure_flat_vs_tree(model, k, reps=reps)
         rows.append((f"fused_rounds/flat_vs_tree/{model}/K{k}",
                      dt_flat / k * 1e6, flat_row(dt_tree, dt_flat, k)))
+    k = 24 if fast else 64
+    dt_rep, dt_shard, mesh = measure_sharded_vs_replicated("mlp", k,
+                                                           reps=reps)
+    rows.append((f"fused_rounds/sharded_vs_replicated/mlp/K{k}",
+                 dt_shard / k * 1e6, sharded_row(dt_rep, dt_shard, k, mesh)))
+    # the grouped win needs enough rounds to amortize the padded groups'
+    # compile: K=64 in both modes (K=24 measures ~1.0x, see ISSUE 4)
+    kg = 64
+    dt_seq, dt_grp, n_groups = measure_grouped("mlp", kg, reps=reps)
+    rows.append((f"fused_rounds/grouped_vs_sequential/mlp/K{kg}",
+                 dt_grp / kg * 1e6, grouped_row(dt_seq, dt_grp, kg,
+                                                n_groups)))
     return rows
 
 

@@ -40,14 +40,33 @@ def parse_derived(derived: str) -> Dict[str, Union[float, str]]:
     return out
 
 
+def env_meta() -> dict:
+    """Where this measurement ran: platform, device kind and count.
+    Without it the cross-PR BENCH_*.json trajectory silently compares a
+    laptop CPU against an 8-way forced-device host or a TPU pod. Rows
+    measured on a mesh record their actual topology themselves (a
+    `mesh=dataXxmodelY` derived entry) — the topology is a per-row
+    choice, not a host fact."""
+    import jax
+    devs = jax.devices()
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": devs[0].device_kind,
+        "device_count": len(devs),
+    }
+
+
 def bench_json(suite: str, rows: List[Row], elapsed_s: float) -> dict:
     """Machine-readable suite result (one BENCH_<suite>.json per suite):
     us/call (us/round for the round suites) plus every derived metric —
-    rounds/sec included — parsed into numbers, so the perf trajectory is
-    diffable across PRs."""
+    rounds/sec included — parsed into numbers, and the device
+    environment, so the perf trajectory is diffable across PRs. Rows
+    measured on a mesh carry their own `mesh=...` derived entry (e.g.
+    the sharded-bank rows)."""
     return {
         "suite": suite,
         "elapsed_s": round(elapsed_s, 3),
+        "env": env_meta(),
         "rows": [{"name": n, "us_per_call": round(u, 3),
                   "derived": parse_derived(d)} for n, u, d in rows],
     }

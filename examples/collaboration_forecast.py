@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fit_constants, min_owners_for_benefit, relative_fitness
+from repro.core.cop import fit_constants, min_owners_for_benefit
+from repro.federation import relative_fitness
 from repro.core.cop import budget_sum
 from repro.data import owner_shards
 from repro.federation import Federation, FederationConfig, federate_problem

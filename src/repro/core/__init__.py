@@ -1,15 +1,48 @@
 # The paper's primary contribution: asynchronous differentially-private
 # collaborative learning (Algorithm 1 + Theorems 1-2) and its pod-scale
 # adaptation (AsyncDPTrainer with a sharded owner-copy bank).
-from repro.core.algorithm1 import Algo1Config, Algo1Trace, run_algorithm1, run_many
-from repro.core.async_trainer import (AsyncDPConfig, AsyncDPState, init_state,
-                                      make_sync_dp_step, make_train_step)
-from repro.core.clocks import Schedule, poisson_schedule, uniform_schedule
+#
+# Every name except the cop module's lives in repro.federation now; the
+# submodules here are deprecated shims that warn on import. The package
+# surface re-exports LAZILY (PEP 562) so `from repro.core import
+# bound_asymptotic` — cop was never moved and has no federation
+# replacement — does not trip six shim warnings for modules it never
+# touches; accessing a MOVED name still imports its shim and warns.
 from repro.core.cop import (bound_asymptotic, bound_theorem2, budget_sum,
                             fit_constants, min_owners_for_benefit)
-from repro.core.dp_sgd import PrivatizerConfig, clip_tree, private_grad
-from repro.core.linear import (LinearProblem, Owner, fitness, make_problem,
-                               owner_grad, record_grad_bound, relative_fitness)
-from repro.core.privacy import (PrivacyAccountant, capped_rounds,
-                                laplace_noise, laplace_noise_tree,
-                                laplace_scale_theorem1)
+
+_SHIMMED = {
+    "algorithm1": ("Algo1Config", "Algo1Trace", "run_algorithm1",
+                   "run_many"),
+    "async_trainer": ("AsyncDPConfig", "AsyncDPState", "init_state",
+                      "make_sync_dp_step", "make_train_step"),
+    "clocks": ("Schedule", "poisson_schedule", "uniform_schedule"),
+    "dp_sgd": ("PrivatizerConfig", "clip_tree", "private_grad"),
+    "linear": ("LinearProblem", "Owner", "fitness", "make_problem",
+               "owner_grad", "record_grad_bound", "relative_fitness"),
+    "privacy": ("PrivacyAccountant", "capped_rounds", "laplace_noise",
+                "laplace_noise_tree", "laplace_scale_theorem1"),
+}
+_NAME_TO_MODULE = {name: mod for mod, names in _SHIMMED.items()
+                   for name in names}
+__all__ = sorted(set(_NAME_TO_MODULE) | {
+    "bound_asymptotic", "bound_theorem2", "budget_sum", "fit_constants",
+    "min_owners_for_benefit"})
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SHIMMED:
+        # the eager surface also bound the submodules themselves
+        # (`repro.core.clocks.uniform_schedule` worked without importing
+        # the submodule); keep that working — the import warns
+        return importlib.import_module(f"repro.core.{name}")
+    module = _NAME_TO_MODULE.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.core' has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(f"repro.core.{module}"), name)
+
+
+def __dir__():
+    return __all__

@@ -3,6 +3,13 @@
 session-level entrypoint is ``repro.federation.Federation`` (pluggable
 Mechanism + Schedule, ledger inside); this module keeps the old names
 importable and behaving exactly as before."""
+import warnings
+
+warnings.warn(
+    "repro.core.algorithm1 is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.federation.convex import (Algo1Config, Algo1Trace, run_algorithm1,
                                      run_many)
 

@@ -3,6 +3,13 @@
 from ``repro.federation`` instead; this module keeps the old names
 importable. The session-level pluggable schedules (uniform / Poisson /
 availability-trace) live in ``repro.federation.schedules``."""
+import warnings
+
+warnings.warn(
+    "repro.core.clocks is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.federation.clocks import (Schedule, owner_counts,
                                      poisson_schedule, uniform_schedule)
 

@@ -2,6 +2,13 @@
 ``repro.federation.dp_sgd`` as part of the unified federation API. Import
 from ``repro.federation`` instead; this module keeps the old names
 importable."""
+import warnings
+
+warnings.warn(
+    "repro.core.dp_sgd is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.federation.dp_sgd import (LossFn, PrivatizerConfig, clip_tree,
                                      private_grad)
 

@@ -3,6 +3,13 @@
 from ``repro.federation`` instead; this module keeps the old names
 importable. The session-level pluggable mechanisms (with the accountant
 inside) live in ``repro.federation.mechanisms``."""
+import warnings
+
+warnings.warn(
+    "repro.core.privacy is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.federation.privacy import (OwnerLedger, PrivacyAccountant,
                                       capped_rounds, laplace_noise,
                                       laplace_noise_tree,

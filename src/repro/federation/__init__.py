@@ -11,7 +11,8 @@ from repro.federation.convex import (Algo1Config, Algo1Trace, SyncTrace,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
                                    init_state_flat, make_fused_rounds,
-                                   make_sync_dp_step, make_train_step)
+                                   make_group_rounds, make_sync_dp_step,
+                                   make_train_step)
 from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
                                      private_grad, resolve_interpret)
 from repro.federation.flatten import (FlatSpec, ParamFlat, flatten_spec,
@@ -31,5 +32,6 @@ from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
                                       make_device_ledger)
 from repro.federation.schedules import (AvailabilityTraceSchedule,
                                         PoissonSchedule, ScheduleProtocol,
-                                        UniformSchedule, as_owner_seq)
+                                        UniformSchedule, as_owner_seq,
+                                        pack_groups, partition_conflict_free)
 from repro.federation.session import Federation

@@ -24,7 +24,7 @@ compatibility shim over this module. The session-level entrypoint is
 pluggable ``Mechanism`` (whose internal ledger refuses budget-exhausted
 owners before the step is ever called).
 
-Two drivers share the exact same round math (`_round_math`):
+Three drivers share the exact same round math (`_round_math`):
 
   make_train_step   — one host-authorized round per dispatch (the
                       mechanism's Python ledger decides refusal).
@@ -35,6 +35,20 @@ Two drivers share the exact same round math (`_round_math`):
                       thousands of asynchronous rounds run without a host
                       round-trip. Bit-for-bit equal to the per-round loop
                       under the same per-round keys.
+  make_group_rounds — owner-parallel mode: lax.scan over CONFLICT-FREE
+                      round groups (consecutive rounds with distinct
+                      owners, see schedules.partition_conflict_free), vmap
+                      over the members of each group, ONE inertia
+                      reduction of theta_L per group. Ledger spend is
+                      exactly the sequential scan's; theta_L takes the
+                      mean of the group's eq.(7) targets (a documented,
+                      bounded deviation that vanishes at group size 1).
+
+Every driver accepts `mesh=None`: given a Mesh, flat states are pinned to
+the `repro.sharding.rules.flat_shardings` layout (bank rows over the data
+axes, P like the model) with `jax.lax.with_sharding_constraint` INSIDE the
+scan bodies, so the bank row gather/scatter stays local in P and the scan
+carry never gathers to one device.
 """
 from __future__ import annotations
 
@@ -98,7 +112,7 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
 
 
 def init_state_flat(params, cfg: AsyncDPConfig,
-                    bank_dtype=None) -> AsyncDPState:
+                    bank_dtype=None, mesh=None) -> AsyncDPState:
     """Flat-buffer state: theta_L is a ParamFlat (one contiguous (P,) f32
     buffer) and the owner bank is a single (N_owners, P) matrix, so bank
     gather/scatter is one row slice instead of per-leaf dynamic indexing.
@@ -107,13 +121,58 @@ def init_state_flat(params, cfg: AsyncDPConfig,
     `bank_dtype` (None = float32) narrows the bank STORAGE only — e.g.
     bf16 halves the N*P resident bytes and the fused scan's loop-carry
     traffic; rows upcast to f32 on gather. f32 keeps the bit-parity
-    contract with the tree path."""
+    contract with the tree path.
+
+    `mesh` (None = single-device) lays the state out under the
+    repro.sharding.rules.flat_shardings rules: bank rows over the data
+    axes, P like the model, ledger counters replicated. Pass the same
+    mesh to the driver builders so the scan bodies keep the layout."""
     if cfg.init_bank_zero:
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
     flat = pack_params(params)
-    return AsyncDPState(flat, init_flat_bank(flat, cfg.n_owners, bank_dtype),
-                        jnp.zeros((), jnp.int32),
-                        make_device_ledger(cfg.effective_caps))
+    ledger = make_device_ledger(cfg.effective_caps)
+    if mesh is None:
+        bank = init_flat_bank(flat, cfg.n_owners, bank_dtype)
+    else:
+        if (mesh.devices.size > 1
+                and not jax.config.jax_threefry_partitionable):
+            import warnings
+            warnings.warn(
+                "multi-device federation without "
+                "jax_threefry_partitionable: the legacy threefry lowering "
+                "re-associates counters under SPMD partitioning, so noise "
+                "draws (still lawful Laplace samples) differ from the "
+                "single-device program under the same keys; enable "
+                "jax.config.update('jax_threefry_partitionable', True) "
+                "for topology-independent draws", UserWarning,
+                stacklevel=2)
+        from repro.sharding.rules import flat_shardings
+        sh = flat_shardings(mesh, cfg.n_owners, flat.size)
+        flat = ParamFlat(jax.device_put(flat.buf, sh.theta), flat.spec)
+        bank = init_flat_bank(flat, cfg.n_owners, bank_dtype,
+                              sharding=sh.bank)
+        ledger = jax.device_put(ledger, sh.ledger)
+    return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger)
+
+
+def _flat_shardings_for(mesh, theta_L, bank):
+    """FlatShardings for a flat state on `mesh` (None for tree states or
+    no mesh). Called at TRACE time — shapes are static there, so the
+    divisibility degrades in the rules see the real N and P."""
+    if mesh is None or not isinstance(theta_L, ParamFlat):
+        return None
+    from repro.sharding.rules import flat_shardings
+    return flat_shardings(mesh, bank.shape[0], theta_L.size)
+
+
+def _constrain(x, sharding):
+    """with_sharding_constraint that understands ParamFlat and None."""
+    if sharding is None:
+        return x
+    if isinstance(x, ParamFlat):
+        return x.replace_buf(
+            jax.lax.with_sharding_constraint(x.buf, sharding))
+    return jax.lax.with_sharding_constraint(x, sharding)
 
 
 def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
@@ -250,7 +309,7 @@ def _flat_clipped_grad_acc(loss_fn, spec: FlatSpec, pcfg: PrivatizerConfig,
 
 
 def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
-                     tree_inner):
+                     tree_inner, mesh=None):
     """The same inertia round over the flat representation.
 
     With `privatizer.fused_kernel=False` this is the REFERENCE mode: the
@@ -278,8 +337,13 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
 
     def compute(theta_L: ParamFlat, bank, batch, owner_idx, key):
         spec = theta_L.spec
+        sh = _flat_shardings_for(mesh, theta_L, bank)
         theta_i = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0,
                                                keepdims=False)     # (P,)
+        if sh is not None:
+            # the gathered row keeps the bank's P-axis layout (== theta's),
+            # so theta_bar and the whole round stay local in P
+            theta_i = jax.lax.with_sharding_constraint(theta_i, sh.row)
         if pcfg.fused_kernel:
             if pcfg.mechanism != "laplace":
                 raise ValueError(
@@ -299,8 +363,17 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
                        "max_grad_norm": pm["max_grad_norm"],
                        "grad_noise_scale": ns}
         else:
-            tl_tree, ti_tree = jax.lax.optimization_barrier(
-                (spec.unpack(theta_L.buf), spec.unpack(theta_i)))
+            try:
+                tl_tree, ti_tree = jax.lax.optimization_barrier(
+                    (spec.unpack(theta_L.buf), spec.unpack(theta_i)))
+            except NotImplementedError:
+                # no batching rule for the barrier (vmapped by the
+                # owner-parallel grouped driver). The barrier is
+                # semantically identity — only an anti-fusion hint that
+                # protects the scan-carry BIT-parity contract, which the
+                # grouped mode does not promise for groups > 1 anyway.
+                tl_tree, ti_tree = (spec.unpack(theta_L.buf),
+                                    spec.unpack(theta_i))
             new_L_t, new_i_t, metrics = tree_inner(tl_tree, ti_tree, batch,
                                                    owner_idx, key)
             new_L, new_i = spec.pack(new_L_t), spec.pack(new_i_t)
@@ -309,13 +382,14 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     return compute
 
 
-def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
+def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
+                   mesh=None):
     """Dispatch the round math on the state representation: ParamFlat
     states run the flat engine, pytree states the reference tree path.
-    Both drivers share this, so one built step function serves either
+    All drivers share this, so one built step function serves either
     state kind (jit specializes per structure)."""
     tree_c = _round_math(loss_fn, cfg, scales)
-    flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner)
+    flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner, mesh=mesh)
 
     def compute(theta_L, bank, batch, owner_idx, key):
         if isinstance(theta_L, ParamFlat):
@@ -336,7 +410,7 @@ def _write_bank(bank, value, owner_idx):
 
 
 def make_train_step(loss_fn, cfg: AsyncDPConfig,
-                    scales: Optional[jax.Array] = None):
+                    scales: Optional[jax.Array] = None, mesh=None):
     """Returns step(state, batch, owner_idx, key) -> (state, metrics).
 
     loss_fn(params, batch) -> scalar. batch holds ONE owner's microbatch.
@@ -347,15 +421,20 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
 
     States built by `init_state_flat` (ParamFlat theta_L + (N, P) bank) run
     the flat-buffer engine; pytree states run the reference tree path —
-    the same returned step function serves both.
+    the same returned step function serves both. `mesh` pins flat states
+    to the flat_shardings layout (see module docstring).
     """
-    compute = _round_compute(loss_fn, cfg, scales)
+    compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
 
     def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
              ) -> Tuple[AsyncDPState, Dict]:
+        sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         new_L, new_i, _, metrics = compute(state.theta_L, state.bank,
                                            batch, owner_idx, key)
         bank = _write_bank(state.bank, new_i, owner_idx)
+        if sh is not None:
+            new_L = _constrain(new_L, sh.theta)
+            bank = _constrain(bank, sh.bank)
         return AsyncDPState(new_L, bank, state.step + 1,
                             state.ledger), metrics
 
@@ -363,7 +442,7 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
 
 
 def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
-                      scales: Optional[jax.Array] = None):
+                      scales: Optional[jax.Array] = None, mesh=None):
     """Device-resident multi-round driver: K rounds in ONE dispatch.
 
     Returns run(state, batches, owner_seq, keys) -> (state, metrics) where
@@ -380,12 +459,16 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
     `make_train_step`, so a fused schedule reproduces the per-round loop
     bit-for-bit under the same per-round keys. Flat states (see
     `init_state_flat`) run the flat-buffer engine inside the same scan.
+    `mesh` pins flat states to the flat_shardings layout: the constraint
+    sits INSIDE the scan body, so the carry stays distributed across all
+    K rounds (no per-round gather, no host transfer of the bank).
     """
-    compute = _round_compute(loss_fn, cfg, scales)
+    compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
 
     def body(state: AsyncDPState, xs):
         batch, owner_idx, key = xs
         led = state.ledger
+        sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         ok = led.authorized(owner_idx)
         oki = ok.astype(jnp.int32)
         new_L, new_i, theta_i, metrics = compute(state.theta_L, state.bank,
@@ -397,6 +480,9 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
             jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
                                    new_i, theta_i),
             owner_idx)
+        if sh is not None:
+            theta_L = _constrain(theta_L, sh.theta)
+            bank = _constrain(bank, sh.bank)
         ledger = led.replace(spent=led.spent.at[owner_idx].add(oki),
                              refused=led.refused.at[owner_idx].add(1 - oki))
         metrics = dict(metrics)
@@ -409,6 +495,123 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
                 "fused rounds need a device ledger on the state; build the "
                 "state with init_state / Federation.init_state")
         return jax.lax.scan(body, state, (batches, owner_seq, keys))
+
+    return run
+
+
+def _member_mask(mask, like):
+    """(G,) bool -> broadcastable against a (G, ...) stacked leaf."""
+    return mask.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def _write_bank_rows(bank, rows, owner_idx):
+    """Scatter a GROUP of rows at once. `owner_idx` entries are distinct
+    among valid members (the conflict-free partition guarantees it);
+    padded members carry an out-of-range index and are dropped."""
+    if isinstance(bank, jax.Array):    # flat (N, P) bank
+        return bank.at[owner_idx].set(rows.astype(bank.dtype), mode="drop")
+    return jax.tree_util.tree_map(
+        lambda l, v: l.at[owner_idx].set(v.astype(l.dtype), mode="drop"),
+        bank, rows)
+
+
+def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
+                      scales: Optional[jax.Array] = None, mesh=None):
+    """Owner-parallel multi-round driver: lax.scan over CONFLICT-FREE round
+    groups, vmap over the members of each group.
+
+    Returns run(state, batches, owner_seq, keys, group_idx, group_valid)
+    -> (state, metrics) where batches/owner_seq/keys are the (K,)-leading
+    inputs of `make_fused_rounds` and (group_idx, group_valid) are the
+    (n_groups, G_max) arrays from `schedules.pack_groups`: group_idx[g]
+    holds the round indices of group g, group_valid masks padding.
+    Metrics come back GROUP-MAJOR ((n_groups, G_max) leading) — the
+    session scatters them back to round order.
+
+    Semantics vs the sequential scan, for groups whose owners are all
+    distinct (the partition's invariant):
+
+      * Ledger spend is EXACTLY sequential. Authorization depends only on
+        the owner's prior grant count, and an owner appears at most once
+        per group, so every member sees the same count it would have seen
+        sequentially. Spent/refused land via a disjoint scatter.
+      * Bank rows are disjoint: each granted member writes its own
+        eq.(5) copy computed from the group-entry theta_L.
+      * theta_L takes ONE inertia reduction per group: the mean of the
+        granted members' eq.(7) targets. The mean of projected targets
+        stays inside Theta (convex), and for a single granted member
+        reduces to sum/1.0 — exactly that member's sequential update.
+        For larger groups every member sees the group-entry theta_L
+        instead of its sequential predecessor: a bounded deviation of
+        the same character as the paper's own asynchrony (stale reads),
+        measured in the benchmarks and tests, NOT a change to the noise
+        or the privacy accounting.
+    """
+    compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
+    n_owners = cfg.n_owners
+
+    def body(state: AsyncDPState, xs):
+        batch_g, owners, keys_g, valid = xs
+        led = state.ledger
+        sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        theta_L, bank = state.theta_L, state.bank
+        ok = jax.vmap(led.authorized)(owners) & valid          # (G,)
+        oki = ok.astype(jnp.int32)
+
+        def members(args):
+            b_g, ow, ks = args
+            return jax.vmap(
+                lambda b, o, k: compute(theta_L, bank, b, o, k))(b_g, ow, ks)
+
+        # fully-invalid groups exist only as jit-cache shape padding (the
+        # session pads n_groups to a bucket so schedule-drawn partitions
+        # don't recompile every dispatch); skip their member compute at
+        # runtime — every downstream write is masked, so zeros are inert
+        operands = (batch_g, owners, keys_g)
+        zeros = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            jax.eval_shape(members, operands))
+        new_L, new_i, theta_i, metrics = jax.lax.cond(
+            valid.any(), members, lambda _: zeros, operands)
+
+        # refused/padded members write their own row back unchanged
+        rows = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(_member_mask(ok, a), a, b),
+            new_i, theta_i)
+        owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
+        bank = _write_bank_rows(bank, rows, owners_w)
+
+        # single inertia reduction: mean of the granted eq.(7) targets
+        n_ok = jnp.sum(ok.astype(jnp.float32))
+        denom = jnp.maximum(n_ok, 1.0)
+
+        def reduce_theta(stacked, base):
+            s = jnp.sum(jnp.where(_member_mask(ok, stacked), stacked,
+                                  jnp.zeros_like(stacked)), axis=0) / denom
+            return jnp.where(n_ok > 0, s.astype(base.dtype), base)
+
+        theta_L = jax.tree_util.tree_map(reduce_theta, new_L, theta_L)
+        if sh is not None:
+            theta_L = _constrain(theta_L, sh.theta)
+            bank = _constrain(bank, sh.bank)
+        ledger = led.replace(
+            spent=led.spent.at[owners_w].add(oki, mode="drop"),
+            refused=led.refused.at[owners_w].add(
+                (valid & ~ok).astype(jnp.int32), mode="drop"))
+        metrics = dict(metrics)
+        metrics.update(refused=~ok, owner=owners)
+        return AsyncDPState(theta_L, bank, state.step + jnp.sum(oki),
+                            ledger), metrics
+
+    def run(state: AsyncDPState, batches, owner_seq, keys, group_idx,
+            group_valid):
+        if state.ledger is None:
+            raise ValueError(
+                "grouped rounds need a device ledger on the state; build "
+                "the state with init_state / Federation.init_state")
+        xs = (jax.tree_util.tree_map(lambda a: a[group_idx], batches),
+              owner_seq[group_idx], keys[group_idx], group_valid)
+        return jax.lax.scan(body, state, xs)
 
     return run
 

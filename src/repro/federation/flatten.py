@@ -76,11 +76,32 @@ class FlatSpec:
                                 f"spec has {dt}")
         return leaves
 
-    def pack(self, tree) -> jax.Array:
-        """Pytree -> (P,) f32 buffer. Exact (see module docstring)."""
+    def pack(self, tree, sharding=None) -> jax.Array:
+        """Pytree -> (P,) f32 buffer. Exact (see module docstring).
+
+        `sharding` (a NamedSharding, e.g. `FlatShardings.theta` from
+        repro.sharding.rules) lays the buffer out on the mesh: under a
+        trace it becomes a `with_sharding_constraint` (so packing inside
+        a jitted round keeps the buffer sharded instead of gathering it),
+        eagerly it reshards the concrete array. Values are identical
+        either way.
+
+        Implementation note: the buffer is assembled with a chain of
+        static dynamic_update_slice ops, NOT one jnp.concatenate. The
+        placement is bit-identical, but XLA:CPU's SPMD partitioner
+        (jaxlib 0.4.3x) miscompiles concatenate of slices of a PARTIALLY
+        sharded operand — e.g. a (P,) buffer sharded over 'model' on a
+        (data, model) mesh comes back scaled by the unused axis size —
+        while the update-slice chain lowers to local writes under every
+        sharding (verified by the sharded-engine parity tests)."""
         leaves = self.validate(tree)
-        return jnp.concatenate(
-            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+        buf = jnp.zeros((self.size,), jnp.float32)
+        for off, leaf in zip(self.offsets, leaves):
+            buf = jax.lax.dynamic_update_slice(
+                buf, jnp.ravel(leaf).astype(jnp.float32), (off,))
+        if sharding is not None:
+            buf = jax.lax.with_sharding_constraint(buf, sharding)
+        return buf
 
     def unpack(self, buf: jax.Array) -> Any:
         """(P,) buffer -> pytree with the original shapes/dtypes."""
@@ -144,14 +165,15 @@ class ParamFlat:
                 f"n_leaves={self.spec.n_leaves})")
 
 
-def pack_params(tree, spec: FlatSpec = None) -> ParamFlat:
-    """Pack a model pytree into a ParamFlat (spec inferred if omitted)."""
+def pack_params(tree, spec: FlatSpec = None, sharding=None) -> ParamFlat:
+    """Pack a model pytree into a ParamFlat (spec inferred if omitted).
+    `sharding` lays the buffer out on a mesh (see FlatSpec.pack)."""
     spec = flatten_spec(tree) if spec is None else spec
-    return ParamFlat(spec.pack(tree), spec)
+    return ParamFlat(spec.pack(tree, sharding=sharding), spec)
 
 
 def init_flat_bank(flat: ParamFlat, n_owners: int,
-                   dtype=None) -> jax.Array:
+                   dtype=None, sharding=None) -> jax.Array:
     """(N_owners, P) owner-copy bank, every row the central buffer.
 
     `dtype` (default float32) is the bank STORAGE dtype. The bank is the
@@ -161,6 +183,14 @@ def init_flat_bank(flat: ParamFlat, n_owners: int,
     re-quantized on scatter (a refused round's untouched row round-trips
     exactly). Only f32 storage preserves the flat-vs-tree bit-parity
     contract — narrower banks are a recorded (opt-in) deviation.
+
+    `sharding` (e.g. `FlatShardings.bank`: owner rows over the data axes,
+    P like the model) materializes the bank already distributed — the
+    broadcast never exists replicated on one device.
     """
     bank = jnp.broadcast_to(flat.buf[None], (n_owners, flat.size))
-    return bank if dtype is None else bank.astype(dtype)
+    if dtype is not None:
+        bank = bank.astype(dtype)
+    if sharding is not None:
+        bank = jax.lax.with_sharding_constraint(bank, sharding)
+    return bank

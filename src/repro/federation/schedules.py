@@ -30,10 +30,11 @@ implementations of the same one-method protocol.
 from __future__ import annotations
 
 import dataclasses
-from typing import Protocol, Tuple, runtime_checkable
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.federation.clocks import (Schedule, poisson_schedule,
                                      uniform_schedule)
@@ -61,6 +62,63 @@ def as_owner_seq(seq, n_owners: int) -> jax.Array:
         raise ValueError(
             f"owner sequence out of range for {n_owners} owners")
     return seq.astype(jnp.int32)
+
+
+# ------------------ schedule analysis: conflict-free groups ----------------
+# Rounds touching DISTINCT owners only interact through theta_L (each reads
+# and writes its own bank row), so a run of consecutive rounds with no
+# repeated owner can execute as one owner-parallel batch. These two helpers
+# are the host-side analysis pass behind `Federation.run_rounds(...,
+# owner_parallel=True)`: partition the (K,) sequence into maximal
+# conflict-free groups, then pack the groups into the rectangular
+# (n_groups, G_max) index/mask arrays the grouped driver scans over.
+
+def partition_conflict_free(owner_seq,
+                            max_group: Optional[int] = None
+                            ) -> List[Tuple[int, int]]:
+    """Greedy maximal partition of a CONCRETE (K,) owner sequence into
+    consecutive (start, length) groups with all-distinct owners.
+
+    Greedy left-to-right is optimal here (fewest groups): a group ends
+    exactly when the next owner would repeat — ending it earlier can never
+    reduce the group count. `max_group` caps group length (max_group=1
+    degenerates to the sequential schedule). Host-side by design: this is
+    the schedule-analysis pass, run once per dispatch, not per round."""
+    seq = np.asarray(owner_seq)
+    if seq.ndim != 1:
+        raise ValueError(f"owner sequence must be 1-D, got {seq.shape}")
+    if max_group is not None and max_group < 1:
+        raise ValueError(f"max_group must be >= 1, got {max_group}")
+    groups: List[Tuple[int, int]] = []
+    start, seen = 0, set()
+    for k, o in enumerate(seq.tolist()):
+        if o in seen or (max_group is not None and k - start >= max_group):
+            groups.append((start, k - start))
+            start, seen = k, {o}
+        else:
+            seen.add(o)
+    if len(seq) > start:
+        groups.append((start, len(seq) - start))
+    return groups
+
+
+def pack_groups(groups: List[Tuple[int, int]]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """(start, length) groups -> (idx, valid), both (n_groups, G_max).
+
+    `idx[g, j]` is the ROUND index of member j of group g (so `a[idx]`
+    gathers any (K,)-leading array into group-major layout); padding
+    repeats round index 0 with `valid=False` — the grouped driver masks
+    padded members out of every write."""
+    if not groups:
+        return (np.zeros((0, 1), np.int32), np.zeros((0, 1), bool))
+    gmax = max(length for _, length in groups)
+    idx = np.zeros((len(groups), gmax), np.int32)
+    valid = np.zeros((len(groups), gmax), bool)
+    for g, (start, length) in enumerate(groups):
+        idx[g, :length] = np.arange(start, start + length)
+        valid[g, :length] = True
+    return idx, valid
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,14 +44,17 @@ from repro.federation.convex import (Algo1Trace, SyncTrace, scan_engine,
                                      stack_gram, sync_scan_engine)
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
                                    init_state_flat, make_fused_rounds,
-                                   make_sync_dp_step, make_train_step)
+                                   make_group_rounds, make_sync_dp_step,
+                                   make_train_step)
 from repro.federation.flatten import ParamFlat
 from repro.federation.dp_sgd import PrivatizerConfig
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
 from repro.federation.owners import DataOwner
 from repro.federation.schedules import (ScheduleProtocol, UniformSchedule,
-                                        as_owner_seq)
+                                        as_owner_seq,
+                                        pack_groups,
+                                        partition_conflict_free)
 
 _STRATEGIES = ("async", "sync")
 
@@ -72,8 +75,10 @@ class Federation:
                                         cap_slack=cap_slack)
         self._step_fn = None
         self._fused_fn = None
+        self._group_fn = None
         self._pack_params = False
         self._bank_dtype = None
+        self._mesh = None
         self._ran = False
 
     def _claim_session(self):
@@ -186,7 +191,7 @@ class Federation:
             caps=None if cap is None else (cap,) * self.n_owners)
 
     def init_state(self, params, pack_params: Optional[bool] = None,
-                   bank_dtype=None) -> AsyncDPState:
+                   bank_dtype=None, mesh=None) -> AsyncDPState:
         """Build the deep-path training state. `pack_params=None` follows
         the flag given to make_step (default tree); True packs the model
         into the flat-buffer representation (ParamFlat theta_L + one
@@ -194,25 +199,39 @@ class Federation:
         `bank_dtype` (flat states only, None follows make_step) narrows
         the bank storage — bf16 halves the dominant state memory and the
         fused scan's carry traffic at the cost of quantized owner copies
-        (f32 keeps the bit-parity contract)."""
+        (f32 keeps the bit-parity contract). `mesh` (flat states only,
+        None follows make_step) lays the buffers out across the device
+        mesh under repro.sharding.rules.flat_shardings — bank rows over
+        the data axes, P like the model."""
         pack = self._pack_params if pack_params is None else pack_params
         if pack:
             if bank_dtype is None:
                 bank_dtype = self._bank_dtype
+            if mesh is None:
+                mesh = self._mesh
             state = init_state_flat(params, self.as_async_config(),
-                                    bank_dtype=bank_dtype)
+                                    bank_dtype=bank_dtype, mesh=mesh)
         else:
-            # the make_step-configured bank dtype is simply irrelevant to
-            # a tree state; only an EXPLICIT request here is an error
+            # the make_step-configured bank dtype/mesh are simply
+            # irrelevant to a tree state; only an EXPLICIT request here
+            # is an error
             if bank_dtype is not None:
                 raise ValueError("bank_dtype is a flat-engine option; "
+                                 "pass pack_params=True")
+            if mesh is not None:
+                raise ValueError("mesh sharding is a flat-engine option; "
                                  "pass pack_params=True")
             state = init_state(params, self.as_async_config())
         snapshot = getattr(self.mechanism, "device_ledger", None)
         if snapshot is not None:
             # In-graph authorization must refuse exactly where the host
             # would: seed the device counters from the live accountant.
-            state = state._replace(ledger=snapshot())
+            ledger = snapshot()
+            if mesh is not None:
+                ledger = jax.device_put(
+                    ledger, jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec()))
+            state = state._replace(ledger=ledger)
         return state
 
     def params_of(self, state: AsyncDPState):
@@ -225,7 +244,7 @@ class Federation:
                   privatizer: Optional[PrivatizerConfig] = None,
                   lr: Optional[float] = None, n_params: Optional[int] = None,
                   jit: bool = True, donate: bool = False,
-                  pack_params: bool = False, bank_dtype=None):
+                  pack_params: bool = False, bank_dtype=None, mesh=None):
         """Build (and cache for .step()) the jitted per-round function.
 
         async: step(state, batch, owner_idx, key) -> (state, metrics)
@@ -239,26 +258,43 @@ class Federation:
         selects what `init_state` constructs. Default off: the pytree
         path stays the reference.
 
+        `mesh` (flat engine only) makes the whole round engine
+        sharding-native: `init_state` places theta_L/bank under the
+        repro.sharding.rules.flat_shardings layout and every driver pins
+        that layout inside its scan body with with_sharding_constraint,
+        so K rounds run distributed with no host transfer of the bank.
+        A 1x1 mesh reproduces the unsharded engine bit-for-bit.
+
         Deep-path sensitivity is the privatizer's ENFORCED clip norm, not
         each owner's nominal Xi_i — clipping to a norm above an owner's
         bound would otherwise under-noise that owner.
         """
+        if mesh is not None and not pack_params:
+            raise ValueError("mesh sharding is a flat-engine option; "
+                             "pass pack_params=True")
         self._pack_params = pack_params
         self._bank_dtype = bank_dtype
+        self._mesh = mesh
         acfg = self.as_async_config(privatizer)
         scales = self.mechanism.scales(p=n_params,
                                        clip_norm=acfg.privatizer.xi)
+        donate_args = (0,) if donate else ()
         if self.strategy == "sync":
             if lr is None:
                 raise ValueError("sync strategy needs an explicit lr")
             step = make_sync_dp_step(loss_fn, acfg, lr, scales=scales)
         else:
-            step = make_train_step(loss_fn, acfg, scales=scales)
-            fused = make_fused_rounds(loss_fn, acfg, scales=scales)
-            self._fused_fn = jax.jit(
-                fused, donate_argnums=(0,) if donate else ()) if jit else fused
+            step = make_train_step(loss_fn, acfg, scales=scales, mesh=mesh)
+            fused = make_fused_rounds(loss_fn, acfg, scales=scales,
+                                      mesh=mesh)
+            group = make_group_rounds(loss_fn, acfg, scales=scales,
+                                      mesh=mesh)
+            self._fused_fn = (jax.jit(fused, donate_argnums=donate_args)
+                              if jit else fused)
+            self._group_fn = (jax.jit(group, donate_argnums=donate_args)
+                              if jit else group)
         if jit:
-            step = jax.jit(step, donate_argnums=(0,) if donate else ())
+            step = jax.jit(step, donate_argnums=donate_args)
         self._step_fn = step
         return step
 
@@ -284,7 +320,9 @@ class Federation:
         return new_state, metrics
 
     def run_rounds(self, state: AsyncDPState, batches, owner_seq=None,
-                   key=None) -> Tuple[AsyncDPState, Dict[str, Any]]:
+                   key=None, *, owner_parallel: bool = False,
+                   max_group: Optional[int] = None
+                   ) -> Tuple[AsyncDPState, Dict[str, Any]]:
         """K asynchronous rounds in ONE dispatch (lax.scan over the jitted
         deep step, authorization decided on-device).
 
@@ -301,8 +339,19 @@ class Federation:
         afterwards to fold them into `ledger()` — until then the host
         accountant lags the device by the rounds of this call.
 
-        metrics are stacked (K,) arrays (refused mask, owner, clip_frac,
-        max_grad_norm, grad_noise_scale).
+        `owner_parallel=True` batches non-conflicting rounds: the schedule
+        is partitioned host-side into maximal groups of consecutive rounds
+        with DISTINCT owners (`schedules.partition_conflict_free`;
+        `max_group` caps group size) and the scan runs group-at-a-time,
+        vmapping the round over each group's members with one theta_L
+        inertia reduction per group. Ledger spend (and therefore the
+        privacy accounting) is exactly the sequential scan's; theta_L
+        trajectories deviate boundedly for groups larger than one (see
+        `make_group_rounds`). When every group has size 1 the sequential
+        scan runs — bit-for-bit identical output.
+
+        metrics are stacked (K,) round-order arrays either way (refused
+        mask, owner, clip_frac, max_grad_norm, grad_noise_scale).
         """
         if self.strategy != "async":
             raise ValueError("run_rounds() is the async path")
@@ -321,7 +370,41 @@ class Federation:
         else:
             owner_seq = as_owner_seq(owner_seq, self.n_owners)
         keys = jax.random.split(key, owner_seq.shape[0])
-        return self._fused_fn(state, batches, owner_seq, keys)
+        if not owner_parallel:
+            return self._fused_fn(state, batches, owner_seq, keys)
+
+        # schedule analysis is a host-side pass: one sync per dispatch
+        groups = partition_conflict_free(np.asarray(owner_seq), max_group)
+        if all(length <= 1 for _, length in groups):
+            # every group is a single round: the sequential scan IS the
+            # grouped execution, bit-for-bit
+            return self._fused_fn(state, batches, owner_seq, keys)
+        idx, valid = pack_groups(groups)
+        # Shape-stabilize for the jit cache: schedule-drawn partitions
+        # give a different (n_groups, G_max) almost every dispatch, and
+        # each new shape would recompile the whole K-round scan. Pad the
+        # member axis to max_group (its natural cap; next power of two
+        # when unbounded — set max_group in serving loops) and the group
+        # axis to the next multiple of 4. Padded members are masked;
+        # padded groups are fully invalid and the scan body skips their
+        # member compute at runtime (lax.cond) — but every extra scan
+        # step still pays the bank loop-carry copy, which is why the
+        # group-axis bucket is small (<= 3 no-op steps) rather than a
+        # power of two.
+        n_g, gmax = idx.shape
+        gpad = (max_group if max_group is not None
+                else 1 << max(gmax - 1, 0).bit_length())
+        rows = -(-n_g // 4) * 4
+        idx = np.pad(idx, ((0, rows - n_g), (0, gpad - gmax)))
+        valid = np.pad(valid, ((0, rows - n_g), (0, gpad - gmax)))
+        state, gm = self._group_fn(state, batches, owner_seq, keys,
+                                   jnp.asarray(idx), jnp.asarray(valid))
+        # group-major (n_groups, G_max) -> round-order (K,): groups are
+        # consecutive and in order, so the valid entries flatten in order
+        order = np.flatnonzero(valid.reshape(-1))
+        metrics = {name: v.reshape((-1,) + v.shape[2:])[order]
+                   for name, v in gm.items()}
+        return state, metrics
 
     def reconcile(self, state: AsyncDPState) -> Dict[int, Dict]:
         """Fold the state's device ledger back into the host accountant

@@ -29,3 +29,17 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many devices the host actually has."""
     devs = jax.devices()[: data * model]
     return jax.make_mesh((data, model), ("data", "model"), devices=devs)
+
+
+def make_host_mesh(*, model: int = 1):
+    """(data, model) mesh over ALL visible devices: data = n_devices/model.
+
+    The topology builder for the sharded federation engine off-pod: on a
+    laptop it is a 1x1 mesh (the sharded code paths run but every spec
+    degrades to replication); under XLA_FLAGS=--xla_force_host_platform_
+    device_count=8 (the CI smoke job) it is a real 8-way mesh. `model`
+    must divide the device count."""
+    n = len(jax.devices())
+    if n % model:
+        raise ValueError(f"model={model} does not divide {n} devices")
+    return make_debug_mesh(n // model, model)

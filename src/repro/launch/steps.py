@@ -14,8 +14,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.async_trainer import AsyncDPConfig, init_state, make_train_step
-from repro.core.dp_sgd import PrivatizerConfig
+from repro.federation.deep import (AsyncDPConfig, init_state,
+                                   make_train_step)
+from repro.federation.dp_sgd import PrivatizerConfig
 from repro.launch import specs as specs_mod
 from repro.models.model import LM, build_model
 from repro.sharding import rules

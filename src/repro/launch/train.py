@@ -19,10 +19,10 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.core.async_trainer import (AsyncDPConfig, init_state,
-                                      make_train_step)
-from repro.core.dp_sgd import PrivatizerConfig
-from repro.core.privacy import PrivacyAccountant
+from repro.federation.deep import (AsyncDPConfig, init_state,
+                                   make_train_step)
+from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.privacy import PrivacyAccountant
 from repro.data import OwnerDataPipeline, synthetic_owner_shards
 from repro.models import build_model
 

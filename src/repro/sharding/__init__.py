@@ -1,3 +1,5 @@
-from repro.sharding.rules import (axis_size, batch_specs, cache_specs,
-                                  data_axes, named, param_specs,
+from repro.sharding.rules import (FlatShardings, axis_size, batch_specs,
+                                  cache_specs, data_axes, flat_axes,
+                                  flat_bank_spec, flat_shardings,
+                                  flat_theta_spec, named, param_specs,
                                   spec_for_param)

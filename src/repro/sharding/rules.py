@@ -11,7 +11,7 @@ Strategy (single-pod mesh (data=16, model=16); multi-pod adds pod=2):
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import numpy as np
@@ -209,3 +209,55 @@ def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
                                   is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------- flat federation state (owner bank) ---------------------
+# The deep-path flat engine's state is two buffers: theta_L (P,) and the
+# owner bank (N_owners, P) — the algorithm's dominant memory (N model
+# copies). The bank is the natural FSDP target: the owner axis N is the
+# engine's data-parallel dimension (rounds touch one row each), so it
+# shards over the data axes; P shards like the model over 'model'. When N
+# does not divide the data axes (small federations on big meshes) the data
+# axes fold into P instead, so the bank bytes still spread over every
+# chip. theta_L and a gathered bank row always share the bank's P-axis
+# sharding — the round's elementwise ops (theta_bar, eqs. 5/7) then never
+# reshard. Every rule degrades to replication when the dim is not
+# divisible (same convention as the model rules above).
+
+
+class FlatShardings(NamedTuple):
+    """NamedShardings for the flat-engine state buffers."""
+    theta: NamedSharding     # theta_L buffer (P,)
+    bank: NamedSharding      # owner bank (N_owners, P)
+    row: NamedSharding       # one gathered bank row (P,) — == theta
+    ledger: NamedSharding    # (N,) int32 counters — replicated (tiny)
+
+
+def flat_axes(mesh: Mesh, n_owners: int, p: int
+              ) -> Tuple[Optional[Tuple[str, ...]], Optional[Tuple[str, ...]]]:
+    """(owner-axis, P-axis) mesh axes for the (N_owners, P) bank."""
+    da = data_axes(mesh)
+    ds, ms = axis_size(mesh, da), axis_size(mesh, "model")
+    n_ax = tuple(da) if (ds > 1 and _div(n_owners, ds)) else None
+    p_axes = ["model"] if (ms > 1 and _div(p, ms)) else []
+    if n_ax is None and ds > 1 and _div(p, ds * (ms if p_axes else 1)):
+        p_axes.extend(da)
+    return n_ax, (tuple(p_axes) if p_axes else None)
+
+
+def flat_theta_spec(mesh: Mesh, n_owners: int, p: int) -> P:
+    return P(flat_axes(mesh, n_owners, p)[1])
+
+
+def flat_bank_spec(mesh: Mesh, n_owners: int, p: int) -> P:
+    n_ax, p_ax = flat_axes(mesh, n_owners, p)
+    return P(n_ax, p_ax)
+
+
+def flat_shardings(mesh: Mesh, n_owners: int, p: int) -> FlatShardings:
+    """The flat engine's sharding bundle, degraded to what divides."""
+    n_ax, p_ax = flat_axes(mesh, n_owners, p)
+    return FlatShardings(theta=NamedSharding(mesh, P(p_ax)),
+                         bank=NamedSharding(mesh, P(n_ax, p_ax)),
+                         row=NamedSharding(mesh, P(p_ax)),
+                         ledger=NamedSharding(mesh, P()))
