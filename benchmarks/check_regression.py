@@ -1,0 +1,87 @@
+"""CI bench regression guard: fail when the MLP-scale fused rounds/sec
+drops more than --max-drop vs the committed BENCH_fused_rounds.json.
+
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench-baseline/BENCH_fused_rounds.json \
+        --current BENCH_fused_rounds.json [--max-drop 0.2] [--match mlp]
+
+Compares every ``rounds_per_sec_*`` derived metric of the rows whose name
+contains --match (default: the MLP-scale rows — the compute-bound regime
+where a real engine regression shows; the toy rows are dispatch-bound
+noise). SKIPS (exit 0) when the baseline is missing (first PR with the
+guard) or when the environment metadata differs — platform, device kind
+or device count — since a laptop-vs-CI or CPU-vs-TPU comparison would
+only produce false alarms. Pure stdlib: runs before any jax install.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="fail when 1 - current/baseline exceeds this")
+    ap.add_argument("--match", default="mlp",
+                    help="only guard rows whose name contains this")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"SKIP: no committed baseline at {args.baseline}")
+        return 0
+    base, cur = load(args.baseline), load(args.current)
+    if base.get("env") != cur.get("env"):
+        print(f"SKIP: environment differs (baseline {base.get('env')} "
+              f"vs current {cur.get('env')}) — cross-machine rounds/sec "
+              f"comparisons only produce false alarms. The guard is "
+              f"DORMANT until the committed baseline comes from this "
+              f"environment: download BENCH_fused_rounds.json from a "
+              f"bench-fast-results CI artifact and commit it to arm the "
+              f"guard for CI runners.")
+        return 0
+
+    base_rows = {r["name"]: r["derived"] for r in base["rows"]}
+    failures, checked = [], 0
+    for row in cur["rows"]:
+        if args.match not in row["name"] or row["name"] not in base_rows:
+            continue
+        b_derived = base_rows[row["name"]]
+        for key, b_val in b_derived.items():
+            if not key.startswith("rounds_per_sec"):
+                continue
+            c_val = row["derived"].get(key)
+            if not isinstance(b_val, (int, float)) or not isinstance(
+                    c_val, (int, float)) or b_val <= 0:
+                continue
+            checked += 1
+            drop = 1.0 - c_val / b_val
+            status = "FAIL" if drop > args.max_drop else "ok"
+            print(f"{status}: {row['name']} {key}: {b_val:.0f} -> "
+                  f"{c_val:.0f} ({-drop:+.1%})")
+            if drop > args.max_drop:
+                failures.append((row["name"], key, b_val, c_val))
+    if not checked:
+        print(f"SKIP: no comparable rounds_per_sec metrics matched "
+              f"{args.match!r}")
+        return 0
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed more than "
+              f"{args.max_drop:.0%} vs the committed baseline")
+        return 1
+    print(f"\nall {checked} guarded metrics within {args.max_drop:.0%} "
+          f"of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,12 +47,18 @@ def env_meta() -> dict:
     measured on a mesh record their actual topology themselves (a
     `mesh=dataXxmodelY` derived entry) — the topology is a per-row
     choice, not a host fact."""
+    import os
+
     import jax
     devs = jax.devices()
     return {
         "platform": jax.default_backend(),
         "device_kind": devs[0].device_kind,
         "device_count": len(devs),
+        # host core count separates otherwise-identical "cpu" entries
+        # (a laptop vs a CI runner): the regression guard refuses to
+        # compare rounds/sec across different machines
+        "cpu_count": os.cpu_count(),
     }
 
 

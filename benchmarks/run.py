@@ -4,9 +4,12 @@
                                             [--json-dir DIR]
 
 Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
-``BENCH_<suite>.json`` per suite into --json-dir (default: cwd; pass
---json-dir '' to disable) with us/round + every derived metric
-(rounds/sec etc.) parsed into numbers — the cross-PR perf trajectory.
+``BENCH_<suite>.json`` per suite into --json-dir (default: the repo
+root, wherever the harness is launched from, so bench-smoke refreshes
+the COMMITTED per-PR perf trajectory in place; pass --json-dir '' to
+disable) with us/round + every derived metric (rounds/sec etc.) parsed
+into numbers. ``benchmarks/check_regression.py`` diffs a fresh
+BENCH_fused_rounds.json against the committed baseline in CI.
 Mapping to the paper:
     bench_convergence   -> Figs. 2 & 8 (psi percentiles vs k)
     bench_comm_timing   -> Figs. 3 & 9 (Poisson schedule)
@@ -35,9 +38,11 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="reduced run counts (CI mode)")
-    ap.add_argument("--json-dir", default=".",
+    ap.add_argument("--json-dir",
+                    default=os.path.dirname(os.path.dirname(
+                        os.path.abspath(__file__))),
                     help="where BENCH_<suite>.json files land "
-                         "('' disables)")
+                         "(default: the repo root; '' disables)")
     args = ap.parse_args()
 
     from benchmarks import (bench_async_vs_sync, bench_collaboration,

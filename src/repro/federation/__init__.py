@@ -15,8 +15,10 @@ from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
                                    make_train_step)
 from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
                                      private_grad, resolve_interpret)
-from repro.federation.flatten import (FlatSpec, ParamFlat, flatten_spec,
-                                      init_flat_bank, pack_params)
+from repro.federation.flatten import (BankCodec, FlatSpec, ParamFlat,
+                                      QuantBank, as_bank_codec,
+                                      flatten_spec, init_flat_bank,
+                                      pack_params)
 from repro.federation.linear import (LinearProblem, Owner, fitness,
                                      make_problem, owner_grad,
                                      record_grad_bound, relative_fitness)
@@ -33,5 +35,6 @@ from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
 from repro.federation.schedules import (AvailabilityTraceSchedule,
                                         PoissonSchedule, ScheduleProtocol,
                                         UniformSchedule, as_owner_seq,
-                                        pack_groups, partition_conflict_free)
+                                        auto_max_group, pack_groups,
+                                        partition_conflict_free)
 from repro.federation.session import Federation

@@ -61,8 +61,8 @@ import jax.numpy as jnp
 from repro.federation.config import paper_rates
 from repro.federation.dp_sgd import (PrivatizerConfig, _group_batch,
                                      private_grad, resolve_interpret)
-from repro.federation.flatten import (FlatSpec, ParamFlat, init_flat_bank,
-                                      pack_params)
+from repro.federation.flatten import (FlatSpec, ParamFlat, QuantBank,
+                                      init_flat_bank, pack_params)
 from repro.federation.privacy import DeviceLedger, make_device_ledger
 
 
@@ -120,7 +120,11 @@ def init_state_flat(params, cfg: AsyncDPConfig,
 
     `bank_dtype` (None = float32) narrows the bank STORAGE only — e.g.
     bf16 halves the N*P resident bytes and the fused scan's loop-carry
-    traffic; rows upcast to f32 on gather. f32 keeps the bit-parity
+    traffic; rows upcast to f32 on gather. The strings "int8"/"fp8" (or
+    a flatten.BankCodec) build a QUANTIZED bank instead: 1-byte codes +
+    per-row f32 scales + an error-feedback residual row, ~4x below f32
+    (rows decode on gather; granted rounds re-encode with stochastic
+    rounding driven by the round key). f32 keeps the bit-parity
     contract with the tree path.
 
     `mesh` (None = single-device) lays the state out under the
@@ -150,7 +154,9 @@ def init_state_flat(params, cfg: AsyncDPConfig,
         sh = flat_shardings(mesh, cfg.n_owners, flat.size)
         flat = ParamFlat(jax.device_put(flat.buf, sh.theta), flat.spec)
         bank = init_flat_bank(flat, cfg.n_owners, bank_dtype,
-                              sharding=sh.bank)
+                              sharding=sh.bank,
+                              scales_sharding=sh.bank_scales,
+                              residual_sharding=sh.row)
         ledger = jax.device_put(ledger, sh.ledger)
     return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger)
 
@@ -162,7 +168,8 @@ def _flat_shardings_for(mesh, theta_L, bank):
     if mesh is None or not isinstance(theta_L, ParamFlat):
         return None
     from repro.sharding.rules import flat_shardings
-    return flat_shardings(mesh, bank.shape[0], theta_L.size)
+    n = bank.n_owners if isinstance(bank, QuantBank) else bank.shape[0]
+    return flat_shardings(mesh, n, theta_L.size)
 
 
 def _constrain(x, sharding):
@@ -173,6 +180,87 @@ def _constrain(x, sharding):
         return x.replace_buf(
             jax.lax.with_sharding_constraint(x.buf, sharding))
     return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def _constrain_bank(bank, sh):
+    """Pin a bank to the mesh layout: dense (N, P) matrices to sh.bank;
+    quantized banks pin codes/scales/residual to their bundle entries."""
+    if sh is None:
+        return bank
+    if isinstance(bank, QuantBank):
+        return QuantBank(
+            jax.lax.with_sharding_constraint(bank.codes, sh.bank),
+            jax.lax.with_sharding_constraint(bank.scales, sh.bank_scales),
+            jax.lax.with_sharding_constraint(bank.residual, sh.row),
+            bank.codec)
+    return jax.lax.with_sharding_constraint(bank, sh.bank)
+
+
+# --------------------- quantized-bank row round-trip -----------------------
+# The codec RNG stream is the round key folded with a fixed salt, so the
+# stochastic-rounding draws never collide with (or shift) the privacy
+# noise draws inside private_grad — an int8/fp8 run sees the SAME Laplace
+# noise as the f32 run under the same keys, isolating quantization as the
+# only trajectory difference.
+_CODEC_SALT = 0x5142                    # "QB"
+
+
+def _codec_key(key):
+    return jax.random.fold_in(key, _CODEC_SALT)
+
+
+def _decode_bank_row(bank: QuantBank, owner_idx, pcfg: PrivatizerConfig):
+    """Gather one owner row: slice codes+scales, decode to (P,) f32."""
+    from repro.kernels.bank_codec.ops import decode_row
+    codes = jax.lax.dynamic_index_in_dim(bank.codes, owner_idx, 0,
+                                         keepdims=False)
+    scales = jax.lax.dynamic_index_in_dim(bank.scales, owner_idx, 0,
+                                          keepdims=False)
+    return decode_row(codes, scales, bank.codec.fmt,
+                      block_elems=bank.codec.block_elems,
+                      block_rows=pcfg.kernel_block_rows,
+                      interpret=resolve_interpret(pcfg.kernel_interpret))
+
+
+def _encode_bank_row(bank: QuantBank, value, key,
+                     pcfg: PrivatizerConfig):
+    """Encode one f32 row (+ the EF residual already folded into `value`)
+    -> (codes (P,), scales (nb,), err (P,))."""
+    from repro.kernels.bank_codec.ops import encode_row
+    return encode_row(value, _codec_key(key), bank.codec.fmt,
+                      block_elems=bank.codec.block_elems,
+                      block_rows=pcfg.kernel_block_rows,
+                      interpret=resolve_interpret(pcfg.kernel_interpret))
+
+
+def _quant_write(bank: QuantBank, new_i, owner_idx, key,
+                 pcfg: PrivatizerConfig, ok=None) -> QuantBank:
+    """Scatter a granted owner update into a quantized bank.
+
+    The shared residual row is folded into the value BEFORE encoding
+    (error feedback), and the fresh quantization error becomes the next
+    residual. `ok` (a traced bool, fused-driver refusal masking) selects
+    between the new row and the owner's untouched codes/scales — and
+    leaves the residual alone on refusal, so a refused round stays a
+    bit-exact no-op on the whole bank."""
+    codes_n, scales_n, err = _encode_bank_row(bank, new_i + bank.residual,
+                                              key, pcfg)
+    if ok is None:
+        residual = err
+    else:
+        codes_o = jax.lax.dynamic_index_in_dim(bank.codes, owner_idx, 0,
+                                               keepdims=False)
+        scales_o = jax.lax.dynamic_index_in_dim(bank.scales, owner_idx, 0,
+                                                keepdims=False)
+        codes_n = jnp.where(ok, codes_n, codes_o)
+        scales_n = jnp.where(ok, scales_n, scales_o)
+        residual = jnp.where(ok, err, bank.residual)
+    return QuantBank(
+        jax.lax.dynamic_update_index_in_dim(bank.codes, codes_n,
+                                            owner_idx, 0),
+        jax.lax.dynamic_update_index_in_dim(bank.scales, scales_n,
+                                            owner_idx, 0),
+        residual, bank.codec)
 
 
 def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
@@ -338,8 +426,11 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     def compute(theta_L: ParamFlat, bank, batch, owner_idx, key):
         spec = theta_L.spec
         sh = _flat_shardings_for(mesh, theta_L, bank)
-        theta_i = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0,
-                                               keepdims=False)     # (P,)
+        if isinstance(bank, QuantBank):
+            theta_i = _decode_bank_row(bank, owner_idx, pcfg)      # (P,)
+        else:
+            theta_i = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0,
+                                                   keepdims=False)  # (P,)
         if sh is not None:
             # the gathered row keeps the bank's P-axis layout (== theta's),
             # so theta_bar and the whole round stay local in P
@@ -431,10 +522,14 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         new_L, new_i, _, metrics = compute(state.theta_L, state.bank,
                                            batch, owner_idx, key)
-        bank = _write_bank(state.bank, new_i, owner_idx)
+        if isinstance(state.bank, QuantBank):
+            bank = _quant_write(state.bank, new_i, owner_idx, key,
+                                cfg.privatizer)
+        else:
+            bank = _write_bank(state.bank, new_i, owner_idx)
         if sh is not None:
             new_L = _constrain(new_L, sh.theta)
-            bank = _constrain(bank, sh.bank)
+            bank = _constrain_bank(bank, sh)
         return AsyncDPState(new_L, bank, state.step + 1,
                             state.ledger), metrics
 
@@ -442,7 +537,8 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
 
 
 def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
-                      scales: Optional[jax.Array] = None, mesh=None):
+                      scales: Optional[jax.Array] = None, mesh=None,
+                      unroll: int = 1):
     """Device-resident multi-round driver: K rounds in ONE dispatch.
 
     Returns run(state, batches, owner_seq, keys) -> (state, metrics) where
@@ -462,6 +558,12 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
     `mesh` pins flat states to the flat_shardings layout: the constraint
     sits INSIDE the scan body, so the carry stays distributed across all
     K rounds (no per-round gather, no host transfer of the bank).
+    `unroll` is handed to the lax.scan (identical values at any setting):
+    unrolled blocks amortize the loop-carry bank copy XLA:CPU pays per
+    scan iteration — measured +24% at unroll=4 at the MLP-scale config.
+    Quantized banks (QuantBank states) decode the owner row on gather and
+    re-encode granted updates with stochastic rounding + error feedback;
+    refused rounds leave codes/scales/residual untouched.
     """
     compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
 
@@ -475,14 +577,18 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
                                                  batch, owner_idx, key)
         theta_L = jax.tree_util.tree_map(
             lambda nl, ol: jnp.where(ok, nl, ol), new_L, state.theta_L)
-        bank = _write_bank(
-            state.bank,
-            jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
-                                   new_i, theta_i),
-            owner_idx)
+        if isinstance(state.bank, QuantBank):
+            bank = _quant_write(state.bank, new_i, owner_idx, key,
+                                cfg.privatizer, ok=ok)
+        else:
+            bank = _write_bank(
+                state.bank,
+                jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
+                                       new_i, theta_i),
+                owner_idx)
         if sh is not None:
             theta_L = _constrain(theta_L, sh.theta)
-            bank = _constrain(bank, sh.bank)
+            bank = _constrain_bank(bank, sh)
         ledger = led.replace(spent=led.spent.at[owner_idx].add(oki),
                              refused=led.refused.at[owner_idx].add(1 - oki))
         metrics = dict(metrics)
@@ -494,7 +600,8 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
             raise ValueError(
                 "fused rounds need a device ledger on the state; build the "
                 "state with init_state / Federation.init_state")
-        return jax.lax.scan(body, state, (batches, owner_seq, keys))
+        return jax.lax.scan(body, state, (batches, owner_seq, keys),
+                            unroll=unroll)
 
     return run
 
@@ -517,16 +624,22 @@ def _write_bank_rows(bank, rows, owner_idx):
 
 def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
                       scales: Optional[jax.Array] = None, mesh=None):
-    """Owner-parallel multi-round driver: lax.scan over CONFLICT-FREE round
-    groups, vmap over the members of each group.
+    """Owner-parallel multi-round driver: a dynamic-trip-count loop over
+    CONFLICT-FREE round groups, vmap over the members of each group.
 
-    Returns run(state, batches, owner_seq, keys, group_idx, group_valid)
-    -> (state, metrics) where batches/owner_seq/keys are the (K,)-leading
-    inputs of `make_fused_rounds` and (group_idx, group_valid) are the
-    (n_groups, G_max) arrays from `schedules.pack_groups`: group_idx[g]
-    holds the round indices of group g, group_valid masks padding.
-    Metrics come back GROUP-MAJOR ((n_groups, G_max) leading) — the
-    session scatters them back to round order.
+    Returns run(state, batches, owner_seq, keys, group_idx, group_valid,
+    n_groups) -> (state, metrics) where batches/owner_seq/keys are the
+    (K,)-leading inputs of `make_fused_rounds` and (group_idx,
+    group_valid) are the (rows, G_max) arrays from `schedules.pack_groups`
+    — group_idx[g] holds the round indices of group g, group_valid masks
+    padding. The group axis may be padded with fully-invalid rows for
+    jit-cache shape stability; `n_groups` (a TRACED count, so it never
+    recompiles) bounds a `fori_loop`, so the padded rows NEVER execute —
+    before this, every padded group still paid the full (N, P) bank
+    loop-carry copy of one scan step, the single largest per-step cost at
+    MLP scale. Metrics come back GROUP-MAJOR ((rows, G_max) leading, the
+    never-executed padded rows zero-filled) — the session scatters them
+    back to round order.
 
     Semantics vs the sequential scan, for groups whose owners are all
     distinct (the partition's invariant):
@@ -558,32 +671,49 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         ok = jax.vmap(led.authorized)(owners) & valid          # (G,)
         oki = ok.astype(jnp.int32)
 
-        def members(args):
-            b_g, ow, ks = args
-            return jax.vmap(
-                lambda b, o, k: compute(theta_L, bank, b, o, k))(b_g, ow, ks)
+        # fully-invalid groups are jit-cache shape padding only; the
+        # dynamic trip count in run() means they never reach this body,
+        # so every executed group has at least one valid member
+        new_L, new_i, theta_i, metrics = jax.vmap(
+            lambda b, o, k: compute(theta_L, bank, b, o, k))(
+                batch_g, owners, keys_g)
 
-        # fully-invalid groups exist only as jit-cache shape padding (the
-        # session pads n_groups to a bucket so schedule-drawn partitions
-        # don't recompile every dispatch); skip their member compute at
-        # runtime — every downstream write is masked, so zeros are inert
-        operands = (batch_g, owners, keys_g)
-        zeros = jax.tree_util.tree_map(
-            lambda s: jnp.zeros(s.shape, s.dtype),
-            jax.eval_shape(members, operands))
-        new_L, new_i, theta_i, metrics = jax.lax.cond(
-            valid.any(), members, lambda _: zeros, operands)
-
-        # refused/padded members write their own row back unchanged
-        rows = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(_member_mask(ok, a), a, b),
-            new_i, theta_i)
         owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
-        bank = _write_bank_rows(bank, rows, owners_w)
-
-        # single inertia reduction: mean of the granted eq.(7) targets
         n_ok = jnp.sum(ok.astype(jnp.float32))
         denom = jnp.maximum(n_ok, 1.0)
+        if isinstance(bank, QuantBank):
+            # error feedback under member-parallelism: the shared residual
+            # is split equally among the granted members before encoding
+            # (injected mass == one residual row, as sequentially) and the
+            # new residual is the sum of the granted members' fresh
+            # errors; a fully-refused group leaves it untouched
+            okf = ok.astype(jnp.float32)
+            inject = bank.residual[None] * (okf / denom)[:, None]
+            codes_n, scales_n, errs = jax.vmap(
+                lambda v, k: _encode_bank_row(bank, v, k,
+                                              cfg.privatizer))(
+                    new_i + inject, keys_g)
+            owners_c = jnp.where(valid, owners, 0)             # safe gather
+            codes_w = jnp.where(_member_mask(ok, codes_n), codes_n,
+                                bank.codes[owners_c])
+            scales_w = jnp.where(ok[:, None], scales_n,
+                                 bank.scales[owners_c])
+            residual = jnp.where(
+                n_ok > 0,
+                jnp.sum(errs * _member_mask(okf, errs), axis=0),
+                bank.residual)
+            bank = QuantBank(
+                bank.codes.at[owners_w].set(codes_w, mode="drop"),
+                bank.scales.at[owners_w].set(scales_w, mode="drop"),
+                residual, bank.codec)
+        else:
+            # refused/padded members write their own row back unchanged
+            rows = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(_member_mask(ok, a), a, b),
+                new_i, theta_i)
+            bank = _write_bank_rows(bank, rows, owners_w)
+
+        # single inertia reduction: mean of the granted eq.(7) targets
 
         def reduce_theta(stacked, base):
             s = jnp.sum(jnp.where(_member_mask(ok, stacked), stacked,
@@ -593,7 +723,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         theta_L = jax.tree_util.tree_map(reduce_theta, new_L, theta_L)
         if sh is not None:
             theta_L = _constrain(theta_L, sh.theta)
-            bank = _constrain(bank, sh.bank)
+            bank = _constrain_bank(bank, sh)
         ledger = led.replace(
             spent=led.spent.at[owners_w].add(oki, mode="drop"),
             refused=led.refused.at[owners_w].add(
@@ -604,14 +734,40 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
                             ledger), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys, group_idx,
-            group_valid):
+            group_valid, n_groups=None):
         if state.ledger is None:
             raise ValueError(
                 "grouped rounds need a device ledger on the state; build "
                 "the state with init_state / Federation.init_state")
         xs = (jax.tree_util.tree_map(lambda a: a[group_idx], batches),
               owner_seq[group_idx], keys[group_idx], group_valid)
-        return jax.lax.scan(body, state, xs)
+        rows = group_idx.shape[0]
+        if rows == 0:
+            return jax.lax.scan(body, state, xs)       # empty dispatch
+        if n_groups is None:
+            n_groups = rows
+        # dynamic trip count: the group axis is padded to a shape bucket
+        # for the jit cache, but only the real groups execute — metrics
+        # land in pre-allocated group-major buffers via one-row updates,
+        # the padded rows stay zero (and masked-out downstream)
+        m_shape = jax.eval_shape(
+            lambda s, x: body(s, x)[1], state,
+            jax.tree_util.tree_map(lambda a: a[0], xs))
+        mets0 = jax.tree_util.tree_map(
+            lambda sd: jnp.zeros((rows,) + sd.shape, sd.dtype), m_shape)
+
+        def body_at(g, carry):
+            st, mets = carry
+            xg = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, g, 0,
+                                                       keepdims=False), xs)
+            st, m = body(st, xg)
+            mets = jax.tree_util.tree_map(
+                lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                    buf, v, g, 0), mets, m)
+            return st, mets
+
+        return jax.lax.fori_loop(0, n_groups, body_at, (state, mets0))
 
     return run
 

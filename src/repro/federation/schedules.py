@@ -102,6 +102,45 @@ def partition_conflict_free(owner_seq,
     return groups
 
 
+def auto_max_group(owner_seq, step_overhead: float = 4.0,
+                   cap: int = 16) -> int:
+    """Pick the owner-parallel group cap from the schedule's own repeat
+    statistics (the `max_group="auto"` default of `Federation.run_rounds`).
+
+    Every candidate cap c is scored on the CONCRETE sequence by actually
+    partitioning it (empirical owner-repeat statistics, not a
+    distributional model): a dispatch costs ~one scan step per group —
+    each paying a fixed overhead of `step_overhead` member-compute units
+    (the (N, P) bank loop-carry copy dominates it at MLP scale on CPU) —
+    plus the vmapped member compute, padded to c slots. Minimizing
+    n_groups(c) * (c + step_overhead) therefore trades padding waste
+    against step count; `cap` bounds the search. Ties go to the SMALLER
+    cap: less padding at equal cost. Returns 1 when grouping cannot win
+    (e.g. a single-owner schedule), which the session routes to the
+    strictly sequential scan.
+
+    Candidates come from a FIXED ladder (1,2,3,4,6,8,12,16), not every
+    integer: the chosen cap is also the member-axis shape the session
+    compiles the grouped program for, and schedule-drawn dispatches pick
+    a fresh cap every call — a dense candidate range would recompile the
+    whole K-round program on nearly every dispatch, while the ladder
+    bounds the jit cache at its own size (and the host-side scoring at
+    |ladder| partitions)."""
+    seq = np.asarray(owner_seq)
+    if seq.size == 0:
+        return 1
+    longest = max(length for _, length in partition_conflict_free(seq))
+    best_c, best_cost = 1, float("inf")
+    for c in (1, 2, 3, 4, 6, 8, 12, 16):
+        if c > min(longest, cap):
+            break
+        n_g = len(partition_conflict_free(seq, c))
+        cost = n_g * (c + step_overhead)
+        if cost < best_cost:
+            best_c, best_cost = c, cost
+    return best_c
+
+
 def pack_groups(groups: List[Tuple[int, int]]
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """(start, length) groups -> (idx, valid), both (n_groups, G_max).

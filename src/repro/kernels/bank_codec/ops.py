@@ -1,0 +1,137 @@
+"""Row-level entry points for the owner-bank codec (int8 / fp8 + EF).
+
+    codes, scales, err = encode_row(row, key, "int8")   # (P,),(nb,),(P,)
+    row_hat = decode_row(codes, scales, "int8")         # (P,) f32
+
+Backend contract (same as dp_clip_noise): ``interpret`` is True (Pallas
+interpreter — kernel debugging), False (compiled Pallas — TPU), or the
+string ``"oracle"`` — the kernel's pure-jnp transform from ``ref.py`` run
+directly on the unpadded row, the production backend off-TPU. Oracle and
+kernel apply the IDENTICAL numeric transform (the kernel imports it from
+ref.py); their stochastic draws differ only through the padded draw shape,
+the same lawful-stream caveat as the Laplace kernels.
+
+RNG contract: unlike the Laplace bits, the stochastic-rounding bits are
+NOT privacy-critical (they perturb storage precision, never the DP
+response), so they come from a cheap counter hash seeded by ONE scalar
+threefry draw from the round key per encode (`ref.counter_bits`) — a
+P-element threefry draw per round would cost more than the bank-carry
+traffic the codec exists to cut.
+
+Scales are per-row by default; ``block_elems`` switches to per-block f32
+scales (the row is cut into ceil(P/block_elems) segments, each with its
+own absmax scale — finer dynamic range for banks whose rows mix layer
+magnitudes). Per-block runs on the oracle backend only; the kernel path
+keeps the per-row (1,1)-scalar contract.
+
+``deterministic=True`` replaces the stochastic bits with the exact-0.5
+pattern (round-to-nearest): the reproducible, keyless encode used when a
+bank is first materialized. All entry points are scan-body safe — scales
+are traced, shapes static.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bank_codec.kernel import (LANES, decode_2d, encode_2d,
+                                             row_scale_2d)
+from repro.kernels.bank_codec.ref import (CODE_DTYPES, DECODERS, ENCODERS,
+                                          QMAX, counter_bits, det_bits,
+                                          row_scales_ref)
+
+FORMATS = tuple(ENCODERS)
+
+
+def _sr_bits(key, shape, deterministic: bool) -> jax.Array:
+    """Stochastic-rounding bits for one encode: a (), uint32 seed from the
+    round key (tiny threefry call) expanded by the cheap counter hash —
+    a P-element threefry draw per round would cost more than the bank
+    carry it is meant to save (see ref.counter_bits; SR bits are not
+    privacy-critical)."""
+    if deterministic:
+        return det_bits(shape)
+    return counter_bits(jax.random.bits(key, (), jnp.uint32), shape)
+
+
+def code_dtype(fmt: str):
+    if fmt not in CODE_DTYPES:
+        raise ValueError(f"unknown bank codec {fmt!r} "
+                         f"(supported: {', '.join(FORMATS)})")
+    return CODE_DTYPES[fmt]
+
+
+def _as_blocks(x: jax.Array, block_elems: Optional[int]
+               ) -> Tuple[jax.Array, int]:
+    """(P,) -> (nb, be) zero-padded view + the true P."""
+    p = x.shape[0]
+    be = p if block_elems is None else int(block_elems)
+    pad = (-p) % be
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape(-1, be), p
+
+
+def _pack2d(x: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
+    """(P,) -> (R, LANES) zero-padded kernel view + the true P."""
+    p = x.shape[0]
+    per_block = block_rows * LANES
+    pad = (-p) % per_block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape(-1, LANES), p
+
+
+def n_scales(p: int, block_elems: Optional[int]) -> int:
+    return 1 if block_elems is None else -(-p // int(block_elems))
+
+
+def encode_row(x: jax.Array, key, fmt: str, *,
+               block_elems: Optional[int] = None,
+               deterministic: bool = False, block_rows: int = 256,
+               interpret=False):
+    """Quantize one (P,) f32 row -> (codes (P,), scales (nb,), err (P,)).
+
+    `err = x - decode(codes, scales)` in f32 — the error-feedback
+    residual. Stochastic rounding is driven by `key` (ignored when
+    `deterministic`, which rounds to nearest with the 0.5 pattern).
+    """
+    dt = code_dtype(fmt)
+    if interpret == "oracle" or block_elems is not None:
+        if block_elems is not None and interpret != "oracle":
+            raise NotImplementedError(
+                "per-block scales run on the oracle backend only "
+                "(the kernel keeps the per-row scalar-scale contract)")
+        x2, p = _as_blocks(x, block_elems)
+        scales = row_scales_ref(x2, QMAX[fmt])                  # (nb,)
+        bits = _sr_bits(key, x2.shape, deterministic)
+        codes2, err2 = ENCODERS[fmt](x2, bits, scales[:, None])
+        return (codes2.reshape(-1)[:p].astype(dt), scales,
+                err2.reshape(-1)[:p])
+    x2, p = _pack2d(x.astype(jnp.float32), block_rows)
+    scale = row_scale_2d(x2, QMAX[fmt], block_rows=block_rows,
+                         interpret=interpret)
+    bits = _sr_bits(key, x2.shape, deterministic)
+    codes2, err2 = encode_2d(x2, bits, scale.reshape(1, 1), fmt,
+                             block_rows=block_rows, interpret=interpret)
+    return (codes2.reshape(-1)[:p], scale.reshape(1),
+            err2.reshape(-1)[:p])
+
+
+def decode_row(codes: jax.Array, scales: jax.Array, fmt: str, *,
+               block_elems: Optional[int] = None, block_rows: int = 256,
+               interpret=False) -> jax.Array:
+    """(P,) codes + (nb,) scales -> (P,) f32 row."""
+    code_dtype(fmt)                                   # validate fmt
+    if interpret == "oracle" or block_elems is not None:
+        if block_elems is not None and interpret != "oracle":
+            raise NotImplementedError(
+                "per-block scales run on the oracle backend only")
+        c2, p = _as_blocks(codes, block_elems)
+        return DECODERS[fmt](c2, scales[:, None]).reshape(-1)[:p]
+    c2, p = _pack2d(codes, block_rows)
+    out = decode_2d(c2, scales.astype(jnp.float32).reshape(1, 1), fmt,
+                    block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:p]

@@ -226,11 +226,19 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
 
 
 class FlatShardings(NamedTuple):
-    """NamedShardings for the flat-engine state buffers."""
-    theta: NamedSharding     # theta_L buffer (P,)
-    bank: NamedSharding      # owner bank (N_owners, P)
-    row: NamedSharding       # one gathered bank row (P,) — == theta
-    ledger: NamedSharding    # (N,) int32 counters — replicated (tiny)
+    """NamedShardings for the flat-engine state buffers.
+
+    Quantized banks (flatten.QuantBank) reuse the bundle: `bank` lays out
+    the (N, P) code matrix, `bank_scales` the (N, nb) per-row/per-block
+    scales (owner rows over the same data axes, the tiny scale axis
+    replicated), and `row` the shared (P,) error-feedback residual —
+    which, like a gathered row, must live exactly where theta lives.
+    """
+    theta: NamedSharding        # theta_L buffer (P,)
+    bank: NamedSharding         # owner bank (N_owners, P) — codes if quant
+    row: NamedSharding          # one gathered bank row / EF residual (P,)
+    ledger: NamedSharding       # (N,) int32 counters — replicated (tiny)
+    bank_scales: NamedSharding = None   # quant-bank scales (N_owners, nb)
 
 
 def flat_axes(mesh: Mesh, n_owners: int, p: int
@@ -260,4 +268,5 @@ def flat_shardings(mesh: Mesh, n_owners: int, p: int) -> FlatShardings:
     return FlatShardings(theta=NamedSharding(mesh, P(p_ax)),
                          bank=NamedSharding(mesh, P(n_ax, p_ax)),
                          row=NamedSharding(mesh, P(p_ax)),
-                         ledger=NamedSharding(mesh, P()))
+                         ledger=NamedSharding(mesh, P()),
+                         bank_scales=NamedSharding(mesh, P(n_ax)))

@@ -1,0 +1,380 @@
+"""Quantized resident owner bank (ISSUE 5): the bank_codec kernel family
+(int8 / fp8 + stochastic rounding + error feedback), the QuantBank state
+container, and the round engine running on it.
+
+Contracts under test:
+
+  * codec: kernel blocks match the jnp oracle bit-for-bit given the same
+    bits; stochastic rounding is unbiased; the returned error IS
+    x - decode(encode(x)); values already on the grid round-trip exactly.
+  * QuantBank: ~4x resident-byte cut vs the f32 bank at 32 owners;
+    decode stays within one quantization step of the f32 copies.
+  * engine: a REFUSED round is a bit-exact no-op on codes, scales AND
+    residual for every quantized codec; step-loop vs fused-driver
+    trajectories agree to float tolerance (the f32 bit-parity contract
+    explicitly does NOT extend to quantized banks — same standing as
+    bf16); grouped owner-parallel execution spends the ledger exactly
+    like the sequential scan.
+  * error feedback: the int8+EF trajectory stays within a small fraction
+    of the f32 trajectory's displacement — quantization error must stay
+    well under the DP-noise floor that the Theorem 2 cost-of-privacy
+    forecast (tests/test_theorem2_scaling.py) is fitted to, so storage
+    precision cannot perturb the paper's headline scaling.
+  * `unroll=` on the fused scan changes wall-clock only: any unroll
+    factor reproduces unroll=1 bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federation import (BankCodec, DataOwner, Federation,
+                              FederationConfig, PrivatizerConfig, QuantBank,
+                              as_bank_codec, auto_max_group)
+from repro.kernels.bank_codec.kernel import (LANES, absmax_2d, decode_2d,
+                                             encode_2d)
+from repro.kernels.bank_codec.ops import decode_row, encode_row
+from repro.kernels.bank_codec.ref import (DECODERS, ENCODERS, QMAX,
+                                          det_bits, row_scales_ref,
+                                          u01_from_bits)
+
+N_OWNERS, K = 8, 24
+FMTS = ("int8", "fp8")
+
+
+# ------------------------------ codec units --------------------------------
+@pytest.mark.parametrize("fmt", FMTS)
+def test_encode_decode_blocks_match_ref(fmt, rng_key):
+    x = jax.random.normal(rng_key, (64, LANES), jnp.float32) * 2.5
+    bits = jax.random.bits(rng_key, x.shape, jnp.uint32)
+    scale = row_scales_ref(x.reshape(1, -1), QMAX[fmt])
+    codes_k, err_k = encode_2d(x, bits, scale.reshape(1, 1), fmt,
+                               block_rows=32, interpret=True)
+    codes_r, err_r = ENCODERS[fmt](x, bits, scale)
+    np.testing.assert_array_equal(
+        np.asarray(codes_k, np.float32), np.asarray(codes_r, np.float32))
+    # 1-ulp slack: the jitted kernel may contract x - q*scale into an FMA
+    np.testing.assert_allclose(np.asarray(err_k), np.asarray(err_r),
+                               rtol=0, atol=1e-6)
+    out_k = decode_2d(codes_k, scale.reshape(1, 1), fmt, block_rows=32,
+                      interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(DECODERS[fmt](codes_r, scale)),
+        rtol=0, atol=1e-6)
+    am = absmax_2d(x, block_rows=32, interpret=True)
+    assert float(am) == float(jnp.max(jnp.abs(x)))
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("interp", ["oracle", True])
+def test_row_roundtrip_error_bound_and_ef_identity(fmt, interp, rng_key):
+    x = jax.random.normal(rng_key, (1000,)) * 3.0
+    codes, scales, err = encode_row(x, rng_key, fmt, interpret=interp)
+    xh = decode_row(codes, scales, fmt, interpret=interp)
+    # the EF residual IS the decode error, exactly as computed in f32
+    np.testing.assert_allclose(np.asarray(x - xh), np.asarray(err),
+                               rtol=0, atol=1e-6)
+    amax = float(jnp.max(jnp.abs(x)))
+    # int8: one linear step; fp8: one ulp at the top binade (2^-3 rel)
+    bound = (amax / 127.0 if fmt == "int8" else amax / 4.0)
+    assert float(jnp.max(jnp.abs(err))) <= bound
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_grid_values_roundtrip_exactly(fmt, rng_key):
+    # a value already on the quantization grid picks its own code under
+    # BOTH stochastic and deterministic rounding — this is what makes a
+    # refused row's gather -> (no re-encode) semantics consistent with
+    # "the stored copy is exact"
+    x = jax.random.normal(rng_key, (512,)) * 1.7
+    codes, scales, _ = encode_row(x, rng_key, fmt, deterministic=True,
+                                  interpret="oracle")
+    on_grid = decode_row(codes, scales, fmt, interpret="oracle")
+    for det, key in ((True, None), (False, jax.random.PRNGKey(5))):
+        codes2, scales2, err2 = encode_row(on_grid, key, fmt,
+                                           deterministic=det,
+                                           interpret="oracle")
+        np.testing.assert_array_equal(
+            np.asarray(codes2, np.float32), np.asarray(codes, np.float32))
+        assert float(jnp.max(jnp.abs(err2))) == 0.0
+
+
+def test_stochastic_rounding_is_unbiased():
+    # a constant row between grid points: the SR mean over many elements
+    # must land on the value, not on either neighbour
+    x = jnp.full((1 << 14,), 0.3) * 100.0
+    codes, scales, _ = encode_row(x, jax.random.PRNGKey(7), "int8",
+                                  interpret="oracle")
+    mean = float(jnp.mean(decode_row(codes, scales, "int8",
+                                     interpret="oracle")))
+    assert abs(mean - 30.0) < 0.05
+    u = u01_from_bits(det_bits((4,)))
+    np.testing.assert_array_equal(np.asarray(u), 0.5)
+
+
+def test_per_block_scales_tighten_mixed_magnitude_rows(rng_key):
+    # a row mixing magnitudes (layer-like): per-block scales cut the
+    # error on the small-magnitude half by the magnitude ratio
+    small = jax.random.normal(rng_key, (512,)) * 0.01
+    big = jax.random.normal(jax.random.PRNGKey(1), (512,)) * 10.0
+    x = jnp.concatenate([small, big])
+    _, _, err_row = encode_row(x, rng_key, "int8", interpret="oracle")
+    _, scales_b, err_blk = encode_row(x, rng_key, "int8", block_elems=512,
+                                      interpret="oracle")
+    assert scales_b.shape == (2,)
+    assert (float(jnp.max(jnp.abs(err_blk[:512])))
+            < 0.1 * float(jnp.max(jnp.abs(err_row[:512]))))
+    with pytest.raises(NotImplementedError, match="oracle backend only"):
+        encode_row(x, rng_key, "int8", block_elems=512, interpret=True)
+
+
+def test_bank_codec_validation():
+    assert as_bank_codec("int8") == BankCodec("int8")
+    assert as_bank_codec(BankCodec("fp8", block_elems=64)).block_elems == 64
+    assert as_bank_codec(None) is None
+    assert as_bank_codec("bfloat16") is None          # dense storage path
+    with pytest.raises(ValueError, match="unknown bank"):
+        as_bank_codec("int4")
+    with pytest.raises(ValueError, match="unknown bank codec"):
+        BankCodec("int16")
+
+
+# --------------------------- engine integration ----------------------------
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6, 3)), "b": jnp.zeros((3,))}
+    batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
+               "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4, 3))}
+    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batches, loss_fn, priv
+
+
+def _make_fed(loss_fn, priv, horizon=3, **kw):
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              theta_max=10.0, lr_scale=5.0))
+    fed.make_step(loss_fn, privatizer=priv, pack_params=True, **kw)
+    return fed
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_quant_bank_state_and_byte_cut(toy, fmt):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, bank_dtype=fmt)
+    state = fed.init_state(params)
+    bank = state.bank
+    assert isinstance(bank, QuantBank)
+    p = state.theta_L.size
+    assert bank.codes.shape == (N_OWNERS, p)
+    assert bank.codes.dtype == bank.codec.code_dtype
+    assert bank.scales.shape == (N_OWNERS, 1)
+    assert bank.residual.shape == (p,)
+    f32_bank = _make_fed(loss_fn, priv).init_state(params).bank
+    # codes at 1 byte/elem + f32 scales/residual: N*P + 4*N + 4*P resident
+    # bytes vs 4*N*P — the ratio approaches 4x as N and P grow (3.56x at
+    # the 32-owner MLP-scale bench config, 2.4x at this tiny toy)
+    assert f32_bank.nbytes == 4 * N_OWNERS * p
+    assert bank.nbytes == N_OWNERS * p + 4 * N_OWNERS + 4 * p
+    assert f32_bank.nbytes / bank.nbytes == pytest.approx(
+        4 * N_OWNERS * p / (N_OWNERS * p + 4 * N_OWNERS + 4 * p))
+    # every initial row decodes to within half a rounding step: a linear
+    # one for int8, a relative one (half an e4m3 ulp, |x|/16) for fp8
+    dec = np.asarray(bank.decode_rows())
+    ref = np.asarray(state.theta_L.buf)
+    step = np.asarray(bank.scales).max()
+    bound = (0.5 * step if fmt == "int8"
+             else np.abs(ref).max() / 16.0)
+    assert np.abs(dec - ref[None]).max() <= bound + 1e-7
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_refusal_rows_roundtrip_exactly_through_codec(toy, fmt):
+    # owner 0 exhausts after 2 grants; the refused tail must leave codes,
+    # scales AND the EF residual bit-identical, and every other owner's
+    # row untouched from init
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=2, bank_dtype=fmt)
+    state = fed.init_state(params)
+    init_codes = np.asarray(state.bank.codes, np.float32)
+    sub = lambda a, b: jax.tree_util.tree_map(lambda x: x[a:b], batches)
+    state, m = fed.run_rounds(state, sub(0, 2), jnp.zeros(2, jnp.int32),
+                              key=jax.random.PRNGKey(9))
+    assert not np.asarray(m["refused"]).any()
+    snap = (np.asarray(state.bank.codes, np.float32),
+            np.asarray(state.bank.scales),
+            np.asarray(state.bank.residual))
+    assert np.abs(snap[2]).max() > 0            # EF residual is live
+    state, m = fed.run_rounds(state, sub(2, 6), jnp.zeros(4, jnp.int32),
+                              key=jax.random.PRNGKey(10))
+    assert np.asarray(m["refused"]).all()
+    np.testing.assert_array_equal(
+        snap[0], np.asarray(state.bank.codes, np.float32))
+    np.testing.assert_array_equal(snap[1], np.asarray(state.bank.scales))
+    np.testing.assert_array_equal(snap[2], np.asarray(state.bank.residual))
+    # owners 1.. were never scheduled: rows still the init encode
+    np.testing.assert_array_equal(
+        init_codes[1:], np.asarray(state.bank.codes, np.float32)[1:])
+    led = fed.reconcile(state)
+    assert led[0]["responses"] == 2 and led[0]["refused"] == 4
+
+
+def test_step_loop_matches_fused_driver_to_tolerance(toy):
+    # the f32 bit-parity contract does NOT extend to quantized banks
+    # (XLA fuses the decode multiply differently in and out of the scan,
+    # same standing as bf16); the refusal pattern and ledger stay exact,
+    # trajectories agree to float tolerance
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    keys = jax.random.split(root, K)
+    fed_a = _make_fed(loss_fn, priv, bank_dtype="int8")
+    s_a = fed_a.init_state(params)
+    refused_a = []
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_a, m = fed_a.step(s_a, b, int(seq[k]), keys[k])
+        refused_a.append(bool(m["refused"]))
+    fed_b = _make_fed(loss_fn, priv, bank_dtype="int8")
+    s_b, m_b = fed_b.run_rounds(fed_b.init_state(params), batches, seq,
+                                key=root)
+    assert sum(refused_a) > 0
+    np.testing.assert_array_equal(np.asarray(refused_a),
+                                  np.asarray(m_b["refused"]))
+    np.testing.assert_allclose(np.asarray(s_a.theta_L.buf),
+                               np.asarray(s_b.theta_L.buf),
+                               rtol=1e-5, atol=2e-6)
+    step = float(np.asarray(s_a.bank.scales).max())
+    assert (np.abs(np.asarray(s_a.bank.decode_rows())
+                   - np.asarray(s_b.bank.decode_rows())).max()
+            <= step + 1e-6)
+    assert fed_b.reconcile(s_b) == fed_a.reconcile(s_a)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_grouped_owner_parallel_on_quant_bank(toy, fmt):
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    fed_s = _make_fed(loss_fn, priv, bank_dtype=fmt)
+    fed_g = _make_fed(loss_fn, priv, bank_dtype=fmt)
+    s_s, m_s = fed_s.run_rounds(fed_s.init_state(params), batches, seq,
+                                key=root)
+    s_g, m_g = fed_g.run_rounds(fed_g.init_state(params), batches, seq,
+                                key=root, owner_parallel=True)
+    np.testing.assert_array_equal(np.asarray(m_s["refused"]),
+                                  np.asarray(m_g["refused"]))
+    np.testing.assert_array_equal(np.asarray(m_s["owner"]),
+                                  np.asarray(m_g["owner"]))
+    assert fed_g.reconcile(s_g) == fed_s.reconcile(s_s)
+    g = np.asarray(s_g.theta_L.buf)
+    assert np.isfinite(g).all() and np.abs(g).max() <= 10.0
+    assert np.max(np.abs(np.asarray(s_s.theta_L.buf) - g)) < 2.0
+
+
+def test_fused_scan_unroll_is_bit_exact(toy):
+    # unroll trades loop-carry copies for code size; values are identical
+    # at ANY factor, on the f32 path (where the bit contract holds) and
+    # the quantized path alike
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    for bd in (None, "int8"):
+        fed_1 = _make_fed(loss_fn, priv, bank_dtype=bd)
+        fed_4 = _make_fed(loss_fn, priv, bank_dtype=bd, unroll=4)
+        s_1, m_1 = fed_1.run_rounds(fed_1.init_state(params), batches, seq,
+                                    key=root)
+        s_4, m_4 = fed_4.run_rounds(fed_4.init_state(params), batches, seq,
+                                    key=root)
+        np.testing.assert_array_equal(np.asarray(s_1.theta_L.buf),
+                                      np.asarray(s_4.theta_L.buf))
+        if bd is None:
+            np.testing.assert_array_equal(np.asarray(s_1.bank),
+                                          np.asarray(s_4.bank))
+        else:
+            np.testing.assert_array_equal(np.asarray(s_1.bank.codes),
+                                          np.asarray(s_4.bank.codes))
+            np.testing.assert_array_equal(np.asarray(s_1.bank.residual),
+                                          np.asarray(s_4.bank.residual))
+        for name in m_1:
+            np.testing.assert_array_equal(np.asarray(m_1[name]),
+                                          np.asarray(m_4[name]))
+
+
+def test_quant_state_donation_aliasing(toy):
+    params, batches, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv, horizon=K, bank_dtype="int8",
+                    donate=True)
+    state = fed.init_state(params)
+    sub = jax.tree_util.tree_map(lambda a: a[:4], batches)
+    new_state, _ = fed.run_rounds(state, sub, jnp.zeros(4, jnp.int32),
+                                  key=jax.random.PRNGKey(1))
+    assert state.bank.codes.is_deleted()
+    assert state.bank.residual.is_deleted()
+    assert state.theta_L.buf.is_deleted()
+    assert not new_state.bank.codes.is_deleted()
+    assert np.isfinite(np.asarray(new_state.theta_L.buf)).all()
+
+
+def test_fused_kernel_dp_round_on_quant_bank(toy):
+    # production stack: dp_round Pallas pass + int8 bank in one scan body
+    params, batches, loss_fn, _ = toy
+    priv = PrivatizerConfig(xi=1e-3, granularity="microbatch",
+                            n_microbatches=2, fused_kernel=True,
+                            kernel_block_rows=8)
+    fed = _make_fed(loss_fn, priv, horizon=2, bank_dtype="int8")
+    seq = jnp.asarray(np.arange(K) % 4, jnp.int32)
+    state, ms = fed.run_rounds(fed.init_state(params), batches, seq,
+                               key=jax.random.PRNGKey(6))
+    assert np.isfinite(np.asarray(state.theta_L.buf)).all()
+    granted = ~np.asarray(ms["refused"])
+    assert granted.sum() == 8
+    led = fed.reconcile(state)
+    assert all(led[i]["responses"] == 2 and led[i]["refused"] == 4
+               for i in range(4))
+
+
+# --------------------- Theorem-2 trajectory tolerance ----------------------
+def test_error_feedback_bank_stays_within_theorem2_tolerance(toy):
+    # Theorem 2's cost-of-privacy forecast is a function of the DP noise
+    # alone, so quantized storage may not add error of that order. The
+    # distance between two f32 runs differing ONLY in their noise key IS
+    # the DP-noise floor; the int8/fp8 runs share the f32 root run's
+    # Laplace draws exactly (the codec RNG stream is salted away from the
+    # privacy stream), so their deviation is pure quantization error —
+    # with stochastic rounding + error feedback it must stay well under
+    # one noise redraw AND a small fraction of the learning signal.
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    runs = {}
+    for name, bd, key in (("f32", None, root),
+                          ("f32_alt", None, jax.random.fold_in(root, 1)),
+                          ("int8", "int8", root), ("fp8", "fp8", root)):
+        fed = _make_fed(loss_fn, priv, horizon=K, bank_dtype=bd)
+        s, m = fed.run_rounds(fed.init_state(params), batches, seq,
+                              key=key)
+        assert not np.asarray(m["refused"]).any()
+        runs[name] = np.asarray(s.theta_L.buf)
+    theta0 = np.asarray(_make_fed(loss_fn, priv).init_state(
+        params).theta_L.buf)
+    displacement = np.linalg.norm(runs["f32"] - theta0)
+    noise_floor = np.linalg.norm(runs["f32_alt"] - runs["f32"])
+    assert displacement > 0 and noise_floor > 0
+    for name, tol in (("int8", 0.05), ("fp8", 0.15)):
+        dev = np.linalg.norm(runs[name] - runs["f32"])
+        assert dev < tol * displacement, (name, dev, displacement)
+        assert dev < 0.5 * noise_floor, (name, dev, noise_floor)
+
+
+def test_auto_max_group_tracks_schedule_statistics():
+    # single-owner schedule: grouping cannot win -> sequential
+    assert auto_max_group(np.zeros(32, np.int64)) == 1
+    # all-distinct schedule: big groups amortize the per-step bank copy
+    assert auto_max_group(np.arange(32)) >= 8
+    # the chosen cap never exceeds the longest conflict-free run
+    seq = np.asarray([0, 1, 2, 0, 1, 2, 0, 1, 2])
+    assert auto_max_group(seq) <= 3
+    assert auto_max_group(np.zeros(0, np.int64)) == 1

@@ -204,6 +204,62 @@ def test_bf16_bank_works_sharded(toy):
     assert fed_s.reconcile(s_s) == fed_u.reconcile(s_u)
 
 
+def test_bf16_bank_under_grouped_owner_parallel(toy):
+    # the bf16 bank previously only ran through the sequential scan in
+    # this suite; the grouped driver must keep the quantized-row
+    # semantics: exact refusal pattern and ledger spend vs the bf16
+    # sequential scan, rows written back in bf16, bounded theta deviation
+    params, batches, loss_fn, priv = toy
+    seq = jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    fed_s = _make_fed(loss_fn, priv, bank_dtype=jnp.bfloat16)
+    fed_g = _make_fed(loss_fn, priv, bank_dtype=jnp.bfloat16)
+    s_s, m_s = fed_s.run_rounds(fed_s.init_state(params), batches, seq,
+                                key=root)
+    s_g, m_g = fed_g.run_rounds(fed_g.init_state(params), batches, seq,
+                                key=root, owner_parallel=True)
+    assert s_g.bank.dtype == jnp.bfloat16
+    assert int(np.asarray(m_s["refused"]).sum()) > 0
+    np.testing.assert_array_equal(np.asarray(m_s["refused"]),
+                                  np.asarray(m_g["refused"]))
+    np.testing.assert_array_equal(np.asarray(s_s.ledger.spent),
+                                  np.asarray(s_g.ledger.spent))
+    assert fed_g.reconcile(s_g) == fed_s.reconcile(s_s)
+    g = np.asarray(s_g.theta_L.buf)
+    assert np.isfinite(g).all()
+    assert np.max(np.abs(np.asarray(s_s.theta_L.buf) - g)) < 2.0
+    # and the grouped driver composes with a mesh on the bf16 bank
+    mesh = make_host_mesh(model=2 if len(jax.devices()) % 2 == 0 else 1)
+    fed_m = _make_fed(loss_fn, priv, mesh=mesh, bank_dtype=jnp.bfloat16)
+    s_m, m_m = fed_m.run_rounds(fed_m.init_state(params), batches, seq,
+                                key=root, owner_parallel=True)
+    np.testing.assert_array_equal(np.asarray(m_s["refused"]),
+                                  np.asarray(m_m["refused"]))
+    assert fed_m.reconcile(s_m) == fed_g.ledger()
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+def test_quant_bank_works_sharded(toy, fmt):
+    # the QuantBank bundle (codes/scales/residual) under flat_shardings:
+    # codes rows over the data axes, scales rows likewise, residual laid
+    # out exactly like theta; refusals and reconciled ledger exact vs the
+    # unsharded quantized engine
+    from repro.federation import QuantBank
+    mesh = make_host_mesh(model=2 if len(jax.devices()) % 2 == 0 else 1)
+    fed_u, fed_s, s_u, s_s, m_u, m_s = _run_pair(toy, mesh, bank_dtype=fmt)
+    assert isinstance(s_s.bank, QuantBank)
+    np.testing.assert_array_equal(np.asarray(m_u["refused"]),
+                                  np.asarray(m_s["refused"]))
+    assert fed_s.reconcile(s_s) == fed_u.reconcile(s_u)
+    assert np.isfinite(np.asarray(s_s.theta_L.buf)).all()
+    if MULTI_DEVICE:
+        assert s_s.bank.codes.sharding.spec[0] in ("data", ("data",))
+        assert s_s.bank.scales.sharding.spec[0] in ("data", ("data",))
+        # the residual lives exactly where theta lives (they add)
+        assert (s_s.bank.residual.sharding.spec
+                == s_s.theta_L.buf.sharding.spec)
+
+
 # ------------------- reconcile on sharded states ----------------------------
 def test_sharded_reconcile_folds_bit_exactly_and_detects_drift(toy):
     params, batches, loss_fn, priv = toy
