@@ -12,10 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.federation import relative_fitness
 from repro.data import owner_shards
 from repro.federation import (Federation, FederationConfig, federate_problem,
-                              with_budgets)
+                              relative_fitness, with_budgets)
 
 N_PER, T, RUNS, SIGMA = 10_000, 1000, 12, 2e-5
 NS = (2, 5, 10, 25, 50)

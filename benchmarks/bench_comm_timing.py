@@ -2,8 +2,8 @@
 (i_k vs k) statistics."""
 from __future__ import annotations
 
-import numpy as np
 import jax
+import numpy as np
 
 from benchmarks.common import timed
 from repro.federation.clocks import owner_counts, poisson_schedule

@@ -8,10 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cop import fit_constants
-from repro.federation import Algo1Config, make_problem, run_many
-from repro.core.cop import bound_asymptotic, budget_sum
+from repro.core.cop import bound_asymptotic, budget_sum, fit_constants
 from repro.data import owner_shards
+from repro.federation import Algo1Config, make_problem, run_many
 
 N_OWNERS, T, RUNS, SIGMA = 3, 1000, 30, 2e-5
 NS = (10_000, 50_000, 250_000)

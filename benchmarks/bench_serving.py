@@ -18,10 +18,13 @@ def run(archs=None, batch: int = 2, steps: int = 3):
     for arch in archs or list_archs():
         cfg = get_config(arch).reduced()
         model = build_model(cfg, remat=False, moe_mode="ragged")
-        params = model.init(key, jnp.float32)
+        k_init, k_frames = jax.random.split(jax.random.fold_in(
+            key, hash(arch) & 0x7FFFFFFF))
+        params = model.init(k_init, jnp.float32)
         cache = model.init_cache(batch, 32, dtype=jnp.float32)
         if cfg.family == "audio":
-            frames = jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model))
+            frames = jax.random.normal(k_frames,
+                                       (batch, cfg.enc_seq, cfg.d_model))
             cache = model.prime_cross_cache(params, cache, frames)
         step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
         toks = jnp.zeros((batch, 1), jnp.int32)

@@ -30,15 +30,15 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
+from repro.data import OwnerDataPipeline, synthetic_owner_shards
+from repro.federation import (DataOwner, Federation, FederationConfig,
+                              PrivatizerConfig)
+from repro.models import build_model
 
 DENSE_124M = ModelConfig(
     name="dense-124m", family="dense", n_layers=12, d_model=768,
     n_heads=12, n_kv_heads=4, d_ff=2048, vocab=50304,
     source="gpt2-small-like demo config")
-from repro.federation import (DataOwner, Federation, FederationConfig,
-                              PrivatizerConfig)
-from repro.data import OwnerDataPipeline, synthetic_owner_shards
-from repro.models import build_model
 
 
 def main():
@@ -65,10 +65,10 @@ def main():
     if args.tiny:
         cfg = cfg.reduced()
     model = build_model(cfg, remat=False)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, jnp.float32)
-    n_params = sum(int(np.prod(l.shape))
-                   for l in jax.tree_util.tree_leaves(params))
+    key, init_key = jax.random.split(jax.random.PRNGKey(0))
+    params = model.init(init_key, jnp.float32)
+    n_params = sum(int(np.prod(leaf.shape))
+                   for leaf in jax.tree_util.tree_leaves(params))
     print(f"model: {cfg.name} ({n_params/1e6:.1f}M params, "
           f"{cfg.n_layers} layers)")
 
@@ -82,7 +82,8 @@ def main():
               for sz in pipe.owner_sizes]
     fed = Federation(owners, fcfg)
 
-    loss_fn = lambda p, b: model.loss(p, b)[0]
+    def loss_fn(p, b):
+        return model.loss(p, b)[0]
     fed.make_step(loss_fn,
                   privatizer=PrivatizerConfig(xi=1.0,
                                               granularity="microbatch",
@@ -103,8 +104,8 @@ def main():
             if m["refused"]:
                 continue
             if k % 25 == 0 or k == 1:
-                l = float(loss_fn(state.theta_L, batch))
-                losses.append(l)
+                loss = float(loss_fn(state.theta_L, batch))
+                losses.append(loss)
                 print(f"step {k:4d} owner={owner} central-loss={l:.4f} "
                       f"clip={float(m['clip_frac']):.2f} "
                       f"[{(time.time()-t0)/k:.2f}s/step]")
@@ -121,10 +122,10 @@ def main():
             done += k
             granted = int((~np.asarray(ms["refused"])).sum())
             last = {k2: v[-1] for k2, v in batches.items()}
-            l = float(loss_fn(state.theta_L, last))
-            losses.append(l)
+            loss = float(loss_fn(state.theta_L, last))
+            losses.append(loss)
             print(f"step {done:4d} ({k} rounds/dispatch, {granted} granted) "
-                  f"central-loss={l:.4f} "
+                  f"central-loss={loss:.4f} "
                   f"clip={float(np.asarray(ms['clip_frac']).mean()):.2f} "
                   f"[{(time.time()-t0)/done:.3f}s/step]")
         fed.reconcile(state)     # fold the device ledger into the host one

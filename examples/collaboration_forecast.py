@@ -10,11 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cop import fit_constants, min_owners_for_benefit
-from repro.federation import relative_fitness
-from repro.core.cop import budget_sum
+from repro.core.cop import budget_sum, fit_constants, min_owners_for_benefit
 from repro.data import owner_shards
-from repro.federation import Federation, FederationConfig, federate_problem
+from repro.federation import (Federation, FederationConfig, federate_problem,
+                              relative_fitness)
 
 N_PILOT, N_I, T = 5, 10_000, 1000
 

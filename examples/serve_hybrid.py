@@ -18,13 +18,13 @@ def main():
     cfg = get_config("zamba2-2.7b").reduced()
     window = 16                                # SWA on the shared attn block
     model = build_model(cfg, remat=False)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, jnp.float32)
+    k_init, k_prompt = jax.random.split(jax.random.PRNGKey(0))
+    params = model.init(k_init, jnp.float32)
 
     B, prompt_len, gen = 4, 8, 48
     total = prompt_len + gen
     cache = model.init_cache(B, total, window=window, dtype=jnp.float32)
-    prompt = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
+    prompt = jax.random.randint(k_prompt, (B, prompt_len), 0, cfg.vocab)
 
     step = jax.jit(lambda p, c, t, pos: model.decode_step(
         p, c, t, pos, window=window))

@@ -1,0 +1,27 @@
+"""dpcheck — DP-invariant static analyzer + runtime sanitizer.
+
+Static half: ``python -m repro.analysis.dpcheck [paths]`` runs the DPC1xx
+(PRNG key discipline), DPC2xx (host sync in scan-reachable code), DPC3xx
+(clip-before-noise, masked bank writes), DPC4xx (kernel triple) and
+DPC501 (donation safety) rule families over the tree. Runtime half:
+``with dpcheck.sanitize(): ...`` wraps the jax.random samplers to record
+consumed key material and raise on reuse.
+"""
+from repro.analysis.dpcheck.core import (RULE_DOCS, Violation, filter_new,
+                                         load_baseline, run, write_baseline)
+
+__all__ = ["RULE_DOCS", "Violation", "run", "load_baseline",
+           "write_baseline", "filter_new", "sanitize", "KeyReuseError"]
+
+
+def __getattr__(name):
+    # The runtime half needs jax; the static half (and the CLI, which CI
+    # runs in a jax-free lint venv) must not. PEP 562 keeps the import
+    # lazy so `python -m repro.analysis.dpcheck` works without jax.
+    if name in ("sanitize", "KeyReuseError"):
+        import importlib
+        mod = importlib.import_module("repro.analysis.dpcheck._sanitize")
+        globals()["sanitize"] = mod.sanitize
+        globals()["KeyReuseError"] = mod.KeyReuseError
+        return globals()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

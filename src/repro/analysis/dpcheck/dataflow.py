@@ -1,0 +1,195 @@
+"""Shared AST plumbing for the dpcheck rules.
+
+Small, deliberately intraprocedural helpers: dotted-name resolution,
+per-module function indexing (including nested defs), import maps, and the
+cross-module reachability walk used by the host-sync rules to find every
+function callable from the lax.scan / fori_loop round bodies.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted(call.func) or ""
+
+
+def assigned_names(target: ast.AST) -> List[str]:
+    """Plain names bound by an assignment target (tuples unpacked)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    return []
+
+
+def iter_functions(tree: ast.AST) -> Iterator[Tuple[str, ast.AST]]:
+    """(qualname, node) for every def in the module, nested included."""
+    def walk(node: ast.AST, prefix: str) -> Iterator[Tuple[str, ast.AST]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, FuncDef):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from walk(child, q + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+    yield from walk(tree, "")
+
+
+def param_names(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def import_map(tree: ast.AST) -> Dict[str, str]:
+    """local name -> fully qualified origin, for module-level imports."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    return out
+
+
+class ModuleIndex:
+    """Per-module lookup tables used by the reachability walk."""
+
+    def __init__(self, module: str, tree: ast.AST):
+        self.module = module
+        self.tree = tree
+        self.functions: Dict[str, ast.AST] = dict(iter_functions(tree))
+        self.imports = import_map(tree)
+        # factory pattern:  compute = _round_compute(...)  where the factory
+        # is a local def whose `return` hands back one of its nested defs.
+        self.factory_returns: Dict[str, str] = {}
+        for qual, fn in self.functions.items():
+            returned = self._returned_nested_def(qual, fn)
+            if returned:
+                self.factory_returns[qual] = returned
+
+    def _returned_nested_def(self, qual: str, fn: ast.AST) -> Optional[str]:
+        nested = {n.name: f"{qual}.{n.name}" for n in fn.body
+                  if isinstance(n, FuncDef)}
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Return)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in nested):
+                return nested[node.value.id]
+        return None
+
+    def resolve_local(self, name: str, scope: str) -> Optional[str]:
+        """Resolve a bare called name to a qualname in this module.
+
+        Searches innermost-out from `scope` (a qualname prefix), then
+        module level.
+        """
+        parts = scope.split(".") if scope else []
+        while True:
+            cand = ".".join(parts + [name]) if parts else name
+            if cand in self.functions:
+                return cand
+            if not parts:
+                return None
+            parts.pop()
+
+
+def reachable_functions(
+        indexes: Dict[str, ModuleIndex],
+        roots: List[Tuple[str, str]]) -> Set[Tuple[str, str]]:
+    """Transitive closure of (module, qualname) callable from `roots`.
+
+    Follows bare-name calls, the local factory pattern, and imports that
+    land in another analyzed module. `jax.*` / `jnp.*` calls terminate.
+    """
+    seen: Set[Tuple[str, str]] = set()
+    work = list(roots)
+    while work:
+        module, qual = work.pop()
+        if (module, qual) in seen:
+            continue
+        idx = indexes.get(module)
+        if idx is None or qual not in idx.functions:
+            continue
+        seen.add((module, qual))
+        fn = idx.functions[qual]
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if not name or name.split(".")[0] in ("jax", "jnp", "np"):
+                continue
+            head = name.split(".")[0]
+            local = idx.resolve_local(head, qual)
+            if local:
+                work.append((module, local))
+                if local in idx.factory_returns:
+                    work.append((module, idx.factory_returns[local]))
+                continue
+            origin = idx.imports.get(head)
+            if origin and origin in indexes:          # `import mod` form
+                tail = name.split(".", 1)[1] if "." in name else ""
+                if tail and tail in indexes[origin].functions:
+                    work.append((origin, tail))
+            elif origin:                               # from mod import f
+                mod, _, f = origin.rpartition(".")
+                if mod in indexes and f in indexes[mod].functions:
+                    work.append((mod, f))
+        # names bound from factory calls inside this fn:  b = factory(...)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                fname = call_name(node.value)
+                local = idx.resolve_local(fname.split(".")[0], qual)
+                if local and local in idx.factory_returns:
+                    work.append((module, idx.factory_returns[local]))
+    return seen
+
+
+def scan_body_roots(index: ModuleIndex) -> List[Tuple[str, str]]:
+    """Round-body functions handed to lax.scan / fori_loop in a module."""
+    roots: List[Tuple[str, str]] = []
+    for qual, fn in list(index.functions.items()) + [("", index.tree)]:
+        for node in ast.walk(fn) if qual else ast.walk(index.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            body_arg: Optional[ast.AST] = None
+            if name.endswith("lax.scan") and node.args:
+                body_arg = node.args[0]
+            elif name.endswith("lax.fori_loop") and len(node.args) >= 3:
+                body_arg = node.args[2]
+            if isinstance(body_arg, ast.Name):
+                local = index.resolve_local(body_arg.id, qual)
+                if local:
+                    roots.append((index.module, local))
+    return roots

@@ -1,0 +1,103 @@
+"""DPC501 — donation safety.
+
+A buffer donated through ``jax.jit(..., donate_argnums=...)`` is dead
+after the donating call; XLA may have aliased its memory into the output.
+Flag, per function: ``g = jax.jit(f, donate_argnums=(i, ...))`` followed
+by ``g(a, b, ...)`` and then any later read of a name that sat in a
+donated position, unless the name was rebound first (the idiomatic
+``state = step(state, ...)`` pattern is safe).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.dpcheck.core import FileCtx, Violation
+from repro.analysis.dpcheck.dataflow import (assigned_names, call_name,
+                                             iter_functions)
+
+
+def _donate_positions(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+    return ()
+
+
+def _own_nodes(s: ast.stmt) -> List[ast.AST]:
+    """The statement's own expressions — compound bodies are separate
+    statements in the linear pass and must not be walked twice."""
+    if isinstance(s, ast.For):
+        return [s.target, s.iter]
+    if isinstance(s, (ast.While, ast.If)):
+        return [s.test]
+    if isinstance(s, ast.With):
+        return [i.context_expr for i in s.items]
+    if isinstance(s, ast.Try):
+        return []
+    return [s]
+
+
+def check_file(ctx: FileCtx) -> List[Violation]:
+    out: List[Violation] = []
+    for qual, fn in iter_functions(ctx.tree):
+        donating: Dict[str, Tuple[int, ...]] = {}
+        dead: Dict[str, int] = {}          # var -> line it was donated at
+        # linear pass over this def's statements in source order, without
+        # descending into nested defs (they get their own pass)
+        stmts: List[ast.stmt] = []
+        todo = [s for s in fn.body
+                if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef))]
+        while todo:
+            s = todo.pop(0)
+            stmts.append(s)
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.stmt) and not isinstance(
+                        child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                    todo.append(child)
+        stmts.sort(key=lambda s: s.lineno)
+        for s in stmts:
+            bound: Set[str] = set()
+            if isinstance(s, ast.Assign):
+                for t in s.targets:
+                    bound.update(assigned_names(t))
+                if isinstance(s.value, ast.Call) and call_name(
+                        s.value).endswith("jit"):
+                    pos = _donate_positions(s.value)
+                    if pos:
+                        for n in bound:
+                            donating[n] = pos
+            own = _own_nodes(s)
+            # reads of dead names (before this statement rebinds them)
+            for node in (n for o in own for n in ast.walk(o)):
+                if (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id in dead):
+                    out.append(Violation(
+                        "DPC501", ctx.rel, node.lineno,
+                        f"`{node.id}` read in `{qual}` after being donated "
+                        f"(line {dead[node.id]}) — the buffer may be "
+                        "aliased into the output"))
+                    del dead[node.id]     # one report per donation
+            # new donations made by this statement
+            for node in (n for o in own for n in ast.walk(o)):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in donating):
+                    for i in donating[node.func.id]:
+                        if i < len(node.args) and isinstance(
+                                node.args[i], ast.Name):
+                            name = node.args[i].id
+                            if name not in bound:   # rebound = safe
+                                dead[name] = node.lineno
+            for n in bound:
+                dead.pop(n, None)
+    return out

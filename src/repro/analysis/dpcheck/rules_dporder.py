@@ -1,0 +1,191 @@
+"""DPC3xx — DP-order invariants.
+
+DPC301 (clip dominates noise): in any function that both clips and adds
+mechanism noise, the clip must come first on every path. Clip markers are
+calls whose name mentions ``clip`` (excluding jnp.clip — that is the
+theta_max projection, not sensitivity enforcement) and the inline
+``jnp.minimum(1.0, xi / ...)`` clip-factor pattern; a nested def containing
+a clip marker counts at its def site (the closure runs inside the scan).
+Noise markers are the mechanism entry points themselves. Functions with
+only one of the two families are skipped — convex owners bound sensitivity
+analytically and never clip, which is lawful.
+
+DPC302 (grant masks the bank write): in a function that consults the
+ledger (``.authorized(``), every bank-write call must be refusal-masked:
+either it takes an ``ok=``/``respond=`` keyword or its value arguments are
+derived from the grant mask (jnp.where on it). An unmasked write would let
+a refused round mutate owner state, voiding the budget accounting.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.dpcheck.core import FileCtx, Violation
+from repro.analysis.dpcheck.dataflow import (assigned_names, call_name,
+                                             iter_functions)
+
+NOISE_MARKERS = {
+    "jax.random.laplace", "jax.random.normal",
+    "laplace_noise_tree", "fused_scale_noise_tree",
+    "dp_round_flat", "dp_privatize_tree",
+}
+BANK_WRITERS = ("_write_bank", "_write_bank_rows", "_quant_write",
+                "dynamic_update_index_in_dim")
+MASK_KWARGS = ("ok", "respond", "granted")
+
+
+def _is_clip_call(call: ast.Call) -> bool:
+    name = call_name(call)
+    if not name:
+        return False
+    last = name.split(".")[-1]
+    if name in ("jnp.clip", "np.clip", "jax.numpy.clip"):
+        return False
+    if "clip" in last.lower():
+        return True
+    # jnp.minimum(1.0, xi / max(norm, eps)) — the clip-factor idiom
+    if name in ("jnp.minimum", "jax.numpy.minimum") and call.args:
+        a0 = call.args[0]
+        return isinstance(a0, ast.Constant) and a0.value == 1.0
+    return False
+
+
+def _is_noise_call(call: ast.Call) -> bool:
+    name = call_name(call)
+    return bool(name) and (name in NOISE_MARKERS
+                           or name.split(".")[-1] in NOISE_MARKERS)
+
+
+def _stmt_markers(s: ast.stmt) -> Set[str]:
+    """{'clip'}/{'noise'} markers contained in one statement."""
+    out: Set[str] = set()
+    if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        # closure defined here, executed later: its clip counts at def site
+        for node in ast.walk(s):
+            if isinstance(node, ast.Call) and _is_clip_call(node):
+                out.add("clip")
+        return out
+    for node in ast.walk(s):
+        if isinstance(node, ast.Call):
+            if _is_clip_call(node):
+                out.add("clip")
+            if _is_noise_call(node):
+                out.add("noise")
+    return out
+
+
+class _OrderWalker:
+    """Linear walk; flags noise seen on a path with no prior clip."""
+
+    def __init__(self, ctx: FileCtx):
+        self.ctx = ctx
+        self.out: List[Violation] = []
+
+    def block(self, stmts, clip_seen: bool) -> (bool, bool):
+        """-> (clip_seen after block, path terminated)."""
+        for s in stmts:
+            if isinstance(s, (ast.Return, ast.Raise)):
+                clip_seen = self.stmt(s, clip_seen)
+                return clip_seen, True
+            if isinstance(s, ast.If):
+                c1, d1 = self.block(s.body, clip_seen)
+                c2, d2 = self.block(s.orelse, clip_seen)
+                if d1 and not d2:
+                    clip_seen = c2
+                elif d2 and not d1:
+                    clip_seen = c1
+                else:
+                    clip_seen = c1 and c2
+                continue
+            if isinstance(s, (ast.For, ast.While, ast.With, ast.Try)):
+                inner = list(getattr(s, "body", []))
+                for h in getattr(s, "handlers", []):
+                    inner.extend(h.body)
+                inner.extend(getattr(s, "orelse", []))
+                inner.extend(getattr(s, "finalbody", []))
+                clip_seen, _ = self.block(inner, clip_seen)
+                continue
+            clip_seen = self.stmt(s, clip_seen)
+        return clip_seen, False
+
+    def stmt(self, s: ast.stmt, clip_seen: bool) -> bool:
+        markers = _stmt_markers(s)
+        if "noise" in markers and not clip_seen and "clip" not in markers:
+            self.pending.append(s.lineno)
+        return clip_seen or "clip" in markers
+
+    def check(self, qual: str, fn: ast.AST) -> List[Violation]:
+        all_markers: Set[str] = set()
+        for s in fn.body:
+            all_markers |= _stmt_markers(s)
+            for node in ast.walk(s):
+                if isinstance(node, ast.stmt):
+                    all_markers |= _stmt_markers(node)
+        if not ("clip" in all_markers and "noise" in all_markers):
+            return []
+        self.pending: List[int] = []
+        self.block(fn.body, False)
+        return [Violation(
+            "DPC301", self.ctx.rel, line,
+            f"noise added in `{qual}` on a path where the clip step has "
+            "not run — clipping must dominate the mechanism add")
+            for line in self.pending]
+
+
+def _grant_masks(fn: ast.AST) -> Set[str]:
+    """Names bound from `.authorized(...)` and names derived from them."""
+    masks: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            derived = False
+            for sub in ast.walk(node.value):
+                if (isinstance(sub, ast.Call)
+                        and call_name(sub).endswith(".authorized")):
+                    derived = True
+                if isinstance(sub, ast.Name) and sub.id in masks:
+                    derived = True
+            if derived:
+                for t in node.targets:
+                    for n in assigned_names(t):
+                        if n not in masks:
+                            masks.add(n)
+                            changed = True
+    return masks
+
+
+def _check_bank_writes(ctx: FileCtx, qual: str,
+                       fn: ast.AST) -> List[Violation]:
+    masks = _grant_masks(fn)
+    if not masks:
+        return []
+    out: List[Violation] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        last = name.split(".")[-1]
+        if last not in BANK_WRITERS:
+            continue
+        if any(kw.arg in MASK_KWARGS for kw in node.keywords):
+            continue
+        uses_mask = any(isinstance(sub, ast.Name) and sub.id in masks
+                        for a in node.args for sub in ast.walk(a))
+        if not uses_mask:
+            out.append(Violation(
+                "DPC302", ctx.rel, node.lineno,
+                f"bank write `{last}` in `{qual}` is not masked by the "
+                "ledger grant — refused rounds must be bit-exact no-ops"))
+    return out
+
+
+def check_file(ctx: FileCtx) -> List[Violation]:
+    out: List[Violation] = []
+    for qual, fn in iter_functions(ctx.tree):
+        out.extend(_OrderWalker(ctx).check(qual, fn))
+        out.extend(_check_bank_writes(ctx, qual, fn))
+    return out

@@ -1,0 +1,192 @@
+"""DPC2xx — host-sync / tracer-leak detection.
+
+The project-level half builds the set of functions reachable from the
+lax.scan / fori_loop round bodies in federation/deep.py and
+federation/convex.py (cross-module, factory-aware) and flags anything in
+them that would force a device->host sync or leak a tracer:
+
+    DPC201  .item(), np.asarray, jax.device_get, float()/int() on a
+            traced value
+    DPC202  bare python `if` on a traced value (tracer boolean coercion)
+    DPC203  jax.debug.print of a traced value
+
+Taint (= "traced value") is deliberately narrow: results of jax.*/jnp.*
+calls and arithmetic on them. Parameters are NOT tainted — static-config
+dispatch (`if cfg.fused_kernel:`) must stay legal.
+
+The file-level half (DPC204) catches the bench/example hot-loop pattern
+`int(owner_seq[i])` — a blocking transfer per iteration inside a python
+for/while — anywhere, not just in scan-reachable code. String-literal
+subscripts (metric dicts) and names rebound via np.asarray are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.dpcheck.core import FileCtx, Violation
+from repro.analysis.dpcheck.dataflow import (ModuleIndex, assigned_names,
+                                             call_name, reachable_functions,
+                                             scan_body_roots)
+
+ROOT_MODULES = ("repro.federation.deep", "repro.federation.convex")
+
+
+def _is_jaxish(name: str) -> bool:
+    return name.split(".")[0] in ("jax", "jnp", "lax")
+
+
+class _Taint(ast.NodeVisitor):
+    """Names assigned from jax/jnp call results (or derived) in one fn."""
+
+    def __init__(self) -> None:
+        self.tainted: Set[str] = set()
+
+    def is_tainted(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Call):
+            return _is_jaxish(call_name(e))
+        if isinstance(e, ast.BinOp):
+            return self.is_tainted(e.left) or self.is_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.is_tainted(e.operand)
+        if isinstance(e, ast.Compare):
+            return (self.is_tainted(e.left)
+                    or any(self.is_tainted(c) for c in e.comparators))
+        if isinstance(e, ast.Subscript):
+            return self.is_tainted(e.value)
+        if isinstance(e, (ast.BoolOp,)):
+            return any(self.is_tainted(v) for v in e.values)
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self.is_tainted(node.value):
+            for t in node.targets:
+                self.tainted.update(assigned_names(t))
+        self.generic_visit(node)
+
+
+def _fn_statements(fn: ast.AST):
+    """Walk a def without descending into nested defs (own reachability)."""
+    todo = list(fn.body)
+    while todo:
+        s = todo.pop(0)
+        yield s
+        for child in ast.iter_child_nodes(s):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            if isinstance(child, ast.stmt):
+                todo.append(child)
+
+
+def _check_reachable_fn(ctx: FileCtx, qual: str,
+                        fn: ast.AST) -> List[Violation]:
+    out: List[Violation] = []
+    taint = _Taint()
+    for s in _fn_statements(fn):
+        taint.visit(s)
+    where = f"in `{qual}` (reachable from a scan round body)"
+    for s in _fn_statements(fn):
+        if isinstance(s, (ast.If, ast.While)) and taint.is_tainted(s.test):
+            out.append(Violation(
+                "DPC202", ctx.rel, s.lineno,
+                f"python branch on a traced value {where} — use jnp.where/"
+                "lax.cond"))
+        for node in ast.walk(s if not isinstance(s, (ast.If, ast.While))
+                             else s.test):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name.endswith(".item"):
+                out.append(Violation(
+                    "DPC201", ctx.rel, node.lineno,
+                    f".item() host sync {where}"))
+            elif name in ("np.asarray", "numpy.asarray", "np.array",
+                          "numpy.array", "jax.device_get"):
+                out.append(Violation(
+                    "DPC201", ctx.rel, node.lineno,
+                    f"{name} forces a device->host transfer {where}"))
+            elif name in ("float", "int", "bool") and node.args and \
+                    taint.is_tainted(node.args[0]):
+                out.append(Violation(
+                    "DPC201", ctx.rel, node.lineno,
+                    f"{name}() on a traced value {where}"))
+            elif name == "jax.debug.print" and any(
+                    taint.is_tainted(a) for a in node.args[1:]
+                    ) or name == "jax.debug.print" and any(
+                    taint.is_tainted(kw.value) for kw in node.keywords):
+                out.append(Violation(
+                    "DPC203", ctx.rel, node.lineno,
+                    f"jax.debug.print of a traced (private) value {where}"))
+    return out
+
+
+def check_project(ctxs: List[FileCtx], root: str) -> List[Violation]:
+    indexes: Dict[str, ModuleIndex] = {
+        c.module: ModuleIndex(c.module, c.tree) for c in ctxs}
+    roots: List[Tuple[str, str]] = []
+    for mod in ROOT_MODULES:
+        if mod in indexes:
+            roots.extend(scan_body_roots(indexes[mod]))
+    reach = reachable_functions(indexes, roots)
+    by_module = {c.module: c for c in ctxs}
+    out: List[Violation] = []
+    for module, qual in sorted(reach):
+        ctx = by_module[module]
+        fn = indexes[module].functions[qual]
+        out.extend(_check_reachable_fn(ctx, qual, fn))
+    return out
+
+
+_SYNC_CASTS = ("int", "float")
+
+
+def check_file_loops(ctx: FileCtx) -> List[Violation]:
+    """DPC204 — per-element host sync inside a python hot loop."""
+    out: List[Violation] = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.For, ast.While)):
+            continue
+        jax_names: Set[str] = set()
+        host_names: Set[str] = set()
+        # names visible to the loop: any assignment in the enclosing module
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                cname = call_name(node.value)
+                names = [n for t in node.targets
+                         for n in assigned_names(t)]
+                if cname in ("np.asarray", "numpy.asarray", "np.array",
+                             "numpy.array", "jax.device_get", "list",
+                             "range"):
+                    host_names.update(names)
+                elif _is_jaxish(cname) or "." in cname:
+                    jax_names.update(names)
+        for node in ast.walk(fn):
+            sub = None
+            kind = None
+            if (isinstance(node, ast.Call)
+                    and call_name(node) in _SYNC_CASTS and node.args
+                    and isinstance(node.args[0], ast.Subscript)):
+                sub, kind = node.args[0], call_name(node)
+            elif (isinstance(node, ast.Call)
+                  and call_name(node).endswith(".item")
+                  and isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Subscript)):
+                sub, kind = node.func.value, ".item()"
+            if sub is None or not isinstance(sub.value, ast.Name):
+                continue
+            idx = sub.slice
+            if isinstance(idx, ast.Constant) and isinstance(idx.value, str):
+                continue                # metric-dict lookup, not an array
+            name = sub.value.id
+            if name in host_names or name not in jax_names:
+                continue
+            out.append(Violation(
+                "DPC204", ctx.rel, node.lineno,
+                f"{kind} on `{name}[...]` inside a python loop — one "
+                "blocking device->host sync per iteration; hoist with "
+                "np.asarray before the loop"))
+    return out

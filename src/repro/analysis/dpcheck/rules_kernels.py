@@ -1,0 +1,80 @@
+"""DPC4xx — kernel-triple conformance.
+
+Every directory under src/repro/kernels/ must ship the project's
+kernel.py / ops.py / ref.py triple (DPC401), each exporting at least one
+public function and ref.py exporting at least one ``*_ref`` oracle whose
+stem matches a kernel/ops public name (DPC402), and at least one test
+under tests/ must reference ``kernels.<name>`` so the oracle contract is
+actually exercised (DPC403).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List
+
+from repro.analysis.dpcheck.core import FileCtx, Violation
+
+TRIPLE = ("kernel.py", "ops.py", "ref.py")
+
+
+def _public_functions(ctx: FileCtx) -> List[str]:
+    return [n.name for n in ctx.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+def check_project(ctxs: List[FileCtx], root: str) -> List[Violation]:
+    out: List[Violation] = []
+    by_rel = {c.rel: c for c in ctxs}
+    kernel_dirs: Dict[str, List[str]] = {}
+    for c in ctxs:
+        parts = c.rel.split("/")
+        if ("kernels" in parts
+                and parts.index("kernels") + 3 == len(parts)
+                and parts[-1] != "__init__.py"):
+            kdir = "/".join(parts[:-1])
+            kernel_dirs.setdefault(kdir, []).append(parts[-1])
+
+    tests_dir = os.path.join(root, "tests")
+    test_sources = ""
+    if os.path.isdir(tests_dir):
+        for f in sorted(os.listdir(tests_dir)):
+            if f.endswith(".py"):
+                with open(os.path.join(tests_dir, f),
+                          encoding="utf-8") as fh:
+                    test_sources += fh.read()
+
+    for kdir, files in sorted(kernel_dirs.items()):
+        kname = kdir.split("/")[-1]
+        missing = [f for f in TRIPLE if f not in files]
+        if missing:
+            out.append(Violation(
+                "DPC401", f"{kdir}/__init__.py", 1,
+                f"kernel `{kname}` is missing {', '.join(missing)} — the "
+                "kernel/ops/ref triple is mandatory"))
+            continue
+        pub: Dict[str, List[str]] = {}
+        for f in TRIPLE:
+            ctx = by_rel.get(f"{kdir}/{f}")
+            pub[f] = _public_functions(ctx) if ctx else []
+            if ctx and not pub[f]:
+                out.append(Violation(
+                    "DPC402", ctx.rel, 1,
+                    f"kernel `{kname}`: {f} exports no public function"))
+        refs = [n for n in pub["ref.py"] if n.endswith("_ref")]
+        impl_tokens = {t for n in pub["kernel.py"] + pub["ops.py"]
+                       for t in n.split("_")}
+        if pub["ref.py"] and not any(
+                set(r[: -len("_ref")].split("_")) & impl_tokens
+                for r in refs):
+            out.append(Violation(
+                "DPC402", f"{kdir}/ref.py", 1,
+                f"kernel `{kname}`: no *_ref oracle matching a public "
+                "kernel/ops function"))
+        if test_sources and f"kernels.{kname}" not in test_sources:
+            out.append(Violation(
+                "DPC403", f"{kdir}/kernel.py", 1,
+                f"kernel `{kname}` has no kernel-vs-oracle test in tests/ "
+                f"(no test imports kernels.{kname})"))
+    return out

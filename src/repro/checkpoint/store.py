@@ -11,10 +11,10 @@ from __future__ import annotations
 import os
 from typing import Any, Optional
 
-import msgpack
-import numpy as np
 import jax
 import jax.numpy as jnp
+import msgpack
+import numpy as np
 
 
 def _flatten_with_paths(tree):

@@ -5,12 +5,12 @@ Mechanism + Schedule, ledger inside); this module keeps the old names
 importable and behaving exactly as before."""
 import warnings
 
+from repro.federation.convex import (Algo1Config, Algo1Trace, run_algorithm1,
+                                     run_many)
+
 warnings.warn(
     "repro.core.algorithm1 is a deprecated shim; import from repro.federation "
     "instead (it will be removed in a future PR)",
     DeprecationWarning, stacklevel=2)
-
-from repro.federation.convex import (Algo1Config, Algo1Trace, run_algorithm1,
-                                     run_many)
 
 __all__ = ["Algo1Config", "Algo1Trace", "run_algorithm1", "run_many"]

@@ -5,13 +5,13 @@ Mechanism + Schedule, ledger inside); this module keeps the old names
 importable and behaving exactly as before."""
 import warnings
 
+from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
+                                   make_sync_dp_step, make_train_step)
+
 warnings.warn(
     "repro.core.async_trainer is a deprecated shim; import from repro.federation "
     "instead (it will be removed in a future PR)",
     DeprecationWarning, stacklevel=2)
-
-from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   make_sync_dp_step, make_train_step)
 
 __all__ = ["AsyncDPConfig", "AsyncDPState", "init_state",
            "make_sync_dp_step", "make_train_step"]

@@ -5,13 +5,13 @@ importable. The session-level pluggable schedules (uniform / Poisson /
 availability-trace) live in ``repro.federation.schedules``."""
 import warnings
 
+from repro.federation.clocks import (Schedule, owner_counts,
+                                     poisson_schedule, uniform_schedule)
+
 warnings.warn(
     "repro.core.clocks is a deprecated shim; import from repro.federation "
     "instead (it will be removed in a future PR)",
     DeprecationWarning, stacklevel=2)
-
-from repro.federation.clocks import (Schedule, owner_counts,
-                                     poisson_schedule, uniform_schedule)
 
 __all__ = ["Schedule", "owner_counts", "poisson_schedule",
            "uniform_schedule"]

@@ -4,12 +4,12 @@ from ``repro.federation`` instead; this module keeps the old names
 importable."""
 import warnings
 
+from repro.federation.dp_sgd import (LossFn, PrivatizerConfig, clip_tree,
+                                     private_grad)
+
 warnings.warn(
     "repro.core.dp_sgd is a deprecated shim; import from repro.federation "
     "instead (it will be removed in a future PR)",
     DeprecationWarning, stacklevel=2)
-
-from repro.federation.dp_sgd import (LossFn, PrivatizerConfig, clip_tree,
-                                     private_grad)
 
 __all__ = ["LossFn", "PrivatizerConfig", "clip_tree", "private_grad"]

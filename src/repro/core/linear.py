@@ -3,15 +3,15 @@ as part of the unified federation API. Import from ``repro.federation``
 instead; this module keeps the old names importable."""
 import warnings
 
-warnings.warn(
-    "repro.core.linear is a deprecated shim; import from repro.federation "
-    "instead (it will be removed in a future PR)",
-    DeprecationWarning, stacklevel=2)
-
 from repro.federation.linear import (LinearProblem, Owner, fitness,
                                      make_problem, owner_grad,
                                      record_grad_bound, reg_grad,
                                      relative_fitness)
+
+warnings.warn(
+    "repro.core.linear is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["LinearProblem", "Owner", "fitness", "make_problem", "owner_grad",
            "record_grad_bound", "reg_grad", "relative_fitness"]

@@ -5,15 +5,15 @@ importable. The session-level pluggable mechanisms (with the accountant
 inside) live in ``repro.federation.mechanisms``."""
 import warnings
 
-warnings.warn(
-    "repro.core.privacy is a deprecated shim; import from repro.federation "
-    "instead (it will be removed in a future PR)",
-    DeprecationWarning, stacklevel=2)
-
 from repro.federation.privacy import (OwnerLedger, PrivacyAccountant,
                                       capped_rounds, laplace_noise,
                                       laplace_noise_tree,
                                       laplace_scale_theorem1)
+
+warnings.warn(
+    "repro.core.privacy is a deprecated shim; import from repro.federation "
+    "instead (it will be removed in a future PR)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["OwnerLedger", "PrivacyAccountant", "capped_rounds",
            "laplace_noise", "laplace_noise_tree", "laplace_scale_theorem1"]

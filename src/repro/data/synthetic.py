@@ -40,7 +40,7 @@ def health(n: int, seed: int = 0, p: int = 10,
     rng = np.random.default_rng(seed + 7919)
     # integer-coded categorical-ish features, normalized
     levels = rng.integers(2, 12, size=p)
-    X = np.stack([rng.integers(0, l, size=n) / l for l in levels], axis=1)
+    X = np.stack([rng.integers(0, lv, size=n) / lv for lv in levels], axis=1)
     X = 0.5 * (X - X.mean(axis=0, keepdims=True))
     theta_true = rng.uniform(0.0, 1.5, size=p)
     if theta_shift is not None:

@@ -86,7 +86,8 @@ def scan_engine(key, prob: LinearProblem, A: jax.Array, b: jax.Array,
     noise_keys = jax.random.split(k_noise, T)
 
     lr_own, lr_L = paper_rates(N, T, rho, sigma, lr_scale)
-    proj = lambda t: jnp.clip(t, -prob.theta_max, prob.theta_max)
+    def proj(t):
+        return jnp.clip(t, -prob.theta_max, prob.theta_max)
 
     def update(theta_L, bank, i_k, nk):
         theta_i = bank[i_k]

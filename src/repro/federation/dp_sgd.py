@@ -71,15 +71,15 @@ def resolve_interpret(flag: Optional[bool]):
 
 def _global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def clip_tree(tree, max_norm: float):
     norm = _global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree_util.tree_map(
-        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
+        lambda leaf: (leaf.astype(jnp.float32) * scale).astype(leaf.dtype), tree), norm
 
 
 def _group_batch(batch, n_groups):
@@ -107,11 +107,11 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
             return jax.grad(lambda p: loss_fn(p, ex1))(params)
         grads = jax.vmap(one)(batch)                 # leaves (B, ...)
         norms = jax.vmap(lambda i: _global_norm(
-            jax.tree_util.tree_map(lambda l: l[i], grads)))(jnp.arange(B))
+            jax.tree_util.tree_map(lambda leaf: leaf[i], grads)))(jnp.arange(B))
         scale = jnp.minimum(1.0, cfg.xi / jnp.maximum(norms, 1e-12))
         mean_grad = jax.tree_util.tree_map(
-            lambda l: jnp.mean(l.astype(jnp.float32)
-                               * scale.reshape((-1,) + (1,) * (l.ndim - 1)),
+            lambda leaf: jnp.mean(leaf.astype(jnp.float32)
+                               * scale.reshape((-1,) + (1,) * (leaf.ndim - 1)),
                                axis=0), grads)
         clip_frac = jnp.mean((norms > cfg.xi).astype(jnp.float32))
         max_norm = jnp.max(norms)
@@ -129,7 +129,7 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
                     interpret=resolve_interpret(cfg.kernel_interpret)))
                 s = jnp.minimum(1.0, cfg.xi / jnp.maximum(norm, 1e-12))
                 g = jax.tree_util.tree_map(
-                    lambda l: (l.astype(jnp.float32) * s).astype(l.dtype), g)
+                    lambda leaf: (leaf.astype(jnp.float32) * s).astype(leaf.dtype), g)
             else:
                 g, norm = clip_tree(g, cfg.xi)
             acc = jax.tree_util.tree_map(
@@ -137,7 +137,7 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
             return (acc, nclip + (norm > cfg.xi), jnp.maximum(mx, norm)), None
 
         zeros = jax.tree_util.tree_map(
-            lambda l: jnp.zeros(l.shape, jnp.float32), params)
+            lambda leaf: jnp.zeros(leaf.shape, jnp.float32), params)
         xs = batch if cfg.pre_grouped else _group_batch(batch, G)
         (acc, nclip, max_norm), _ = jax.lax.scan(
             body, (zeros, jnp.zeros((), jnp.float32),
@@ -167,8 +167,8 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
         leaves, treedef = jax.tree_util.tree_flatten(mean_grad)
         ks = jax.random.split(key, len(leaves))
         noise = jax.tree_util.tree_unflatten(
-            treedef, [noise_scale * jax.random.normal(k, l.shape, jnp.float32)
-                      for k, l in zip(ks, leaves)])
+            treedef, [noise_scale * jax.random.normal(k, leaf.shape, jnp.float32)
+                      for k, leaf in zip(ks, leaves)])
     else:
         raise ValueError(cfg.mechanism)
     noisy = jax.tree_util.tree_map(lambda g, w: g + w, mean_grad, noise)

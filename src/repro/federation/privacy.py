@@ -65,8 +65,8 @@ def laplace_noise(key, shape, scale: float, dtype=jnp.float32) -> jax.Array:
 def laplace_noise_tree(key, tree, scale: float):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    noisy = [laplace_noise(k, l.shape, scale, jnp.float32).astype(l.dtype)
-             for k, l in zip(keys, leaves)]
+    noisy = [laplace_noise(k, leaf.shape, scale, jnp.float32).astype(leaf.dtype)
+             for k, leaf in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, noisy)
 
 
@@ -191,9 +191,9 @@ class PrivacyAccountant:
                                       led.epsilon, **kw)
 
     def summary(self) -> Dict[int, Dict]:
-        return {i: {"epsilon": l.epsilon, "responses": l.responses,
-                    "spent": l.spent, "exhausted": l.exhausted}
-                for i, l in self.ledgers.items()}
+        return {i: {"epsilon": led.epsilon, "responses": led.responses,
+                    "spent": led.spent, "exhausted": led.exhausted}
+                for i, led in self.ledgers.items()}
 
     def device_ledger(self) -> DeviceLedger:
         """Snapshot the counters as a DeviceLedger (owners 0..N-1 dense).

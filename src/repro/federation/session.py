@@ -46,8 +46,8 @@ from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
                                    init_state_flat, make_fused_rounds,
                                    make_group_rounds, make_sync_dp_step,
                                    make_train_step)
-from repro.federation.flatten import ParamFlat
 from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.flatten import ParamFlat
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
 from repro.federation.owners import DataOwner

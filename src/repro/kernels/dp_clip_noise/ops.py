@@ -44,7 +44,7 @@ def dp_privatize_tree(grads: Any, key, xi: float, noise_scale: float, *,
                       block_rows: int = 256, interpret: bool = False) -> Any:
     """Clip the tree to global norm xi, add Laplace(noise_scale) noise."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
-    packed = [_pack(l, block_rows) for l in leaves]
+    packed = [_pack(leaf, block_rows) for leaf in leaves]
 
     sq = sum(sqnorm_2d(p, block_rows=block_rows, interpret=interpret)
              for p, _ in packed)
@@ -109,10 +109,10 @@ def fused_sqnorm_tree(tree: Any, *, block_rows: int = 256,
     leaves = jax.tree_util.tree_leaves(tree)
     if interpret == "oracle":
         from repro.kernels.dp_clip_noise.ref import sqnorm_ref
-        return sum(sqnorm_ref(l) for l in leaves)
-    return sum(sqnorm_2d(_pack(l, block_rows)[0], block_rows=block_rows,
+        return sum(sqnorm_ref(leaf) for leaf in leaves)
+    return sum(sqnorm_2d(_pack(leaf, block_rows)[0], block_rows=block_rows,
                          interpret=interpret)
-               for l in leaves)
+               for leaf in leaves)
 
 
 def fused_scale_noise_tree(tree: Any, key, gain, noise_scale, *,
@@ -130,11 +130,11 @@ def fused_scale_noise_tree(tree: Any, key, gain, noise_scale, *,
     keys = jax.random.split(key, len(leaves))
     if interpret == "oracle":
         from repro.kernels.dp_clip_noise.ref import scale_noise_ref
-        out = [scale_noise_ref(l, jax.random.bits(k, l.shape, jnp.uint32),
+        out = [scale_noise_ref(leaf, jax.random.bits(k, leaf.shape, jnp.uint32),
                                gain, noise_scale)
-               for l, k in zip(leaves, keys)]
+               for leaf, k in zip(leaves, keys)]
         return jax.tree_util.tree_unflatten(treedef, out)
-    packed = [_pack(l, block_rows) for l in leaves]
+    packed = [_pack(leaf, block_rows) for leaf in leaves]
     cs = jnp.asarray(gain, jnp.float32).reshape(1, 1)
     ns = jnp.asarray(noise_scale, jnp.float32).reshape(1, 1)
     out = []

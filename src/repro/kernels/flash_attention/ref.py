@@ -3,8 +3,8 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax.numpy as jnp
 import jax
+import jax.numpy as jnp
 
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -57,8 +57,9 @@ def ssd_chunk_scan(v: jax.Array, k: jax.Array, q: jax.Array, ld: jax.Array,
     B, H, nc, Q, P = v.shape
     N = k.shape[-1]
     grid = (B, H, nc)
-    sp = lambda *dims: pl.BlockSpec((1, 1, 1) + dims,
-                                    lambda b, h, c: (b, h, c, 0, 0))
+    def sp(*dims):
+        return pl.BlockSpec((1, 1, 1) + dims,
+                            lambda b, h, c: (b, h, c, 0, 0))
     y, hadd, cum, tot = pl.pallas_call(
         _ssd_chunk_kernel,
         grid=grid,

@@ -25,7 +25,8 @@ def ssd_chunked_pallas(v: jax.Array, ld: jax.Array, k: jax.Array,
     Q = min(chunk, S)
     pad = (-S) % Q
     if pad:
-        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def zpad(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
         v, k, q = zpad(v), zpad(k), zpad(q)
         g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
         ld = jnp.pad(ld, ((0, 0), (0, pad), (0, 0)))

@@ -7,8 +7,8 @@ device state.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -36,16 +36,17 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build_model(cfg, remat=False, moe_mode="ragged")
     key = jax.random.PRNGKey(args.seed)
-    params = model.init(key, jnp.float32)
+    key, k_init, k_frames, k_prompt = jax.random.split(key, 4)
+    params = model.init(k_init, jnp.float32)
 
     B = args.batch
     total = args.prompt_len + args.gen
     cache = model.init_cache(B, total, window=args.window, dtype=jnp.float32)
     if cfg.family == "audio":
-        frames = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+        frames = jax.random.normal(k_frames, (B, cfg.enc_seq, cfg.d_model))
         cache = model.prime_cross_cache(params, cache, frames)
 
-    prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    prompt = jax.random.randint(k_prompt, (B, args.prompt_len), 0, cfg.vocab)
     step = jax.jit(
         lambda p, c, t, pos: model.decode_step(p, c, t, pos,
                                                window=args.window))

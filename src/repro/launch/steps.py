@@ -73,15 +73,16 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
     p_spec = rules.param_specs(p_sds, cfg, mesh)
     bank_spec = rules.param_specs(
-        jax.tree_util.tree_map(lambda l: jax.ShapeDtypeStruct(
-            (acfg.n_owners,) + l.shape, l.dtype), p_sds),
+        jax.tree_util.tree_map(lambda leaf: jax.ShapeDtypeStruct(
+            (acfg.n_owners,) + leaf.shape, leaf.dtype), p_sds),
         cfg, mesh, bank_axis=True)
     state_spec = type(state_sds)(theta_L=p_spec, bank=bank_spec, step=P())
     b_spec = rules.batch_specs(batch_sds, shape, mesh, microbatches=mb)
 
-    sh = lambda t: jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), t,
-        is_leaf=lambda x: isinstance(x, P))
+    def sh(t):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
     return StepBundle(
         step=step,
         args=(state_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32),
@@ -108,9 +109,10 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     batch_sds = specs_mod.train_batch_specs(cfg, shape, with_labels=False)
     p_spec = rules.param_specs(p_sds, cfg, mesh)
     b_spec = rules.batch_specs(batch_sds, shape, mesh)
-    sh = lambda t: jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), t,
-        is_leaf=lambda x: isinstance(x, P))
+    def sh(t):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
     return StepBundle(step, (p_sds, batch_sds),
                       (sh(p_spec), sh(b_spec)), (), "prefill")
 
@@ -134,9 +136,10 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     B = shape.global_batch
     tok_spec = P(da, None) if B % rules.axis_size(mesh, da) == 0 else P(None, None)
 
-    sh = lambda t: jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), t,
-        is_leaf=lambda x: isinstance(x, P))
+    def sh(t):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
     return StepBundle(step, (p_sds, cache_sds, tok_sds, pos_sds),
                       (sh(p_spec), sh(c_spec), NamedSharding(mesh, tok_spec),
                        _replicated(mesh)),

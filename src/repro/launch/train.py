@@ -19,11 +19,11 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
+from repro.data import OwnerDataPipeline, synthetic_owner_shards
 from repro.federation.deep import (AsyncDPConfig, init_state,
                                    make_train_step)
 from repro.federation.dp_sgd import PrivatizerConfig
 from repro.federation.privacy import PrivacyAccountant
-from repro.data import OwnerDataPipeline, synthetic_owner_shards
 from repro.models import build_model
 
 
@@ -55,9 +55,9 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg, remat=False, moe_mode="ragged")
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key, jnp.float32)
-    n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+    key, init_key = jax.random.split(jax.random.PRNGKey(args.seed))
+    params = model.init(init_key, jnp.float32)
+    n_params = sum(np.prod(leaf.shape) for leaf in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
           f"owners={args.owners}")
 

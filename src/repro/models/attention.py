@@ -90,7 +90,7 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     pc = kv_positions.reshape(n_chunks, kv_chunk)
 
     def step(carry, chunk):
-        m, l, acc = carry
+        m, denom, acc = carry
         kj, vj, pj = chunk
         s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kj,
                        preferred_element_type=jnp.float32) * scale
@@ -106,17 +106,17 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, mj)
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        denom_new = denom * corr + jnp.sum(p, axis=-1)
         o = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(q.dtype), vj,
                        preferred_element_type=jnp.float32)
         acc_new = acc * corr[..., None] + o
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((B, Sq, Kv, G), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((B, Sq, Kv, G), jnp.float32)
+    denom0 = jnp.zeros((B, Sq, Kv, G), jnp.float32)
     a0 = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    (m, denom, acc), _ = jax.lax.scan(step, (m0, denom0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 

@@ -243,7 +243,7 @@ class LM:
             # the inner scan then saves every layer's full internals during
             # the recompute (measured 6x temp blow-up before this fix).
             grouped = jax.tree_util.tree_map(
-                lambda l: l.reshape((G, cfg.n_layers // G) + l.shape[1:]),
+                lambda leaf: leaf.reshape((G, cfg.n_layers // G) + leaf.shape[1:]),
                 blocks)
             inner_body = self._maybe_remat(body)
 
@@ -304,7 +304,7 @@ class LM:
         ae = cfg.attn_every
         n_groups = cfg.n_layers // ae
         grouped = jax.tree_util.tree_map(
-            lambda l: l.reshape((n_groups, ae) + l.shape[1:]),
+            lambda leaf: leaf.reshape((n_groups, ae) + leaf.shape[1:]),
             params["blocks"])
 
         def inner(h, blk):

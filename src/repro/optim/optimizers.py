@@ -53,7 +53,8 @@ def sgd(lr: Callable[[jax.Array], jax.Array], momentum: float = 0.0):
 def adamw(lr: Callable[[jax.Array], jax.Array], b1=0.9, b2=0.95, eps=1e-8,
           weight_decay=0.0):
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return OptState(mu=tmap(z, params), nu=tmap(z, params),
                         count=jnp.zeros((), jnp.int32))
 

@@ -44,8 +44,8 @@ def test_smoke_forward_and_grad(arch, rng_key):
     assert jnp.isfinite(loss) and float(loss) > 0
 
     grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
-    gnorm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
-                         for l in jax.tree_util.tree_leaves(grads)))
+    gnorm = jnp.sqrt(sum(jnp.sum(leaf.astype(jnp.float32) ** 2)
+                         for leaf in jax.tree_util.tree_leaves(grads)))
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
 
 

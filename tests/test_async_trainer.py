@@ -26,7 +26,8 @@ def setup():
         lr_scale=100.0)
     batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab),
              "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab)}
-    loss_fn = lambda p, b: model.loss(p, b)[0]
+    def loss_fn(p, b):
+        return model.loss(p, b)[0]
     return model, params, acfg, batch, loss_fn, key
 
 
@@ -80,5 +81,5 @@ def test_sync_baseline_runs(setup):
     batches = jax.tree_util.tree_map(
         lambda a: jnp.stack([a] * acfg.n_owners), batch)
     new = step(params, batches, key)
-    assert all(jnp.all(jnp.isfinite(l))
-               for l in jax.tree_util.tree_leaves(new))
+    assert all(jnp.all(jnp.isfinite(leaf))
+               for leaf in jax.tree_util.tree_leaves(new))

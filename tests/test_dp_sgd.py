@@ -24,8 +24,8 @@ def setup(rng_key):
 def test_clip_tree_norm():
     tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5, 5)) * -2.0}
     clipped, norm = clip_tree(tree, 1.0)
-    total = jnp.sqrt(sum(jnp.sum(l ** 2)
-                         for l in jax.tree_util.tree_leaves(clipped)))
+    total = jnp.sqrt(sum(jnp.sum(leaf ** 2)
+                         for leaf in jax.tree_util.tree_leaves(clipped)))
     assert float(total) == pytest.approx(1.0, rel=1e-5)
     assert float(norm) > 1.0
     small, _ = clip_tree(tree, 1e9)            # no-op below threshold
@@ -51,8 +51,8 @@ def test_example_clipping_binds(setup, rng_key):
     cfg = PrivatizerConfig(xi=1e-3, granularity="example")
     g, m = private_grad(_loss, params, batch, rng_key, cfg=cfg,
                         noise_scale=0.0)
-    norm = jnp.sqrt(sum(jnp.sum(l ** 2)
-                        for l in jax.tree_util.tree_leaves(g)))
+    norm = jnp.sqrt(sum(jnp.sum(leaf ** 2)
+                        for leaf in jax.tree_util.tree_leaves(g)))
     assert float(norm) <= 1e-3 + 1e-6          # mean of clipped <= xi
     assert float(m["clip_frac"]) == 1.0
 
@@ -75,5 +75,5 @@ def test_gaussian_mechanism(setup, rng_key):
                            mechanism="gaussian")
     g, _ = private_grad(_loss, params, batch, rng_key, cfg=cfg,
                         noise_scale=2.0)
-    assert all(jnp.all(jnp.isfinite(l))
-               for l in jax.tree_util.tree_leaves(g))
+    assert all(jnp.all(jnp.isfinite(leaf))
+               for leaf in jax.tree_util.tree_leaves(g))

@@ -1,0 +1,460 @@
+"""dpcheck static-analyzer contract tests.
+
+Every rule family gets a known-bad fixture (flagged with the right rule id
+on the right line) and a known-good twin (clean). On top of that:
+
+  * self-scan — src/repro/federation/ and src/repro/kernels/ must be clean
+    with ZERO baseline entries (the acceptance bar for the DP engine);
+  * the suppression comment and baseline workflows round-trip;
+  * the deliberately-seeded key-reuse fixture is caught by BOTH halves:
+    the static pass (DPC101) and the runtime sanitizer (KeyReuseError).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.dpcheck import (RULE_DOCS, filter_new, load_baseline,
+                                    run, write_baseline)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BAD_REUSE = textwrap.dedent("""
+    import jax
+
+    def draw(key):
+        a = jax.random.normal(key, (2,))
+        b = jax.random.laplace(key, (2,))
+        return a + b
+""")
+
+
+def _scan_snippet(tmp_path, src, rel="snippet.py"):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return run([str(path)], root=str(tmp_path))
+
+
+def _rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ------------------------- DPC1xx: key discipline --------------------------
+def test_dpc101_double_consume(tmp_path):
+    vs = _scan_snippet(tmp_path, BAD_REUSE)
+    assert _rules(vs) == ["DPC101"]
+    assert vs[0].line == 6          # the second sampler is the violation
+
+
+def test_dpc101_good_twin_split(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key):
+            ka, kb = jax.random.split(key)
+            a = jax.random.normal(ka, (2,))
+            b = jax.random.laplace(kb, (2,))
+            return a + b
+    """)
+    assert vs == []
+
+
+def test_dpc101_loop_invariant_key(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+    assert "DPC101" in _rules(vs)
+
+
+def test_dpc101_loop_fresh_key_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key, n):
+            out = []
+            for k in jax.random.split(key, n):
+                out.append(jax.random.normal(k, (2,)))
+            return out
+    """)
+    assert vs == []
+
+
+def test_dpc102_parent_used_after_split(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key):
+            ks = jax.random.split(key, 3)
+            return jax.random.normal(key, (2,))
+    """)
+    assert _rules(vs) == ["DPC102"]
+
+
+def test_dpc102_rebound_parent_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key):
+            key, sub = jax.random.split(key)
+            return jax.random.normal(key, (2,))
+    """)
+    assert vs == []
+
+
+def test_dpc103_constant_seed_library_only(tmp_path):
+    src = """
+        import jax
+
+        def setup():
+            return jax.random.PRNGKey(0)
+    """
+    lib = _scan_snippet(tmp_path, src, rel="src/repro/thing.py")
+    assert _rules(lib) == ["DPC103"]
+    bench = _scan_snippet(tmp_path, src, rel="benchmarks/thing.py")
+    assert bench == []
+
+
+def test_dpc104_opaque_key_expression(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(seed):
+            return jax.random.normal(make_key(seed), (2,))
+    """)
+    assert _rules(vs) == ["DPC104"]
+
+
+def test_dpc104_derived_key_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def draw(key, i):
+            return jax.random.normal(jax.random.fold_in(key, i), (2,))
+    """)
+    assert vs == []
+
+
+def test_dpc105_double_escape(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def round(key, x):
+            a = helper_one(x, key)
+            b = helper_two(x, key)
+            return a + b
+    """)
+    assert _rules(vs) == ["DPC105"]
+
+
+def test_dpc105_fold_in_handoff_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def round(key, x):
+            a = helper_one(x, jax.random.fold_in(key, 0))
+            b = helper_two(x, jax.random.fold_in(key, 1))
+            return a + b
+    """)
+    assert vs == []
+
+
+# ----------------------- DPC2xx: host-sync in scan -------------------------
+_SCAN_MODULE = """
+    import jax
+    import jax.numpy as jnp
+    from repro.federation.helpers import metric
+
+    def make_rounds():
+        def body(carry, x):
+            return carry + metric(x), None
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+        return run
+"""
+
+
+def _write_fed(tmp_path, helper_src):
+    fed = tmp_path / "src" / "repro" / "federation"
+    fed.mkdir(parents=True)
+    (fed / "deep.py").write_text(textwrap.dedent(_SCAN_MODULE))
+    (fed / "convex.py").write_text("")
+    (fed / "helpers.py").write_text(textwrap.dedent(helper_src))
+    return run([str(tmp_path / "src")], root=str(tmp_path))
+
+
+def test_dpc201_host_sync_reachable_from_scan(tmp_path):
+    vs = _write_fed(tmp_path, """
+        import numpy as np
+
+        def metric(x):
+            return float(np.asarray(x).mean())
+    """)
+    assert "DPC201" in _rules(vs)
+    assert any(v.path.endswith("helpers.py") for v in vs)
+
+
+def test_dpc201_good_twin_stays_on_device(tmp_path):
+    vs = _write_fed(tmp_path, """
+        import jax.numpy as jnp
+
+        def metric(x):
+            return jnp.mean(x)
+    """)
+    assert vs == []
+
+
+def test_dpc202_branch_on_traced_value(tmp_path):
+    vs = _write_fed(tmp_path, """
+        import jax.numpy as jnp
+
+        def metric(x):
+            m = jnp.mean(x)
+            if m > 0:
+                return m
+            return -m
+    """)
+    assert "DPC202" in _rules(vs)
+
+
+def test_dpc202_static_config_branch_ok(tmp_path):
+    vs = _write_fed(tmp_path, """
+        import jax.numpy as jnp
+
+        def metric(x, fused=False):
+            if fused:
+                return jnp.mean(x) * 2
+            return jnp.mean(x)
+    """)
+    assert vs == []
+
+
+def test_dpc204_hot_loop_element_sync(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def drive(fed, state):
+            seq = jax.random.randint(jax.random.PRNGKey(0), (8,), 0, 4)
+            for i in range(8):
+                state = fed.step(state, int(seq[i]))
+            return state
+    """, rel="benchmarks/bench_x.py")
+    assert "DPC204" in _rules(vs)
+
+
+def test_dpc204_hoisted_good_twin(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+        import numpy as np
+
+        def drive(fed, state):
+            seq = np.asarray(
+                jax.random.randint(jax.random.PRNGKey(0), (8,), 0, 4))
+            for i in range(8):
+                state = fed.step(state, int(seq[i]))
+            return state
+    """, rel="benchmarks/bench_x.py")
+    assert vs == []
+
+
+# ------------------------ DPC3xx: DP-order invariants ----------------------
+def test_dpc301_noise_before_clip(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def privatize(g, key, xi, scale):
+            noisy = g + scale * jax.random.laplace(key, g.shape)
+            norm = jnp.linalg.norm(noisy)
+            return noisy * jnp.minimum(1.0, xi / norm)
+    """)
+    assert "DPC301" in _rules(vs)
+
+
+def test_dpc301_clip_then_noise_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def privatize(g, key, xi, scale):
+            norm = jnp.linalg.norm(g)
+            g = g * jnp.minimum(1.0, xi / norm)
+            return g + scale * jax.random.laplace(key, g.shape)
+    """)
+    assert vs == []
+
+
+def test_dpc302_unmasked_bank_write(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, bank, new_i, owner_idx, theta):
+            ok = led.authorized(owner_idx)
+            theta = jnp.where(ok, theta, theta * 0)
+            return _write_bank(bank, new_i, owner_idx)
+    """)
+    assert "DPC302" in _rules(vs)
+
+
+def test_dpc302_masked_write_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, bank, new_i, old_i, owner_idx):
+            ok = led.authorized(owner_idx)
+            masked = jnp.where(ok, new_i, old_i)
+            return _write_bank(bank, masked, owner_idx)
+    """)
+    assert vs == []
+
+
+# ----------------------- DPC4xx: kernel conformance ------------------------
+def _kernel_tree(tmp_path, files, test_src=""):
+    kd = tmp_path / "src" / "repro" / "kernels" / "mykern"
+    kd.mkdir(parents=True, exist_ok=True)
+    for name, src in files.items():
+        (kd / name).write_text(textwrap.dedent(src))
+    td = tmp_path / "tests"
+    td.mkdir(exist_ok=True)
+    (td / "test_k.py").write_text(test_src)
+    return run([str(tmp_path / "src")], root=str(tmp_path))
+
+
+def test_dpc401_missing_triple_member(tmp_path):
+    vs = _kernel_tree(tmp_path, {"kernel.py": "def op_2d(x):\n    return x\n"})
+    assert "DPC401" in _rules(vs)
+
+
+def test_dpc403_no_oracle_test(tmp_path):
+    files = {"kernel.py": "def op_2d(x):\n    return x\n",
+             "ops.py": "def op_tree(t):\n    return t\n",
+             "ref.py": "def op_ref(x):\n    return x\n"}
+    vs = _kernel_tree(tmp_path, files, test_src="import os\n")
+    assert "DPC403" in _rules(vs)
+    vs = _kernel_tree(tmp_path, files,
+                      test_src="from repro.kernels.mykern.ref import op_ref\n")
+    assert vs == []
+
+
+# -------------------------- DPC501: donation safety ------------------------
+def test_dpc501_use_after_donation(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def drive(buf, x):
+            g = jax.jit(update, donate_argnums=(0,))
+            out = g(buf, x)
+            return buf + out
+    """)
+    assert _rules(vs) == ["DPC501"]
+
+
+def test_dpc501_rebound_state_ok(tmp_path):
+    vs = _scan_snippet(tmp_path, """
+        import jax
+
+        def drive(state, xs):
+            g = jax.jit(update, donate_argnums=0)
+            for x in xs:
+                state = g(state, x)
+            return state
+    """)
+    assert vs == []
+
+
+# ------------------- suppressions, baseline, CLI, self-scan ----------------
+def test_inline_suppression(tmp_path):
+    src = BAD_REUSE.replace(
+        "b = jax.random.laplace(key, (2,))",
+        "b = jax.random.laplace(key, (2,))  # dpcheck: ignore[DPC101]")
+    assert _scan_snippet(tmp_path, src) == []
+
+
+def test_suppression_wrong_rule_does_not_silence(tmp_path):
+    src = BAD_REUSE.replace(
+        "b = jax.random.laplace(key, (2,))",
+        "b = jax.random.laplace(key, (2,))  # dpcheck: ignore[DPC999]")
+    assert _rules(_scan_snippet(tmp_path, src)) == ["DPC101"]
+
+
+def test_baseline_roundtrip(tmp_path):
+    (tmp_path / "bad.py").write_text(BAD_REUSE)
+    vs = run([str(tmp_path / "bad.py")], root=str(tmp_path))
+    assert vs
+    bl = tmp_path / "baseline.json"
+    write_baseline(str(bl), vs)
+    assert filter_new(vs, load_baseline(str(bl))) == []
+    # a NEW violation still fails against the old baseline
+    (tmp_path / "bad.py").write_text(
+        BAD_REUSE + "\n\ndef more(key):\n"
+        "    jax.random.normal(key, (2,))\n"
+        "    return jax.random.normal(key, (2,))\n")
+    vs2 = run([str(tmp_path / "bad.py")], root=str(tmp_path))
+    assert len(filter_new(vs2, load_baseline(str(bl)))) == 1
+
+
+def test_cli_json_and_exit_codes(tmp_path):
+    (tmp_path / "bad.py").write_text(BAD_REUSE)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.dpcheck", "bad.py",
+         "--format=json"],
+        cwd=str(tmp_path), env=env, capture_output=True, text=True)
+    assert r.returncode == 1
+    payload = json.loads(r.stdout)
+    assert payload["new_count"] == 1
+    assert payload["violations"][0]["rule"] == "DPC101"
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.dpcheck", "good.py"],
+        cwd=str(tmp_path), env=env, capture_output=True, text=True)
+    assert r.returncode == 0
+
+
+def test_rule_docs_cover_all_emitted_rules():
+    assert {r for r in RULE_DOCS} >= {
+        "DPC101", "DPC102", "DPC103", "DPC104", "DPC105",
+        "DPC201", "DPC202", "DPC203", "DPC204",
+        "DPC301", "DPC302", "DPC401", "DPC402", "DPC403", "DPC501"}
+
+
+def test_self_scan_engine_clean_with_zero_baseline():
+    """The DP engine and kernels pass with NO baseline suppressions."""
+    vs = run(["src/repro/federation", "src/repro/kernels"], root=REPO)
+    assert vs == [], [v.format() for v in vs]
+
+
+def test_self_scan_whole_tree_clean():
+    vs = run(["src", "benchmarks", "examples"], root=REPO)
+    assert vs == [], [v.format() for v in vs]
+
+
+def test_committed_baseline_is_empty():
+    bl = os.path.join(REPO, ".dpcheck-baseline.json")
+    assert load_baseline(bl) == set()
+
+
+# ------------- seeded reuse caught by BOTH static and runtime --------------
+def test_seeded_reuse_caught_by_both_halves(tmp_path):
+    from repro.analysis.dpcheck import KeyReuseError, sanitize
+    # static half
+    vs = _scan_snippet(tmp_path, BAD_REUSE)
+    assert _rules(vs) == ["DPC101"]
+    # runtime half: execute the same snippet under the sanitizer
+    ns = {}
+    exec(compile(BAD_REUSE, "<fixture>", "exec"), ns)
+    import jax
+    with pytest.raises(KeyReuseError):
+        with sanitize():
+            ns["draw"](jax.random.PRNGKey(0))

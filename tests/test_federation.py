@@ -31,7 +31,8 @@ def toy_deep():
     params = {"w": jax.random.normal(key, (3,)), "b": jnp.zeros(())}
     batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 3)),
              "y": jax.random.normal(jax.random.PRNGKey(2), (4,))}
-    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     priv = PrivatizerConfig(xi=1.0, granularity="example")
     return params, batch, loss_fn, priv
 
@@ -310,8 +311,8 @@ def test_sync_deep_weights_drop_exhausted_owner(toy_deep):
     batches = jax.tree_util.tree_map(lambda a: jnp.stack([a] * 2), batch)
     key = jax.random.PRNGKey(0)
     p1 = fed.sync_round(params, batches, key)            # both live
-    assert all(np.isfinite(np.asarray(l)).all()
-               for l in jax.tree_util.tree_leaves(p1))
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(p1))
     p2 = fed.sync_round(params, batches, key)            # both now exhausted
     assert _trees_equal(p2, params)                      # no-op round
     led = fed.ledger()

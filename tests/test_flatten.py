@@ -45,8 +45,8 @@ def test_roundtrip_every_model_architecture(arch, rng_key):
     flat = pack_params(params)
     assert flat.buf.dtype == jnp.float32
     assert flat.buf.shape == (flat.size,)
-    assert flat.size == sum(int(np.prod(l.shape)) if l.shape else 1
-                            for l in _leaves(params))
+    assert flat.size == sum(int(np.prod(leaf.shape)) if leaf.shape else 1
+                            for leaf in _leaves(params))
     _assert_tree_equal(flat.unpack(), params)
 
 
@@ -111,7 +111,8 @@ def toy():
     params = {"w": jax.random.normal(key, (6, 3)), "b": jnp.zeros((3,))}
     batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
                "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4, 3))}
-    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     priv = PrivatizerConfig(xi=1.0, granularity="example")
     return params, batches, loss_fn, priv
 
@@ -133,7 +134,7 @@ def _assert_states_match(s_tree, s_flat):
     np.testing.assert_array_equal(
         np.asarray(spec.pack(s_tree.theta_L)), np.asarray(s_flat.theta_L.buf))
     for i in range(N_OWNERS):
-        row = jax.tree_util.tree_map(lambda l: l[i], s_tree.bank)
+        row = jax.tree_util.tree_map(lambda leaf: leaf[i], s_tree.bank)
         np.testing.assert_array_equal(np.asarray(spec.pack(row)),
                                       np.asarray(s_flat.bank[i]))
     for f in ("spent", "cap", "refused"):

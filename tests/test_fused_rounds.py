@@ -30,7 +30,8 @@ def toy():
     params = {"w": jax.random.normal(key, (6,)), "b": jnp.zeros(())}
     batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
                "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4))}
-    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     priv = PrivatizerConfig(xi=1.0, granularity="example")
     return params, batches, loss_fn, priv
 
@@ -150,7 +151,8 @@ def test_superseded_state_cannot_reconcile(toy):
     # noise); only the LATEST snapshot's chain may reconcile.
     params, batches, loss_fn, priv = toy
     fed = _make_fed(loss_fn, priv)                 # horizon (cap) = 3
-    sub = lambda n: jax.tree_util.tree_map(lambda a: a[:n], batches)
+    def sub(n):
+        return jax.tree_util.tree_map(lambda a: a[:n], batches)
     state_a = fed.init_state(params)
     state_a, _ = fed.run_rounds(state_a, sub(8), jnp.zeros(8, jnp.int32),
                                 key=jax.random.PRNGKey(1))
@@ -173,7 +175,8 @@ def test_re_snapshot_seeds_counters_from_host_totals(toy):
     # cumulative counters, so its own chain folds exact deltas
     params, batches, loss_fn, priv = toy
     fed = _make_fed(loss_fn, priv)                 # horizon (cap) = 3
-    sub = lambda n: jax.tree_util.tree_map(lambda a: a[:n], batches)
+    def sub(n):
+        return jax.tree_util.tree_map(lambda a: a[:n], batches)
     state = fed.init_state(params)
     state, _ = fed.run_rounds(state, sub(8), jnp.zeros(8, jnp.int32),
                               key=jax.random.PRNGKey(1))
@@ -278,8 +281,8 @@ def test_fused_kernel_privatizer_in_scan_body(toy):
     small = jax.tree_util.tree_map(lambda a: a[:24], batches)
     seq = jnp.asarray(np.arange(24) % 4, jnp.int32)    # owners 0-3, 6 each
     state, ms = fed.run_rounds(state, small, seq, key=jax.random.PRNGKey(6))
-    assert all(np.isfinite(np.asarray(l)).all()
-               for l in jax.tree_util.tree_leaves(state.theta_L))
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(state.theta_L))
     granted = ~np.asarray(ms["refused"])
     assert granted.sum() == 8                           # 2 per owner cap
     assert np.asarray(ms["clip_frac"])[granted].min() == 1.0

@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.dp_clip_noise.ops import dp_privatize_tree, dp_round_flat
 from repro.kernels.dp_clip_noise.kernel import (LANES, dp_round_2d,
                                                 scale_noise_2d, sqnorm_2d)
+from repro.kernels.dp_clip_noise.ops import dp_privatize_tree, dp_round_flat
 from repro.kernels.dp_clip_noise.ref import (dp_round_ref, laplace_from_bits,
                                              scale_noise_ref, sqnorm_ref)
 from repro.kernels.flash_attention.ops import flash_attention
@@ -69,8 +69,8 @@ def test_dp_privatize_tree_clip_only(shapes, rng_key):
     xi = 0.5
     out = dp_privatize_tree(tree, rng_key, xi, 0.0, block_rows=8,
                             interpret=True)
-    gn = float(jnp.sqrt(sum(jnp.sum(l ** 2)
-                            for l in jax.tree_util.tree_leaves(tree))))
+    gn = float(jnp.sqrt(sum(jnp.sum(leaf ** 2)
+                            for leaf in jax.tree_util.tree_leaves(tree))))
     scale = min(1.0, xi / gn)
     for k in tree:
         np.testing.assert_allclose(np.asarray(out[k]),

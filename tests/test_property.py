@@ -4,15 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
-from hypothesis import given, settings, strategies as st
-
 from repro.analysis.roofline import roofline_terms
 from repro.core.cop import bound_asymptotic, budget_sum
 from repro.core.dp_sgd import clip_tree
 from repro.core.linear import make_problem, relative_fitness
 from repro.core.privacy import capped_rounds, laplace_scale_theorem1
 from repro.data import owner_shards
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 SET = dict(max_examples=25, deadline=None, derandomize=True)
 
@@ -111,7 +111,7 @@ _leaf_desc = st.tuples(
 _tree_desc = st.recursive(
     _leaf_desc,
     lambda kids: st.one_of(
-        st.lists(kids, min_size=1, max_size=3).map(lambda l: ("list", l)),
+        st.lists(kids, min_size=1, max_size=3).map(lambda xs: ("list", xs)),
         st.dictionaries(st.sampled_from("abcdef"), kids, min_size=1,
                         max_size=3).map(lambda d: ("dict", d))),
     max_leaves=6)

@@ -146,7 +146,8 @@ def toy():
     params = {"w": jax.random.normal(key, (6, 3)), "b": jnp.zeros((3,))}
     batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
                "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4, 3))}
-    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     priv = PrivatizerConfig(xi=1.0, granularity="example")
     return params, batches, loss_fn, priv
 
@@ -199,7 +200,8 @@ def test_refusal_rows_roundtrip_exactly_through_codec(toy, fmt):
     fed = _make_fed(loss_fn, priv, horizon=2, bank_dtype=fmt)
     state = fed.init_state(params)
     init_codes = np.asarray(state.bank.codes, np.float32)
-    sub = lambda a, b: jax.tree_util.tree_map(lambda x: x[a:b], batches)
+    def sub(a, b):
+        return jax.tree_util.tree_map(lambda x: x[a:b], batches)
     state, m = fed.run_rounds(state, sub(0, 2), jnp.zeros(2, jnp.int32),
                               key=jax.random.PRNGKey(9))
     assert not np.asarray(m["refused"]).any()

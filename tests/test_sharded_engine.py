@@ -60,7 +60,8 @@ def toy():
     params = {"w": jax.random.normal(key, (6, 4)), "b": jnp.zeros((4,))}
     batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
                "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4, 4))}
-    loss_fn = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
     priv = PrivatizerConfig(xi=1.0, granularity="example")
     return params, batches, loss_fn, priv
 
@@ -293,7 +294,8 @@ def test_sharded_superseded_snapshot_cannot_reconcile(toy):
     params, batches, loss_fn, priv = toy
     mesh = make_host_mesh()
     fed = _make_fed(loss_fn, priv, mesh=mesh)        # horizon (cap) = 3
-    sub = lambda n: jax.tree_util.tree_map(lambda a: a[:n], batches)
+    def sub(n):
+        return jax.tree_util.tree_map(lambda a: a[:n], batches)
     state_a = fed.init_state(params)
     state_a, _ = fed.run_rounds(state_a, sub(8), jnp.zeros(8, jnp.int32),
                                 key=jax.random.PRNGKey(1))

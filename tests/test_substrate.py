@@ -69,7 +69,8 @@ def test_uniform_schedule_matches_poisson_marginals(rng_key):
 def test_optimizers_minimize_quadratic(opt, rng_key):
     target = jnp.asarray([1.0, -2.0, 0.5])
     params = {"w": jnp.zeros(3)}
-    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
     if opt == "sgd":
         init, update = sgd(constant(0.1))
     elif opt == "momentum":
@@ -141,7 +142,7 @@ def test_param_specs_divisibility(arch, rng_key):
             assert dim % size == 0, (path, spec, leaf.shape)
 
     jax.tree_util.tree_map_with_path(
-        lambda p, l, s: check(p, l, s), sds, specs)
+        lambda p, leaf, s: check(p, leaf, s), sds, specs)
 
 
 def test_hlo_cost_walker_known_workload():
