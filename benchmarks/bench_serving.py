@@ -4,6 +4,7 @@ decode rows of bench_roofline)."""
 from __future__ import annotations
 
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +20,7 @@ def run(archs=None, batch: int = 2, steps: int = 3):
         cfg = get_config(arch).reduced()
         model = build_model(cfg, remat=False, moe_mode="ragged")
         k_init, k_frames = jax.random.split(jax.random.fold_in(
-            key, hash(arch) & 0x7FFFFFFF))
+            key, zlib.crc32(arch.encode()) & 0x7FFFFFFF))
         params = model.init(k_init, jnp.float32)
         cache = model.init_cache(batch, 32, dtype=jnp.float32)
         if cfg.family == "audio":

@@ -106,7 +106,7 @@ def main():
             if k % 25 == 0 or k == 1:
                 loss = float(loss_fn(state.theta_L, batch))
                 losses.append(loss)
-                print(f"step {k:4d} owner={owner} central-loss={l:.4f} "
+                print(f"step {k:4d} owner={owner} central-loss={loss:.4f} "
                       f"clip={float(m['clip_frac']):.2f} "
                       f"[{(time.time()-t0)/k:.2f}s/step]")
     else:

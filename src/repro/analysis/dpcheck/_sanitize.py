@@ -18,6 +18,15 @@ codec-salt contract from PR 5 depends on it). Keys whose bytes cannot be
 read (abstract tracers) are counted in ``rec.skipped`` instead of checked,
 so the sanitizer never aborts a run it cannot see into; tests assert
 ``skipped == 0`` to prove full coverage.
+
+Coverage caveat: patching happens on the ``jax.random`` module, so only
+calls that go through attribute access (``jax.random.normal(...)``) are
+recorded. References bound *before* entering the context —
+``from jax.random import normal``, ``functools.partial(jax.random.normal)``,
+module-level aliases — call the original sampler and are neither checked
+nor counted in ``rec.skipped``. Code run under ``sanitize()`` must invoke
+samplers via ``jax.random.*`` (all of ``src/repro`` does; dpcheck's static
+pass has no rule for import-time binding, so new code should follow suit).
 """
 from __future__ import annotations
 

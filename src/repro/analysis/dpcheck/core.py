@@ -4,7 +4,10 @@ The analyzer is a set of *file checkers* (one FileCtx at a time) and
 *project checkers* (the whole file set — kernel-triple conformance and the
 cross-module host-sync reachability pass). Rules report `Violation`s; a
 per-line ``# dpcheck: ignore[RULE]`` comment or a committed baseline file
-silences them. See README.md § "Static analysis (dpcheck)".
+silences them. Inline suppression only applies when the violation's path
+is one of the scanned files (checkers must anchor findings to real files;
+a violation against an unscanned path is baseline-suppressible only).
+See README.md § "Static analysis (dpcheck)".
 """
 from __future__ import annotations
 
