@@ -1,17 +1,31 @@
-"""CI bench regression guard: fail when the MLP-scale fused rounds/sec
-drops more than --max-drop vs the committed BENCH_fused_rounds.json.
+"""CI bench regression guard: perf (rounds/sec) + derived convergence
+metrics vs the committed BENCH_*.json baselines.
 
     python benchmarks/check_regression.py \
         --baseline /tmp/bench-baseline/BENCH_fused_rounds.json \
-        --current BENCH_fused_rounds.json [--max-drop 0.2] [--match mlp]
+        --current BENCH_fused_rounds.json [--max-drop 0.2] [--match mlp] \
+        [--convergence-baseline-dir /tmp/bench-baseline] \
+        [--convergence-current-dir .] [--max-rise 0.5]
 
-Compares every ``rounds_per_sec_*`` derived metric of the rows whose name
-contains --match (default: the MLP-scale rows — the compute-bound regime
-where a real engine regression shows; the toy rows are dispatch-bound
-noise). SKIPS (exit 0) when the baseline is missing (first PR with the
-guard) or when the environment metadata differs — platform, device kind
-or device count — since a laptop-vs-CI or CPU-vs-TPU comparison would
-only produce false alarms. Pure stdlib: runs before any jax install.
+Two guards, one exit code:
+
+* perf — every ``rounds_per_sec_*`` derived metric of the rows whose name
+  contains --match (default: the MLP-scale rows — the compute-bound
+  regime where a real engine regression shows; the toy rows are
+  dispatch-bound noise) may not drop more than --max-drop. SKIPS when
+  the baseline is missing (first PR with the guard) or when the
+  environment metadata differs — a laptop-vs-CI or CPU-vs-TPU rounds/sec
+  comparison would only produce false alarms.
+
+* convergence — the derived metrics in CONVERGENCE_GUARDS (quantized-bank
+  trajectory deviation, tree-vs-Laplace cost-of-privacy ratio) are
+  smaller-is-better and SEED-DETERMINISTIC, so they are compared even
+  when the environment differs. A guarded row or metric missing from the
+  current run is a FAILURE naming the metric — a silently dropped suite
+  row would disarm the guard, which is exactly the failure mode it
+  exists to catch.
+
+Pure stdlib: runs before any jax install.
 """
 from __future__ import annotations
 
@@ -20,35 +34,46 @@ import json
 import os
 import sys
 
+# (suite json filename, row-name substring, derived metric key).
+# Smaller is better for every entry; current may not exceed
+# baseline * (1 + --max-rise).
+CONVERGENCE_GUARDS = (
+    ("BENCH_fused_rounds.json", "quant_convergence", "dev_vs_noise_floor"),
+    ("BENCH_convergence.json", "tree_vs_laplace",
+     "cop_ratio_tree_vs_laplace"),
+)
+
 
 def load(path):
     with open(path) as f:
         return json.load(f)
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--current", required=True)
-    ap.add_argument("--max-drop", type=float, default=0.2,
-                    help="fail when 1 - current/baseline exceeds this")
-    ap.add_argument("--match", default="mlp",
-                    help="only guard rows whose name contains this")
-    args = ap.parse_args()
+def _env_diff(base_env, cur_env) -> str:
+    """Human-readable list of the keys that actually differ."""
+    base_env, cur_env = base_env or {}, cur_env or {}
+    parts = []
+    for key in sorted(set(base_env) | set(cur_env)):
+        b, c = base_env.get(key), cur_env.get(key)
+        if b != c:
+            parts.append(f"{key}: baseline={b!r} current={c!r}")
+    return "; ".join(parts) or "(no differing keys found)"
 
+
+def check_perf(args) -> "tuple[list, int]":
     if not os.path.exists(args.baseline):
-        print(f"SKIP: no committed baseline at {args.baseline}")
-        return 0
+        print(f"SKIP perf: no committed baseline at {args.baseline}")
+        return [], 0
     base, cur = load(args.baseline), load(args.current)
     if base.get("env") != cur.get("env"):
-        print(f"SKIP: environment differs (baseline {base.get('env')} "
-              f"vs current {cur.get('env')}) — cross-machine rounds/sec "
-              f"comparisons only produce false alarms. The guard is "
-              f"DORMANT until the committed baseline comes from this "
-              f"environment: download BENCH_fused_rounds.json from a "
-              f"bench-fast-results CI artifact and commit it to arm the "
-              f"guard for CI runners.")
-        return 0
+        print(f"SKIP perf: environment differs — "
+              f"{_env_diff(base.get('env'), cur.get('env'))} — "
+              f"cross-machine rounds/sec comparisons only produce false "
+              f"alarms. The guard is DORMANT until the committed baseline "
+              f"comes from this environment: download "
+              f"BENCH_fused_rounds.json from a bench-fast-results CI "
+              f"artifact and commit it to arm the guard for CI runners.")
+        return [], 0
 
     base_rows = {r["name"]: r["derived"] for r in base["rows"]}
     failures, checked = [], 0
@@ -69,17 +94,100 @@ def main() -> int:
             print(f"{status}: {row['name']} {key}: {b_val:.0f} -> "
                   f"{c_val:.0f} ({-drop:+.1%})")
             if drop > args.max_drop:
-                failures.append((row["name"], key, b_val, c_val))
+                failures.append((row["name"], key))
     if not checked:
-        print(f"SKIP: no comparable rounds_per_sec metrics matched "
+        print(f"SKIP perf: no comparable rounds_per_sec metrics matched "
               f"{args.match!r}")
-        return 0
+    return failures, checked
+
+
+def check_convergence(args) -> "tuple[list, int]":
+    """Guard the derived convergence metrics. Deterministic seeds make
+    them machine-independent, so no env gate; a missing guarded row in
+    the CURRENT run fails by name instead of silently skipping."""
+    failures, checked = [], 0
+    for fname, substr, metric in CONVERGENCE_GUARDS:
+        label = f"{fname}:{substr}:{metric}"
+        base_path = os.path.join(args.convergence_baseline_dir, fname)
+        cur_path = os.path.join(args.convergence_current_dir, fname)
+        if not os.path.exists(base_path):
+            print(f"SKIP convergence: no committed baseline at {base_path} "
+                  f"(guard {label} arms on the first commit of that file)")
+            continue
+        if not os.path.exists(cur_path):
+            failures.append(label)
+            print(f"FAIL: guarded metric {label} — current run never wrote "
+                  f"{cur_path}")
+            continue
+        base, cur = load(base_path), load(cur_path)
+        base_rows = {r["name"]: r["derived"] for r in base["rows"]}
+        cur_rows = [r for r in cur["rows"] if substr in r["name"]]
+        if not cur_rows:
+            failures.append(label)
+            print(f"FAIL: guarded metric {label} — no row matching "
+                  f"{substr!r} in the current {fname}; a dropped suite row "
+                  f"silently disarms the guard")
+            continue
+        for row in cur_rows:
+            c_val = row["derived"].get(metric)
+            if not isinstance(c_val, (int, float)):
+                failures.append(label)
+                print(f"FAIL: guarded metric {label} — row {row['name']} "
+                      f"carries no numeric {metric!r} "
+                      f"(got {c_val!r})")
+                continue
+            b_val = (base_rows.get(row["name"]) or {}).get(metric)
+            if not isinstance(b_val, (int, float)):
+                # first run that emits this row: nothing to diff against
+                print(f"ok: {row['name']} {metric}: (new) -> {c_val:.4g}")
+                checked += 1
+                continue
+            checked += 1
+            limit = b_val * (1.0 + args.max_rise)
+            status = "FAIL" if c_val > limit else "ok"
+            print(f"{status}: {row['name']} {metric}: {b_val:.4g} -> "
+                  f"{c_val:.4g} (limit {limit:.4g})")
+            if c_val > limit:
+                failures.append(label)
+    return failures, checked
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="fail when 1 - current/baseline exceeds this")
+    ap.add_argument("--match", default="mlp",
+                    help="only guard rows whose name contains this")
+    ap.add_argument("--convergence-baseline-dir", default=None,
+                    help="dir holding the committed BENCH_*.json for the "
+                         "CONVERGENCE_GUARDS table (omit to skip)")
+    ap.add_argument("--convergence-current-dir", default=".",
+                    help="dir the current run wrote its BENCH_*.json into")
+    ap.add_argument("--max-rise", type=float, default=0.5,
+                    help="fail when a guarded convergence metric exceeds "
+                         "baseline * (1 + this)")
+    args = ap.parse_args()
+
+    perf_fail, perf_checked = check_perf(args)
+    conv_fail, conv_checked = ([], 0)
+    if args.convergence_baseline_dir is not None:
+        conv_fail, conv_checked = check_convergence(args)
+
+    failures = perf_fail + conv_fail
+    checked = perf_checked + conv_checked
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed more than "
-              f"{args.max_drop:.0%} vs the committed baseline")
+        print(f"\n{len(failures)} guarded metric(s) out of bounds vs the "
+              f"committed baseline: "
+              + ", ".join(f"{f[0]} {f[1]}" if isinstance(f, tuple) else f
+                          for f in failures))
         return 1
-    print(f"\nall {checked} guarded metrics within {args.max_drop:.0%} "
-          f"of the committed baseline")
+    if not checked:
+        print("SKIP: nothing compared (baselines missing or dormant)")
+        return 0
+    print(f"\nall {checked} guarded metrics within bounds of the "
+          f"committed baseline")
     return 0
 
 

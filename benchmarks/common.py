@@ -59,6 +59,12 @@ def env_meta() -> dict:
         # (a laptop vs a CI runner): the regression guard refuses to
         # compare rounds/sec across different machines
         "cpu_count": os.cpu_count(),
+        # XLA_FLAGS changes what was actually measured (forced device
+        # counts, compiler knobs), so record it — but only when set:
+        # the unset common case must keep env equality with baselines
+        # that predate the key
+        **({"xla_flags": os.environ["XLA_FLAGS"]}
+           if os.environ.get("XLA_FLAGS") else {}),
     }
 
 

@@ -28,7 +28,7 @@ from repro.analysis.dpcheck.dataflow import (assigned_names, call_name,
 NOISE_MARKERS = {
     "jax.random.laplace", "jax.random.normal",
     "laplace_noise_tree", "fused_scale_noise_tree",
-    "dp_round_flat", "dp_privatize_tree",
+    "dp_round_flat", "dp_privatize_tree", "tree_delta_row",
 }
 BANK_WRITERS = ("_write_bank", "_write_bank_rows", "_quant_write",
                 "dynamic_update_index_in_dim")

@@ -9,8 +9,9 @@ from repro.federation.config import FederationConfig
 from repro.federation.convex import (Algo1Config, Algo1Trace, SyncTrace,
                                      run_algorithm1, run_many, scan_engine,
                                      stack_gram, sync_scan_engine)
-from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
-                                   init_state_flat, make_fused_rounds,
+from repro.federation.deep import (AsyncDPConfig, AsyncDPState, TreeNoise,
+                                   init_state, init_state_flat,
+                                   init_tree_noise, make_fused_rounds,
                                    make_group_rounds, make_sync_dp_step,
                                    make_train_step)
 from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
@@ -25,7 +26,7 @@ from repro.federation.linear import (LinearProblem, Owner, fitness,
 from repro.federation.mechanisms import (CappedRoundsMechanism,
                                          LedgerDriftError, Mechanism,
                                          PaperMechanism, StrictMechanism,
-                                         make_mechanism)
+                                         TreeMechanism, make_mechanism)
 from repro.federation.owners import DataOwner, federate_problem, with_budgets
 from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
                                       capped_rounds, laplace_noise,

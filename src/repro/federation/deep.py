@@ -49,6 +49,13 @@ the `repro.sharding.rules.flat_shardings` layout (bank rows over the data
 axes, P like the model) with `jax.lax.with_sharding_constraint` INSIDE the
 scan bodies, so the bank row gather/scatter stays local in P and the scan
 carry never gathers to one device.
+
+DP-FTRL tree noise (cfg.tree_depth, `TreeNoise` on the state): every
+driver advances the per-owner binary noise tree INSIDE its scan body —
+one row gather, a popcount-pattern node refresh (Pallas kernel family
+`repro.kernels.tree_noise` on the fused flat path, its jnp oracle
+elsewhere), one row scatter — with refusals masked to bit-exact no-ops
+exactly like the bank, and tree nodes sharded like bank rows.
 """
 from __future__ import annotations
 
@@ -80,6 +87,14 @@ class AsyncDPConfig:
     lr_scale: float = 1.0              # 1.0 == paper-faithful
     init_bank_zero: bool = False       # paper inits all copies to 0
     caps: Optional[Sequence[int]] = None  # per-owner response caps (None = T)
+    # DP-FTRL tree-aggregated noise (Kairouz et al. 2021): None = the
+    # paper's independent per-round mechanism; d >= 1 = each owner carries
+    # a depth-d binary noise tree (AsyncDPState.tree) and every response
+    # releases the active-node-sum DELTA, so cumulative noise over t
+    # responses is popcount(t) <= d node draws at per-node scale d*b(R),
+    # R = min(cap, 2^d - 1). d = 0 is the degenerate tree: bit-for-bit
+    # the paper mechanism (parity contract, exercised by tests).
+    tree_depth: Optional[int] = None
 
     @property
     def n_total(self) -> int:
@@ -100,6 +115,78 @@ class AsyncDPState(NamedTuple):
     # per-round step() leaves it untouched (host authorization); the fused
     # multi-round driver spends/refuses in-graph.
     ledger: Optional[DeviceLedger] = None
+    # Device-resident DP-FTRL noise trees (TreeNoise) when
+    # cfg.tree_depth is set; None for the independent-noise mechanisms.
+    tree: Optional[Any] = None
+
+
+@jax.tree_util.register_pytree_node_class
+class TreeNoise:
+    """Per-owner DP-FTRL noise-tree state (device-resident).
+
+    `nodes` holds every owner's live node values: for flat states one
+    (N_owners, depth, P) f32 matrix; for pytree states the model pytree
+    with (N_owners, depth, *leaf.shape) f32 leaves (ALWAYS f32 — the
+    noise calibration must not be laundered through a bf16 model dtype).
+    `counts` is (N_owners,) int32 leaves released so far — the online
+    binary counter whose bit pattern determines which nodes retire and
+    which level holds the fresh draw at each increment. `depth` is static
+    pytree metadata (it selects the traced program).
+    """
+
+    def __init__(self, nodes: Any, counts: jax.Array, depth: int):
+        self.nodes = nodes
+        self.counts = counts
+        self.depth = depth
+
+    def tree_flatten(self):
+        return (self.nodes, self.counts), self.depth
+
+    @classmethod
+    def tree_unflatten(cls, depth, children):
+        return cls(*children, depth=depth)
+
+    def replace(self, **kw) -> "TreeNoise":
+        fields = {"nodes": self.nodes, "counts": self.counts,
+                  "depth": self.depth}
+        fields.update(kw)
+        return TreeNoise(**fields)
+
+
+def init_tree_noise(cfg: AsyncDPConfig, theta_L) -> Optional[TreeNoise]:
+    """Fresh (all-zero) noise trees matching `theta_L`'s representation;
+    None when cfg.tree_depth is None (independent-noise mechanisms)."""
+    if cfg.tree_depth is None:
+        return None
+    d, n = cfg.tree_depth, cfg.n_owners
+    if isinstance(theta_L, ParamFlat):
+        nodes = jnp.zeros((n, d, theta_L.size), jnp.float32)
+    else:
+        nodes = jax.tree_util.tree_map(
+            lambda leaf: jnp.zeros((n, d) + leaf.shape, jnp.float32), theta_L)
+    return TreeNoise(nodes, jnp.zeros((n,), jnp.int32), d)
+
+
+def _tree_row_of(tree: TreeNoise, owner_idx):
+    """Gather one owner's (depth, ...) node row + its leaf count."""
+    row = jax.tree_util.tree_map(
+        lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
+                                                  keepdims=False),
+        tree.nodes)
+    return row, tree.counts[owner_idx]
+
+
+def _tree_write(tree: TreeNoise, new_row, owner_idx, grant=1) -> TreeNoise:
+    """Scatter an owner's node row back and bump its leaf counter by
+    `grant` (0/1 — the fused driver passes the grant bit; callers mask
+    `new_row` back to the old row on refusal, so a refused round is a
+    bit-exact no-op on the whole tree)."""
+    nodes = jax.tree_util.tree_map(
+        lambda leaf, v: jax.lax.dynamic_update_index_in_dim(leaf, v,
+                                                            owner_idx, 0),
+        tree.nodes, new_row)
+    return tree.replace(nodes=nodes,
+                        counts=tree.counts.at[owner_idx].add(grant))
 
 
 def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
@@ -108,7 +195,8 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
     bank = jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_owners,) + leaf.shape), params)
     return AsyncDPState(params, bank, jnp.zeros((), jnp.int32),
-                        make_device_ledger(cfg.effective_caps))
+                        make_device_ledger(cfg.effective_caps),
+                        init_tree_noise(cfg, params))
 
 
 def init_state_flat(params, cfg: AsyncDPConfig,
@@ -135,6 +223,7 @@ def init_state_flat(params, cfg: AsyncDPConfig,
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
     flat = pack_params(params)
     ledger = make_device_ledger(cfg.effective_caps)
+    tree = init_tree_noise(cfg, flat)
     if mesh is None:
         bank = init_flat_bank(flat, cfg.n_owners, bank_dtype)
     else:
@@ -158,7 +247,11 @@ def init_state_flat(params, cfg: AsyncDPConfig,
                               scales_sharding=sh.bank_scales,
                               residual_sharding=sh.row)
         ledger = jax.device_put(ledger, sh.ledger)
-    return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger)
+        if tree is not None:
+            tree = TreeNoise(jax.device_put(tree.nodes, sh.tree_nodes),
+                             jax.device_put(tree.counts, sh.ledger),
+                             tree.depth)
+    return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger, tree)
 
 
 def _flat_shardings_for(mesh, theta_L, bank):
@@ -194,6 +287,28 @@ def _constrain_bank(bank, sh):
             jax.lax.with_sharding_constraint(bank.residual, sh.row),
             bank.codec)
     return jax.lax.with_sharding_constraint(bank, sh.bank)
+
+
+def _constrain_tree(tr, sh):
+    """Pin flat TreeNoise nodes to the (N, depth, P) rule; pytree nodes
+    and meshless runs pass through."""
+    if tr is None or sh is None or getattr(sh, "tree_nodes", None) is None:
+        return tr
+    if not isinstance(tr.nodes, jax.Array):
+        return tr
+    return tr.replace(nodes=jax.lax.with_sharding_constraint(
+        tr.nodes, sh.tree_nodes))
+
+
+def _require_tree(cfg: AsyncDPConfig, state: AsyncDPState):
+    """The state's TreeNoise when cfg asks for one (raising on states
+    built before the tree was configured); None otherwise."""
+    if cfg.tree_depth is not None and state.tree is None:
+        raise ValueError(
+            "cfg.tree_depth is set but the state carries no noise tree; "
+            "build the state with init_state / init_state_flat / "
+            "Federation.init_state under the same config")
+    return state.tree
 
 
 # --------------------- quantized-bank row round-trip -----------------------
@@ -264,11 +379,21 @@ def _quant_write(bank: QuantBank, new_i, owner_idx, key,
 
 
 def _noise_scales(cfg: AsyncDPConfig) -> jnp.ndarray:
-    """Theorem-1 scale per owner (for the averaged clipped gradient)."""
+    """Theorem-1 scale per owner (for the averaged clipped gradient).
+
+    Under the tree mechanism (cfg.tree_depth = d >= 1) this is the
+    PER-NODE scale: each response participates in d node queries over a
+    horizon of at most R = effective cap responses, so Laplace
+    composition gives b_node = d * b_theorem1(R). depth 0 degenerates to
+    the paper scale exactly (levels = 1, horizon = T)."""
     from repro.federation.privacy import laplace_scale_theorem1
+    levels = cfg.tree_depth if cfg.tree_depth else 1
+    horizons = (cfg.effective_caps if cfg.tree_depth
+                else (cfg.horizon,) * cfg.n_owners)
     return jnp.asarray([
-        laplace_scale_theorem1(cfg.xi, cfg.horizon, n_i, e)
-        for n_i, e in zip(cfg.owner_sizes, cfg.epsilons)], jnp.float32)
+        levels * laplace_scale_theorem1(cfg.xi, h, n_i, e)
+        for h, n_i, e in zip(horizons, cfg.owner_sizes, cfg.epsilons)],
+        jnp.float32)
 
 
 def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
@@ -276,11 +401,16 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
     per-round step and the fused multi-round driver so both trace the exact
     same op sequence (bit-for-bit equivalence under fixed keys).
 
-    Returns compute(theta_L, bank, batch, owner_idx, key) ->
-    (new_L, new_i, theta_i, metrics). The bank-gather-free core is exposed
-    as `compute.inner(theta_L, theta_i, batch, owner_idx, key)`: the flat
-    engine's reference mode traces that SAME function on its unpacked
-    buffers, which is what makes flat-vs-tree bit parity hold."""
+    Returns compute(theta_L, bank, batch, owner_idx, key, tree_row=None,
+    tree_count=None) -> (new_L, new_i, theta_i, metrics, new_tree_row).
+    The bank-gather-free core is exposed as
+    `compute.inner(theta_L, theta_i, batch, owner_idx, key, noise_extra)`:
+    the flat engine's reference mode traces that SAME function on its
+    unpacked buffers, which is what makes flat-vs-tree bit parity hold.
+    `noise_extra` (None for the independent mechanisms) is the DP-FTRL
+    retired-node correction added to the response; when it is given,
+    inner also returns the fresh Laplace draw so the caller can install
+    it as the tree's new node WITHOUT re-consuming the round key."""
     scales = _noise_scales(cfg) if scales is None else jnp.asarray(
         scales, jnp.float32)
     n_i = jnp.asarray(cfg.owner_sizes, jnp.float32)
@@ -292,13 +422,27 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         return jax.tree_util.tree_map(
             lambda leaf: jnp.clip(leaf, -cfg.theta_max, cfg.theta_max), tree)
 
-    def inner(theta_L, theta_i, batch, owner_idx, key):
+    def inner(theta_L, theta_i, batch, owner_idx, key, noise_extra=None):
         theta_bar = jax.tree_util.tree_map(
             lambda a, b: 0.5 * (a + b), theta_L, theta_i)             # (6)
 
-        qbar, pm = private_grad(loss_fn, theta_bar, batch, key,
-                                cfg=cfg.privatizer,
-                                noise_scale=scales[owner_idx])        # (3)+(4)
+        if noise_extra is None:
+            qbar, pm = private_grad(loss_fn, theta_bar, batch, key,
+                                    cfg=cfg.privatizer,
+                                    noise_scale=scales[owner_idx])    # (3)+(4)
+            zeta = None
+        else:
+            # tree mechanism: the response carries zeta - sum(retired
+            # nodes); `noise_extra` IS that retired-node sum (negated),
+            # and the fresh draw comes back so the caller installs it as
+            # the new node from the SAME single key consumption.
+            qbar, pm, zeta = private_grad(loss_fn, theta_bar, batch, key,
+                                          cfg=cfg.privatizer,
+                                          noise_scale=scales[owner_idx],
+                                          return_noise=True)
+            qbar = jax.tree_util.tree_map(
+                lambda q, e: (q.astype(jnp.float32) + e).astype(q.dtype),
+                qbar, noise_extra)
         g_reg = jax.tree_util.tree_map(
             lambda leaf: cfg.sigma * leaf.astype(jnp.float32), theta_bar)   # grad g
 
@@ -314,16 +458,44 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         metrics = {"clip_frac": pm["clip_frac"],
                    "max_grad_norm": pm["max_grad_norm"],
                    "grad_noise_scale": scales[owner_idx]}
-        return new_L, new_i, metrics
+        return new_L, new_i, metrics, zeta
 
-    def compute(theta_L, bank, batch, owner_idx, key):
+    def compute(theta_L, bank, batch, owner_idx, key,
+                tree_row=None, tree_count=None):
         theta_i = jax.tree_util.tree_map(
             lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
                                                    keepdims=False),
             bank)
-        new_L, new_i, metrics = inner(theta_L, theta_i, batch, owner_idx,
-                                      key)
-        return new_L, new_i, theta_i, metrics
+        d = cfg.tree_depth
+        if tree_row is None or not d:
+            # no tree, or the degenerate depth-0 tree: the round IS the
+            # independent-noise round (bit-for-bit — parity contract)
+            new_L, new_i, metrics, _ = inner(theta_L, theta_i, batch,
+                                             owner_idx, key)
+            return new_L, new_i, theta_i, metrics, tree_row
+        if cfg.privatizer.fused_kernel:
+            raise ValueError(
+                "tree mechanism with fused_kernel needs the flat engine "
+                "(init_state_flat) — the pytree path's fused privatizer "
+                "adds its noise in-kernel and cannot split out the draw")
+        from repro.kernels.tree_noise.ref import tree_masks_ref
+        retired, fresh = tree_masks_ref(tree_count, d)        # (d,) bools
+
+        def bcast(m, leaf):
+            return m.reshape((d,) + (1,) * (leaf.ndim - 1))
+
+        extra = jax.tree_util.tree_map(
+            lambda nd: -jnp.sum(jnp.where(bcast(retired, nd), nd, 0.0),
+                                axis=0), tree_row)
+        new_L, new_i, metrics, zeta = inner(theta_L, theta_i, batch,
+                                            owner_idx, key,
+                                            noise_extra=extra)
+        new_row = jax.tree_util.tree_map(
+            lambda nd, z: jnp.where(
+                bcast(fresh, nd), z[None].astype(jnp.float32),
+                jnp.where(bcast(retired, nd), 0.0, nd)),
+            tree_row, zeta)
+        return new_L, new_i, theta_i, metrics, new_row
 
     compute.inner = inner
     return compute
@@ -423,9 +595,12 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
                                cfg.lr_scale)
     pcfg = cfg.privatizer
 
-    def compute(theta_L: ParamFlat, bank, batch, owner_idx, key):
+    def compute(theta_L: ParamFlat, bank, batch, owner_idx, key,
+                tree_row=None, tree_count=None):
         spec = theta_L.spec
         sh = _flat_shardings_for(mesh, theta_L, bank)
+        d = cfg.tree_depth
+        tree_on = tree_row is not None and d          # static (trace-time)
         if isinstance(bank, QuantBank):
             theta_i = _decode_bank_row(bank, owner_idx, pcfg)      # (P,)
         else:
@@ -444,16 +619,45 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
             ns = scales[owner_idx]
             acc, gain, pm = _flat_clipped_grad_acc(loss_fn, spec, pcfg,
                                                    tb, batch)
-            new_L, new_i = dp_round_flat(                  # (4)+(5)+(7)+Pi
-                tb, acc, key, gain, ns, n_i[owner_idx] / n,
-                sigma=cfg.sigma, lr_own=lr_own, lr_l=lr_L, n_owners=N,
-                theta_max=cfg.theta_max,
-                block_rows=pcfg.kernel_block_rows,
-                interpret=resolve_interpret(pcfg.kernel_interpret))
+            if tree_on:
+                # tree mechanism: the round key feeds ONLY the tree op
+                # (the fresh node draw); the response adds the node
+                # DELTA, then the epilogue repeats dp_round_ref's exact
+                # op order so depth-0 (no node traffic, delta == draw)
+                # stays bit-identical to the dp_round_flat path.
+                from repro.kernels.tree_noise.ops import tree_delta_row
+                delta, new_row = tree_delta_row(
+                    tree_row, tree_count, key, ns,
+                    block_rows=min(pcfg.kernel_block_rows, 64),
+                    interpret=resolve_interpret(pcfg.kernel_interpret))
+                q = acc * gain + delta                              # (4)
+                g_reg = cfg.sigma * tb
+                new_i = jnp.clip(
+                    tb - lr_own * (g_reg * (1.0 / (2 * N))
+                                   + (n_i[owner_idx] / n) * q),
+                    -cfg.theta_max, cfg.theta_max)                  # (5)
+                new_L = jnp.clip(tb - lr_L * g_reg,
+                                 -cfg.theta_max, cfg.theta_max)     # (7)
+            else:
+                new_L, new_i = dp_round_flat(              # (4)+(5)+(7)+Pi
+                    tb, acc, key, gain, ns, n_i[owner_idx] / n,
+                    sigma=cfg.sigma, lr_own=lr_own, lr_l=lr_L, n_owners=N,
+                    theta_max=cfg.theta_max,
+                    block_rows=pcfg.kernel_block_rows,
+                    interpret=resolve_interpret(pcfg.kernel_interpret))
+                new_row = tree_row
             metrics = {"clip_frac": pm["clip_frac"],
                        "max_grad_norm": pm["max_grad_norm"],
                        "grad_noise_scale": ns}
         else:
+            if tree_on:
+                from repro.kernels.tree_noise.ref import tree_masks_ref
+                retired, fresh = tree_masks_ref(tree_count, d)  # (d,) bool
+                extra = spec.unpack_f32(
+                    -jnp.sum(jnp.where(retired[:, None], tree_row, 0.0),
+                             axis=0))
+            else:
+                extra = None
             try:
                 tl_tree, ti_tree = jax.lax.optimization_barrier(
                     (spec.unpack(theta_L.buf), spec.unpack(theta_i)))
@@ -465,10 +669,18 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
                 # grouped mode does not promise for groups > 1 anyway.
                 tl_tree, ti_tree = (spec.unpack(theta_L.buf),
                                     spec.unpack(theta_i))
-            new_L_t, new_i_t, metrics = tree_inner(tl_tree, ti_tree, batch,
-                                                   owner_idx, key)
+            new_L_t, new_i_t, metrics, zeta = tree_inner(
+                tl_tree, ti_tree, batch, owner_idx, key,
+                noise_extra=extra)
             new_L, new_i = spec.pack(new_L_t), spec.pack(new_i_t)
-        return ParamFlat(new_L, spec), new_i, theta_i, metrics
+            if tree_on:
+                zf = spec.pack_f32(zeta)
+                new_row = jnp.where(fresh[:, None], zf[None],
+                                    jnp.where(retired[:, None], 0.0,
+                                              tree_row))
+            else:
+                new_row = tree_row
+        return ParamFlat(new_L, spec), new_i, theta_i, metrics, new_row
 
     return compute
 
@@ -479,13 +691,31 @@ def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     states run the flat engine, pytree states the reference tree path.
     All drivers share this, so one built step function serves either
     state kind (jit specializes per structure)."""
+    if cfg.tree_depth is not None:
+        if not 0 <= cfg.tree_depth <= 30:
+            raise ValueError(
+                f"tree_depth must be in [0, 30], got {cfg.tree_depth}")
+        if cfg.tree_depth:
+            cap_max = (1 << cfg.tree_depth) - 1
+            if max(cfg.effective_caps) > cap_max:
+                # past 2^d - 1 leaves the online binary counter has no
+                # level left for the fresh node and the variance
+                # accounting silently breaks — refuse at build time
+                raise ValueError(
+                    f"depth-{cfg.tree_depth} tree holds {cap_max} leaves "
+                    f"but effective caps reach "
+                    f"{max(cfg.effective_caps)}; lower cfg.caps or deepen "
+                    f"the tree")
     tree_c = _round_math(loss_fn, cfg, scales)
     flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner, mesh=mesh)
 
-    def compute(theta_L, bank, batch, owner_idx, key):
+    def compute(theta_L, bank, batch, owner_idx, key,
+                tree_row=None, tree_count=None):
         if isinstance(theta_L, ParamFlat):
-            return flat_c(theta_L, bank, batch, owner_idx, key)
-        return tree_c(theta_L, bank, batch, owner_idx, key)
+            return flat_c(theta_L, bank, batch, owner_idx, key,
+                          tree_row=tree_row, tree_count=tree_count)
+        return tree_c(theta_L, bank, batch, owner_idx, key,
+                      tree_row=tree_row, tree_count=tree_count)
 
     return compute
 
@@ -519,9 +749,13 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
 
     def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
              ) -> Tuple[AsyncDPState, Dict]:
+        tr = _require_tree(cfg, state)
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
-        new_L, new_i, _, metrics = compute(state.theta_L, state.bank,
-                                           batch, owner_idx, key)
+        row, cnt = (None, None) if tr is None else _tree_row_of(tr,
+                                                                owner_idx)
+        new_L, new_i, _, metrics, new_row = compute(
+            state.theta_L, state.bank, batch, owner_idx, key,
+            tree_row=row, tree_count=cnt)
         if isinstance(state.bank, QuantBank):
             # same key as compute() by contract: _quant_write folds in
             # _CODEC_SALT, so SR bits never touch the privacy stream
@@ -529,11 +763,16 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
                                 cfg.privatizer)
         else:
             bank = _write_bank(state.bank, new_i, owner_idx)
+        if tr is not None:
+            # host-authorized path: the round always counts (refusal
+            # happens before step() is called), so the leaf always lands
+            tr = _tree_write(tr, new_row, owner_idx)
         if sh is not None:
             new_L = _constrain(new_L, sh.theta)
             bank = _constrain_bank(bank, sh)
+            tr = _constrain_tree(tr, sh)
         return AsyncDPState(new_L, bank, state.step + 1,
-                            state.ledger), metrics
+                            state.ledger, tr), metrics
 
     return step
 
@@ -572,11 +811,15 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
     def body(state: AsyncDPState, xs):
         batch, owner_idx, key = xs
         led = state.ledger
+        tr = state.tree
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         ok = led.authorized(owner_idx)
         oki = ok.astype(jnp.int32)
-        new_L, new_i, theta_i, metrics = compute(state.theta_L, state.bank,
-                                                 batch, owner_idx, key)
+        row, cnt = (None, None) if tr is None else _tree_row_of(tr,
+                                                                owner_idx)
+        new_L, new_i, theta_i, metrics, new_row = compute(
+            state.theta_L, state.bank, batch, owner_idx, key,
+            tree_row=row, tree_count=cnt)
         theta_L = jax.tree_util.tree_map(
             lambda nl, ol: jnp.where(ok, nl, ol), new_L, state.theta_L)
         if isinstance(state.bank, QuantBank):
@@ -588,20 +831,30 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
                 jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
                                        new_i, theta_i),
                 owner_idx)
+        if tr is not None:
+            # refusal masking: the old row is written back and the leaf
+            # counter bumps by the grant bit, so a refused round is a
+            # bit-exact no-op on the tree (same contract as the bank)
+            masked_row = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(ok, a, b), new_row, row)
+            tr = _tree_write(tr, masked_row, owner_idx, grant=oki)
         if sh is not None:
             theta_L = _constrain(theta_L, sh.theta)
             bank = _constrain_bank(bank, sh)
+            tr = _constrain_tree(tr, sh)
         ledger = led.replace(spent=led.spent.at[owner_idx].add(oki),
                              refused=led.refused.at[owner_idx].add(1 - oki))
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owner_idx)
-        return AsyncDPState(theta_L, bank, state.step + oki, ledger), metrics
+        return AsyncDPState(theta_L, bank, state.step + oki, ledger,
+                            tr), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys):
         if state.ledger is None:
             raise ValueError(
                 "fused rounds need a device ledger on the state; build the "
                 "state with init_state / Federation.init_state")
+        _require_tree(cfg, state)
         return jax.lax.scan(body, state, (batches, owner_seq, keys),
                             unroll=unroll)
 
@@ -668,6 +921,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
     def body(state: AsyncDPState, xs):
         batch_g, owners, keys_g, valid = xs
         led = state.ledger
+        tr = state.tree
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         theta_L, bank = state.theta_L, state.bank
         ok = jax.vmap(led.authorized)(owners) & valid          # (G,)
@@ -676,9 +930,18 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         # fully-invalid groups are jit-cache shape padding only; the
         # dynamic trip count in run() means they never reach this body,
         # so every executed group has at least one valid member
-        new_L, new_i, theta_i, metrics = jax.vmap(
-            lambda b, o, k: compute(theta_L, bank, b, o, k))(
-                batch_g, owners, keys_g)
+        if tr is not None:
+            # distinct owners per group (the partition's invariant), so
+            # the per-member tree rows are disjoint reads AND writes
+            rows_t, cnts = jax.vmap(lambda o: _tree_row_of(tr, o))(owners)
+            new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                lambda b, o, k, r, c: compute(theta_L, bank, b, o, k,
+                                              tree_row=r, tree_count=c))(
+                    batch_g, owners, keys_g, rows_t, cnts)
+        else:
+            new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                lambda b, o, k: compute(theta_L, bank, b, o, k))(
+                    batch_g, owners, keys_g)
 
         owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
         n_ok = jnp.sum(ok.astype(jnp.float32))
@@ -715,6 +978,18 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
                 new_i, theta_i)
             bank = _write_bank_rows(bank, rows, owners_w)
 
+        if tr is not None:
+            # refused/padded members scatter their own row back unchanged
+            rows_m = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(_member_mask(ok, a), a, b),
+                new_rows, rows_t)
+            nodes = jax.tree_util.tree_map(
+                lambda leaf, v: leaf.at[owners_w].set(v, mode="drop"),
+                tr.nodes, rows_m)
+            tr = tr.replace(nodes=nodes,
+                            counts=tr.counts.at[owners_w].add(
+                                oki, mode="drop"))
+
         # single inertia reduction: mean of the granted eq.(7) targets
 
         def reduce_theta(stacked, base):
@@ -726,6 +1001,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         if sh is not None:
             theta_L = _constrain(theta_L, sh.theta)
             bank = _constrain_bank(bank, sh)
+            tr = _constrain_tree(tr, sh)
         ledger = led.replace(
             spent=led.spent.at[owners_w].add(oki, mode="drop"),
             refused=led.refused.at[owners_w].add(
@@ -733,7 +1009,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owners)
         return AsyncDPState(theta_L, bank, state.step + jnp.sum(oki),
-                            ledger), metrics
+                            ledger, tr), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys, group_idx,
             group_valid, n_groups=None):
@@ -741,6 +1017,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             raise ValueError(
                 "grouped rounds need a device ledger on the state; build "
                 "the state with init_state / Federation.init_state")
+        _require_tree(cfg, state)
         xs = (jax.tree_util.tree_map(lambda a: a[group_idx], batches),
               owner_seq[group_idx], keys[group_idx], group_valid)
         rows = group_idx.shape[0]
@@ -791,6 +1068,10 @@ def make_sync_dp_step(loss_fn, cfg: AsyncDPConfig, lr: float,
     The scan body accumulates in the same owner order with the same ops as
     the old loop, so results are unchanged.
     """
+    if cfg.tree_depth is not None:
+        raise ValueError(
+            "the synchronous baseline draws independent per-round noise; "
+            "the tree mechanism (cfg.tree_depth) has no sync counterpart")
     scales = _noise_scales(cfg) if scales is None else jnp.asarray(
         scales, jnp.float32)
     n_i = jnp.asarray(cfg.owner_sizes, jnp.float32)

@@ -90,13 +90,25 @@ def _group_batch(batch, n_groups):
 
 
 def private_grad(loss_fn: LossFn, params, batch, key, *,
-                 cfg: PrivatizerConfig, noise_scale: float
-                 ) -> Tuple[Any, Dict[str, jax.Array]]:
+                 cfg: PrivatizerConfig, noise_scale: float,
+                 return_noise: bool = False
+                 ) -> Tuple[Any, ...]:
     """Clipped-average gradient + mechanism noise (the DP response, eq. 4).
 
     noise_scale is the Theorem-1 scale for the *averaged* query; returns
     (noisy grad pytree, metrics).
+
+    `return_noise=True` appends the drawn noise pytree as a THIRD return
+    value — (noisy, metrics, noise) — without changing the draw or the
+    noisy sum in any way. The tree mechanism needs the fresh draw
+    separately (it becomes the tree's fresh node while retired nodes are
+    subtracted from the response), and re-drawing it outside would
+    double-consume the round key; jnp laplace/gaussian only — the fused
+    kernel adds its noise in-kernel and never materializes it.
     """
+    if return_noise and cfg.fused_kernel:
+        raise ValueError("return_noise requires the jnp mechanism path "
+                         "(fused_kernel adds noise in-kernel)")
     B = jax.tree_util.tree_leaves(batch)[0].shape[0]
     if cfg.pre_grouped and cfg.granularity == "microbatch":
         B = cfg.n_microbatches * jax.tree_util.tree_leaves(batch)[0].shape[1]
@@ -172,4 +184,7 @@ def private_grad(loss_fn: LossFn, params, batch, key, *,
     else:
         raise ValueError(cfg.mechanism)
     noisy = jax.tree_util.tree_map(lambda g, w: g + w, mean_grad, noise)
-    return noisy, {"clip_frac": clip_frac, "max_grad_norm": max_norm}
+    metrics = {"clip_frac": clip_frac, "max_grad_norm": max_norm}
+    if return_noise:
+        return noisy, metrics, noise
+    return noisy, metrics

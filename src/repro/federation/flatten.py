@@ -114,6 +114,39 @@ class FlatSpec:
             leaves.append(buf[off:off + n].reshape(shape).astype(dt))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
+    # Shape-only variants for SIDE-CHANNEL buffers that ride the model's
+    # layout but must stay f32 regardless of leaf dtype — e.g. the tree
+    # mechanism's noise rows and retired-node corrections: casting those
+    # through a bf16 model's leaf dtypes would corrupt the noise the DP
+    # guarantee is calibrated to.
+
+    def pack_f32(self, tree) -> jax.Array:
+        """Pytree with the spec's SHAPES (any floating dtype) -> (P,) f32
+        buffer; shapes are validated, leaf dtypes are NOT."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(f"tree structure mismatch: got {treedef}, "
+                             f"spec has {self.treedef}")
+        buf = jnp.zeros((self.size,), jnp.float32)
+        for off, shape, leaf in zip(self.offsets, self.shapes, leaves):
+            if tuple(leaf.shape) != shape:
+                raise ValueError(f"leaf shape mismatch: got {leaf.shape}, "
+                                 f"spec has {shape}")
+            buf = jax.lax.dynamic_update_slice(
+                buf, jnp.ravel(leaf).astype(jnp.float32), (off,))
+        return buf
+
+    def unpack_f32(self, buf: jax.Array) -> Any:
+        """(P,) f32 buffer -> pytree with the spec's shapes, dtype KEPT
+        f32 (no per-leaf downcast)."""
+        if buf.shape != (self.size,):
+            raise ValueError(f"buffer shape {buf.shape} != ({self.size},)")
+        leaves = []
+        for off, shape in zip(self.offsets, self.shapes):
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            leaves.append(buf[off:off + n].reshape(shape))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
 
 def flatten_spec(tree) -> FlatSpec:
     leaves, treedef = jax.tree_util.tree_flatten(tree)

@@ -17,9 +17,14 @@ Variants:
                        eps_i is met with scale 2 Xi R_i/(n_i eps_i); the
                        cap is actually ENFORCED here (refusal), unlike the
                        legacy Algo1Config path which only rescaled noise.
+  'tree'             — DP-FTRL binary-tree correlated noise (Kairouz et
+                       al. 2021): O(log K) cumulative noise per owner,
+                       per-node scale d * b(R) at R = min(T, 2^d - 1)
+                       (== the enforced response cap). Deep path only —
+                       the node buffer lives inside AsyncDPState.
 
-DP-FTRL-style tree aggregation or Gaussian/RDP composition (see PAPERS.md)
-slot in as further Mechanism implementations without touching the engines.
+Gaussian/RDP composition (see PAPERS.md) slots in as a further Mechanism
+implementation without touching the engines.
 """
 from __future__ import annotations
 
@@ -96,13 +101,14 @@ class _LedgeredMechanism:
     name = "base"
 
     def __init__(self, owners: Sequence[DataOwner], cfg: FederationConfig, *,
-                 composition: str = "paper", cap_slack: float = 2.0):
+                 composition: str = "paper", cap_slack: float = 2.0,
+                 tree_depth: Optional[int] = None):
         self.owners = list(owners)
         self.cfg = cfg
         self._accountant = PrivacyAccountant(
             {i: o.epsilon for i, o in enumerate(self.owners)}, cfg.horizon,
             composition=composition, cap_slack=cap_slack,
-            n_owners=len(self.owners))
+            n_owners=len(self.owners), tree_depth=tree_depth)
         self.refusals = {i: 0 for i in range(len(self.owners))}
         # Device-ledger counters already folded back by reconcile() —
         # deltas against these make reconcile idempotent over chunked
@@ -253,19 +259,75 @@ class CappedRoundsMechanism(_LedgeredMechanism):
                                       owner.n, owner.epsilon)
 
 
+class TreeMechanism(_LedgeredMechanism):
+    """DP-FTRL binary-tree correlated noise (Kairouz et al. 2021).
+
+    Every response releases the DELTA of a depth-`tree_depth` noise tree
+    (see kernels/tree_noise and privacy.py's composition='tree' note):
+    the cumulative noise an owner's query prefix sees is popcount(t)
+    node draws — O(log K) — instead of t independent ones, with no
+    sampling/shuffling amplification assumption. The per-NODE Laplace
+    scale composes over the d levels each response touches:
+    d * b(R) with R = min(T, 2^d - 1) the tree's leaf capacity, which is
+    also the enforced response cap (a leaf past capacity would have no
+    level for its fresh node). The integer response ledger — and
+    therefore device-ledger reconciliation — is identical to the paper
+    mechanism's at horizon R.
+
+    `depth=None` sizes the tree to the horizon (T.bit_length(), capacity
+    >= T: no extra refusals vs the paper mechanism). depth=0 is the
+    degenerate tree: per-round independent Laplace at the paper scale,
+    bit-for-bit the PaperMechanism path — the parity anchor the tests
+    pin. This mechanism carries device-resident state (node buffer +
+    leaf counters inside AsyncDPState), so it is DEEP-PATH only: the
+    convex scan engine draws independent per-round noise and would
+    misread the node scale.
+    """
+
+    name = "tree"
+
+    def __init__(self, owners, cfg, *, depth: Optional[int] = None):
+        if depth is None:
+            depth = int(cfg.horizon).bit_length()
+        depth = int(depth)
+        if depth < 0:
+            raise ValueError(f"tree depth must be >= 0, got {depth}")
+        if depth > 30:
+            raise ValueError(f"tree depth {depth} overflows the int32 "
+                             "leaf counters (max 30)")
+        self.tree_depth = depth
+        super().__init__(owners, cfg, composition="tree", tree_depth=depth)
+
+    @property
+    def capacity(self) -> Optional[int]:
+        """Leaves the tree holds before refusal (None: degenerate tree)."""
+        return None if self.tree_depth == 0 else (1 << self.tree_depth) - 1
+
+    def _scale_one(self, owner: DataOwner, p: Optional[int],
+                   xi: float) -> float:
+        levels = max(1, self.tree_depth)
+        return levels * laplace_scale_theorem1(
+            xi, self.effective_horizon(), owner.n, owner.epsilon)
+
+
 _MECHANISMS = {
     "paper": PaperMechanism,
     "strict": StrictMechanism,
     "per_owner_rounds": CappedRoundsMechanism,
+    "tree": TreeMechanism,
 }
 
 
 def make_mechanism(spec: Union[str, Mechanism],
                    owners: Sequence[DataOwner], cfg: FederationConfig, *,
-                   cap_slack: Optional[float] = None) -> Mechanism:
+                   cap_slack: Optional[float] = None,
+                   tree_depth: Optional[int] = None) -> Mechanism:
     if not isinstance(spec, str):
         if cap_slack is not None:
             raise ValueError("cap_slack cannot be applied to a "
+                             "pre-built mechanism instance")
+        if tree_depth is not None:
+            raise ValueError("tree_depth cannot be applied to a "
                              "pre-built mechanism instance")
         return spec
     try:
@@ -273,10 +335,14 @@ def make_mechanism(spec: Union[str, Mechanism],
     except KeyError:
         raise ValueError(
             f"unknown mechanism {spec!r}; one of {sorted(_MECHANISMS)}")
+    if tree_depth is not None and cls is not TreeMechanism:
+        raise ValueError("tree_depth only applies to mechanism='tree'")
     if cls is CappedRoundsMechanism:
         return cls(owners, cfg, cap_slack=2.0 if cap_slack is None
                    else cap_slack)
     if cap_slack is not None:
         raise ValueError("cap_slack only applies to "
                          "mechanism='per_owner_rounds'")
+    if cls is TreeMechanism:
+        return cls(owners, cfg, depth=tree_depth)
     return cls(owners, cfg)

@@ -26,6 +26,18 @@ response cap R_i = ceil(c*T/N) (refusing afterwards — refusal is
 data-independent, hence free), the same eps_i is achieved with scale
 2*Xi*R_i/(n_i*eps_i): an ~N/c-fold noise reduction. Recorded in
 EXPERIMENTS.md as a beyond-paper optimization.
+
+`composition='tree'` (DP-FTRL, Kairouz et al. 2021): responses carry
+CORRELATED noise from a binary tree of depth d — each response releases
+the delta of the active-node sum, so the cumulative noise over an
+owner's t responses is popcount(t) <= d node draws instead of t. Each
+response's gradient enters exactly d node queries (one per level), so
+Laplace composition charges eps/(d*R) per node participation at
+per-node scale d * b(R), where R = min(T, 2^d - 1) is the tree's leaf
+capacity (enforced as the response cap). The integer response ledger is
+UNCHANGED — each grant still costs eps/R — which keeps DeviceLedger
+reconciliation bit-exact; `summary()` exposes the per-level
+node-completion view.
 """
 from __future__ import annotations
 
@@ -159,15 +171,28 @@ class PrivacyAccountant:
 
     def __init__(self, epsilons: Dict[int, float], horizon: int,
                  composition: str = "paper", cap_slack: float = 2.0,
-                 n_owners: Optional[int] = None):
-        if composition not in ("paper", "per_owner_rounds"):
+                 n_owners: Optional[int] = None,
+                 tree_depth: Optional[int] = None):
+        if composition not in ("paper", "per_owner_rounds", "tree"):
             raise ValueError(composition)
         cap = None
         if composition == "per_owner_rounds":
             cap = capped_rounds(horizon, n_owners or len(epsilons), cap_slack)
+        elif composition == "tree":
+            # A depth-d tree holds 2^d - 1 leaves; past that the online
+            # binary counter has no level for the fresh node, so the cap
+            # doubles as the correctness bound the engine refuses at.
+            # depth 0 is the degenerate no-tree mechanism: paper cap (T).
+            if tree_depth is None:
+                raise ValueError("tree composition needs tree_depth")
+            if tree_depth > 0:
+                cap = min(horizon, (1 << tree_depth) - 1)
+        elif tree_depth is not None:
+            raise ValueError("tree_depth only applies to composition='tree'")
         self.ledgers = {i: OwnerLedger(e, horizon, cap=cap)
                         for i, e in epsilons.items()}
         self.composition = composition
+        self.tree_depth = tree_depth
 
     def record_response(self, owner: int) -> bool:
         """Returns True if the owner may respond (budget remains)."""
@@ -191,9 +216,27 @@ class PrivacyAccountant:
                                       led.epsilon, **kw)
 
     def summary(self) -> Dict[int, Dict]:
-        return {i: {"epsilon": led.epsilon, "responses": led.responses,
-                    "spent": led.spent, "exhausted": led.exhausted}
-                for i, led in self.ledgers.items()}
+        out = {i: {"epsilon": led.epsilon, "responses": led.responses,
+                   "spent": led.spent, "exhausted": led.exhausted}
+               for i, led in self.ledgers.items()}
+        if self.composition == "tree" and (self.tree_depth or 0) > 0:
+            d = self.tree_depth
+            for i, led in self.ledgers.items():
+                # Tree-completion view of the SAME integer spend: after t
+                # leaves, level l has completed t >> l nodes, and every
+                # response participates in exactly d node queries, so the
+                # per-node budget eps/(d * R) recomposes to the eps/R per
+                # response the integer ledger charges — which is why
+                # reconcile() needs no tree-specific arithmetic.
+                r = led.effective_horizon
+                out[i]["tree"] = {
+                    "depth": d,
+                    "capacity": (1 << d) - 1,
+                    "nodes_completed_per_level": [led.responses >> lvl
+                                                  for lvl in range(d)],
+                    "eps_per_node": led.epsilon / (d * r),
+                }
+        return out
 
     def device_ledger(self) -> DeviceLedger:
         """Snapshot the counters as a DeviceLedger (owners 0..N-1 dense).

@@ -64,7 +64,8 @@ class Federation:
                  *, mechanism: Union[str, Mechanism] = "paper",
                  schedule: Optional[ScheduleProtocol] = None,
                  strategy: str = "async",
-                 cap_slack: Optional[float] = None):
+                 cap_slack: Optional[float] = None,
+                 tree_depth: Optional[int] = None):
         if strategy not in _STRATEGIES:
             raise ValueError(f"strategy must be one of {_STRATEGIES}")
         self.owners = list(owners)
@@ -72,7 +73,8 @@ class Federation:
         self.schedule = schedule if schedule is not None else UniformSchedule()
         self.strategy = strategy
         self.mechanism = make_mechanism(mechanism, self.owners, config,
-                                        cap_slack=cap_slack)
+                                        cap_slack=cap_slack,
+                                        tree_depth=tree_depth)
         self._step_fn = None
         self._fused_fn = None
         self._group_fn = None
@@ -106,6 +108,15 @@ class Federation:
         return sum(self.mechanism.authorize(owner_idx)
                    for _ in range(count))
 
+    def _reject_tree(self, engine: str):
+        # The convex/sync scan engines draw INDEPENDENT per-round noise in
+        # one fused trace; they carry no noise-tree state, so running them
+        # under a tree mechanism would silently emit the wrong mechanism.
+        if getattr(self.mechanism, "tree_depth", None) is not None:
+            raise ValueError(
+                f"{engine} draws independent per-round noise; the tree "
+                f"mechanism needs the deep path (make_step/run_rounds)")
+
     # ------------------------- convex fast path ---------------------------
     def _gram(self):
         if any(o.gram is None for o in self.owners):
@@ -124,6 +135,7 @@ class Federation:
         """
         if self.strategy != "async":
             raise ValueError("run() is the async path; use run_sync()")
+        self._reject_tree("the convex scan engine")
         A, b, n_i = self._gram()
         scales = self.mechanism.scales(p=problem.G.shape[0])
         cfg = self.config
@@ -151,6 +163,7 @@ class Federation:
         surface (strategy='sync' federations only)."""
         if self.strategy != "sync":
             raise ValueError("run_sync() needs strategy='sync'")
+        self._reject_tree("the synchronous scan engine")
         if self.mechanism.cap is not None:
             raise ValueError(
                 "per_owner_rounds is an asynchronous composition: the sync "
@@ -188,7 +201,8 @@ class Federation:
             xi=xi, theta_max=cfg.theta_max,
             privatizer=privatizer or PrivatizerConfig(xi=xi),
             lr_scale=cfg.lr_scale,
-            caps=None if cap is None else (cap,) * self.n_owners)
+            caps=None if cap is None else (cap,) * self.n_owners,
+            tree_depth=getattr(self.mechanism, "tree_depth", None))
 
     def init_state(self, params, pack_params: Optional[bool] = None,
                    bank_dtype=None, mesh=None) -> AsyncDPState:

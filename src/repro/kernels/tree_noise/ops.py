@@ -1,0 +1,47 @@
+"""jit-safe entry: advance one owner's DP-FTRL noise tree by one leaf.
+
+    delta, new_nodes = tree_delta_row(nodes, count, key, noise_scale, ...)
+
+`nodes` is the owner's (depth, P) f32 node row (depth may be 0 — the
+degenerate per-round-Laplace tree), `count` the () int32 leaves released
+so far, `noise_scale` a traced per-NODE scalar (the TreeMechanism's
+level-composed Theorem-1 scale). The Laplace bits come from jax.random
+(threefry) converted by inverse CDF — the same lawful-draw contract as
+the dp_clip_noise kernels, so the fused and jnp backends are
+statistically (not bitwise) equivalent. ``interpret`` follows the repo
+convention: True = Pallas interpreter, False = compiled, "oracle" = the
+ref.py jnp transform on the unpadded arrays (the production backend
+off-TPU).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tree_noise.kernel import LANES, tree_delta_2d
+from repro.kernels.tree_noise.ref import tree_delta_ref
+
+
+def tree_delta_row(nodes, count, key, noise_scale, *, block_rows: int = 64,
+                   interpret=False) -> Tuple[jax.Array, jax.Array]:
+    """(delta (P,), new_nodes (depth, P)) for one leaf increment."""
+    depth, p = nodes.shape
+    cnt = jnp.asarray(count, jnp.int32)
+    ns = jnp.asarray(noise_scale, jnp.float32)
+    if depth == 0 or interpret == "oracle":
+        # depth 0 has no node traffic at all — the kernel's padded pass
+        # would only launder the bits draw through a different shape
+        bits = jax.random.bits(key, (p,), jnp.uint32)
+        return tree_delta_ref(nodes, bits, cnt, ns)
+    per_block = block_rows * LANES
+    pad = (-p) % per_block
+    nodes2d = jnp.pad(nodes, ((0, 0), (0, pad))).reshape(depth, -1, LANES)
+    bits = jax.random.bits(key, nodes2d.shape[1:], jnp.uint32)
+    delta, new_nodes = tree_delta_2d(nodes2d, bits, cnt.reshape(1, 1),
+                                     ns.reshape(1, 1),
+                                     block_rows=block_rows,
+                                     interpret=interpret)
+    return (delta.reshape(-1)[:p],
+            new_nodes.reshape(depth, -1)[:, :p])

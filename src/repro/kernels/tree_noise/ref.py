@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the tree_noise kernel (bit-exact transform).
+
+DP-FTRL binary-counter node refresh (Kairouz et al. 2021): advancing an
+owner's leaf count from t to t+1 retires the node at every level that
+held a trailing one bit of t, installs ONE fresh node at the level of
+the lowest set bit of t+1, and leaves higher levels untouched. The
+per-round injected noise delta is the fresh draw minus the retired
+nodes, so the cumulative injected noise after t leaves telescopes to
+the sum of the ACTIVE nodes — popcount(t) independent draws instead of
+t, the O(log K) cumulative-noise property the mechanism buys.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip_noise.ref import laplace_from_bits
+
+
+def tree_masks_ref(count, depth: int):
+    """(retired, fresh) (depth,) bool masks for the count -> count+1 leaf.
+
+    Level l retires iff 2^(l+1) divides count+1 (it held a trailing one
+    bit of count); level l is fresh iff it is the lowest set bit of
+    count+1. Exactly one level is fresh while count+1 < 2^depth.
+    """
+    t1 = jnp.asarray(count, jnp.int32) + 1
+    lvl = jnp.arange(depth, dtype=jnp.int32)
+    pw = jnp.left_shift(jnp.int32(1), lvl + 1)
+    rem = jnp.remainder(t1, pw)
+    return rem == 0, rem == jnp.left_shift(jnp.int32(1), lvl)
+
+
+def tree_delta_ref(nodes, bits, count, noise_scale):
+    """One leaf increment -> (delta (P,), new_nodes (depth, P)).
+
+    `nodes` (depth, P) f32 holds the owner's SCALED node noise (each
+    level a noise_scale * Laplace(1) draw); `bits` (P,) uint32 feeds the
+    fresh draw through the same inverse-CDF transform as the
+    dp_clip_noise kernels; `count` () int32 is the leaves released
+    before this one. depth == 0 degenerates to fresh independent noise
+    with no retirement — exactly the per-round Laplace mechanism.
+    """
+    depth = nodes.shape[0]
+    zeta = noise_scale * laplace_from_bits(bits)
+    if depth == 0:
+        return zeta, nodes
+    retired, fresh = tree_masks_ref(count, depth)
+    delta = zeta - jnp.sum(jnp.where(retired[:, None], nodes, 0.0), axis=0)
+    new_nodes = jnp.where(fresh[:, None], zeta[None],
+                          jnp.where(retired[:, None], 0.0, nodes))
+    return delta, new_nodes

@@ -239,6 +239,11 @@ class FlatShardings(NamedTuple):
     row: NamedSharding          # one gathered bank row / EF residual (P,)
     ledger: NamedSharding       # (N,) int32 counters — replicated (tiny)
     bank_scales: NamedSharding = None   # quant-bank scales (N_owners, nb)
+    # DP-FTRL noise-tree node buffer (N_owners, depth, P): owner rows over
+    # the data axes and P like the model — exactly the bank's layout with a
+    # replicated depth axis in between, so the per-round row gather/scatter
+    # and the tree-delta elementwise ops stay local in P.
+    tree_nodes: NamedSharding = None
 
 
 def flat_axes(mesh: Mesh, n_owners: int, p: int
@@ -269,4 +274,5 @@ def flat_shardings(mesh: Mesh, n_owners: int, p: int) -> FlatShardings:
                          bank=NamedSharding(mesh, P(n_ax, p_ax)),
                          row=NamedSharding(mesh, P(p_ax)),
                          ledger=NamedSharding(mesh, P()),
-                         bank_scales=NamedSharding(mesh, P(n_ax)))
+                         bank_scales=NamedSharding(mesh, P(n_ax)),
+                         tree_nodes=NamedSharding(mesh, P(n_ax, None, p_ax)))

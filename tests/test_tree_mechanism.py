@@ -1,0 +1,405 @@
+"""DP-FTRL tree-aggregated correlated noise (mechanism + kernels + drivers).
+
+Contracts under test:
+  * depth-0 tree == paper mechanism BIT-FOR-BIT under fixed keys, on the
+    pytree path, the flat reference path, and the flat fused path.
+  * the tree_noise kernel family (repro.kernels.tree_noise) matches its
+    jnp oracle on the same Laplace bits, and the online binary counter
+    satisfies the popcount/telescoping invariants (cumulative noise over
+    t leaves == sum of popcount(t) active nodes — the O(log K) bound).
+  * drivers: host step loop == fused scan bit-for-bit; grouped rounds
+    advance IDENTICAL tree state; refusals (mid-schedule exhaustion)
+    leave nodes AND counters bit-exactly untouched for every bank codec.
+  * accounting: cap = min(T, 2^d - 1), per-node scale d * b(R),
+    summary's tree-completion view, reconcile bit-exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federation import (AsyncDPConfig, DataOwner, Federation,
+                              FederationConfig, PrivatizerConfig,
+                              TreeMechanism, TreeNoise, init_state_flat,
+                              init_tree_noise, make_mechanism,
+                              make_sync_dp_step, make_train_step)
+from repro.federation.flatten import flatten_spec
+from repro.kernels.tree_noise.ops import tree_delta_row
+from repro.kernels.tree_noise.ref import tree_delta_ref, tree_masks_ref
+
+N_OWNERS, K = 3, 24
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6,)), "b": jnp.zeros(())}
+    batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
+               "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4))}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batches, loss_fn, priv
+
+
+def _make_fed(loss_fn, priv, mechanism="tree", depth=None, horizon=16,
+              pack=True, bank_dtype=None, mesh=None, **kw):
+    owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              theta_max=10.0, lr_scale=5.0),
+                     mechanism=mechanism,
+                     **(dict(tree_depth=depth) if mechanism == "tree"
+                        else {}), **kw)
+    fed.make_step(loss_fn, privatizer=priv, pack_params=pack,
+                  bank_dtype=bank_dtype, mesh=mesh)
+    return fed
+
+
+def _round_robin(k=K):
+    return jnp.asarray(np.arange(k) % N_OWNERS, jnp.int32)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# --------------------- depth-0 degeneracy (parity anchor) -------------------
+@pytest.mark.parametrize("pack,fused", [(False, False), (True, False),
+                                        (True, True)])
+def test_depth0_tree_is_paper_mechanism_bitwise(toy, pack, fused):
+    params, batches, loss_fn, priv = toy
+    priv = priv if not fused else PrivatizerConfig(
+        xi=1.0, granularity="microbatch", n_microbatches=2,
+        fused_kernel=True)
+    seq, key = _round_robin(), jax.random.PRNGKey(7)
+    fp = _make_fed(loss_fn, priv, mechanism="paper", pack=pack)
+    sp, mp = fp.run_rounds(fp.init_state(params), batches, seq, key)
+    ft = _make_fed(loss_fn, priv, depth=0, pack=pack)
+    st = ft.init_state(params)
+    assert isinstance(st.tree, TreeNoise) and st.tree.depth == 0
+    st, mt = ft.run_rounds(st, batches, seq, key)
+    assert _leaves_equal(sp.theta_L, st.theta_L)
+    assert _leaves_equal(sp.bank, st.bank)
+    for name in mp:
+        np.testing.assert_array_equal(np.asarray(mp[name]),
+                                      np.asarray(mt[name]))
+    # the degenerate tree has no nodes and never counts leaves differently
+    assert np.asarray(st.tree.counts).tolist() == [8, 8, 8]
+
+
+# ----------------------- kernel family vs jnp oracle ------------------------
+def test_tree_delta_kernel_matches_oracle_same_bits():
+    # repro.kernels.tree_noise triple: drive the Pallas interpreter and
+    # the ref transform with the SAME Laplace bits (the op-level paths
+    # draw different shapes, so equality lives at the kernel/ref level).
+    from repro.kernels.tree_noise.kernel import LANES, tree_delta_2d
+    depth, rows = 4, 2
+    rs = np.random.RandomState(0)
+    nodes2d = jnp.asarray(rs.randn(depth, rows, LANES), jnp.float32)
+    bits = jax.random.bits(jax.random.PRNGKey(3), (rows, LANES), jnp.uint32)
+    for count in (0, 1, 2, 6, 7, 11):
+        cnt = jnp.asarray(count, jnp.int32)
+        d_k, n_k = tree_delta_2d(nodes2d, bits, cnt.reshape(1, 1),
+                                 jnp.full((1, 1), 1.3, jnp.float32),
+                                 block_rows=1, interpret=True)
+        d_r, n_r = tree_delta_ref(nodes2d.reshape(depth, -1),
+                                  bits.reshape(-1), cnt,
+                                  jnp.float32(1.3))
+        np.testing.assert_allclose(np.asarray(d_k).reshape(-1),
+                                   np.asarray(d_r), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(n_k).reshape(depth, -1),
+                                   np.asarray(n_r), rtol=1e-6, atol=1e-6)
+
+
+def test_tree_delta_row_op_padding_and_depth0():
+    # non-lane-aligned P through the padded 2D path (interpreter) keeps
+    # the structural invariants; depth 0 returns the raw draw untouched
+    p, depth = 130, 3
+    nodes = jnp.asarray(np.random.RandomState(1).randn(depth, p), jnp.float32)
+    key = jax.random.PRNGKey(9)
+    delta, new = tree_delta_row(nodes, 3, key, 1.0, block_rows=1,
+                                interpret=True)
+    assert delta.shape == (p,) and new.shape == (depth, p)
+    retired, fresh = tree_masks_ref(jnp.int32(3), depth)
+    # count 3 -> t1 = 4 = 0b100: levels 0,1 retire, level 2 is fresh
+    assert np.asarray(retired).tolist() == [True, True, False]
+    assert np.asarray(fresh).tolist() == [False, False, True]
+    np.testing.assert_array_equal(np.asarray(new[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(new[1]), 0.0)
+    # telescoping: delta == fresh draw - retired sum  =>  fresh node
+    # equals delta + sum(retired old nodes)
+    np.testing.assert_allclose(np.asarray(new[2]),
+                               np.asarray(delta + nodes[0] + nodes[1]),
+                               rtol=1e-6, atol=1e-6)
+    d0, n0 = tree_delta_row(jnp.zeros((0, p), jnp.float32), 5, key, 2.0)
+    assert n0.shape == (0, p)
+    from repro.kernels.dp_clip_noise.ref import laplace_from_bits
+    bits = jax.random.bits(key, (p,), jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(d0),
+                                  np.asarray(2.0 * laplace_from_bits(bits)))
+
+
+# ------------------ popcount / O(log K) variance property -------------------
+def _check_popcount_telescoping(depth, t, p):
+    # Advance one owner's tree t <= 2^depth - 1 leaves; after every
+    # increment the CUMULATIVE injected noise telescopes to the sum of
+    # the currently-active nodes — popcount(t) of them, <= depth — which
+    # is the whole O(log K) cost-of-privacy claim (cumulative variance
+    # grows with popcount, not t). Node values are the unit-scale draws
+    # themselves, so the identity is checked on the real sampler output.
+    t = min(t, (1 << depth) - 1)
+    nodes = jnp.zeros((depth, p), jnp.float32)
+    cum = np.zeros((p,), np.float64)
+    for leaf in range(t):
+        delta, nodes = tree_delta_row(nodes, leaf, jax.random.PRNGKey(leaf),
+                                      1.0, interpret="oracle")
+        cum += np.asarray(delta, np.float64)
+        n_active = sum(bool(np.any(np.asarray(nodes[lvl]) != 0.0))
+                       for lvl in range(depth))
+        assert n_active == bin(leaf + 1).count("1") <= depth
+        np.testing.assert_allclose(cum, np.asarray(nodes).sum(axis=0),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _check_masks_binary_counter(count, depth):
+    retired, fresh = tree_masks_ref(jnp.int32(count), depth)
+    retired, fresh = np.asarray(retired), np.asarray(fresh)
+    t1 = count + 1
+    for lvl in range(depth):
+        assert retired[lvl] == (t1 % (1 << (lvl + 1)) == 0)
+        assert fresh[lvl] == (t1 % (1 << (lvl + 1)) == (1 << lvl))
+    # at most one fresh level; every level below it retires
+    assert fresh.sum() <= 1
+    if fresh.any():
+        lvl = int(np.argmax(fresh))
+        assert retired[:lvl].all() and not retired[lvl:].any()
+
+
+@pytest.mark.parametrize("depth,t,p", [(1, 1, 1), (3, 7, 2), (5, 31, 1),
+                                       (6, 40, 3)])
+def test_cumulative_noise_is_popcount_many_nodes(depth, t, p):
+    _check_popcount_telescoping(depth, t, p)
+
+
+@pytest.mark.parametrize("count", [0, 1, 2, 6, 7, 127, 1 << 19])
+def test_tree_masks_binary_counter(count):
+    for depth in (1, 3, 10, 21):
+        _check_masks_binary_counter(count, depth)
+
+
+try:                # property-based sweep where hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    SET = dict(max_examples=20, deadline=None, derandomize=True)
+
+    @given(st.integers(1, 6), st.integers(1, 63), st.integers(1, 4))
+    @settings(**SET)
+    def test_cumulative_noise_popcount_property(depth, t, p):
+        _check_popcount_telescoping(depth, t, p)
+
+    @given(st.integers(0, 1 << 20), st.integers(1, 21))
+    @settings(**SET)
+    def test_tree_masks_binary_counter_property(count, depth):
+        _check_masks_binary_counter(count, depth)
+except ImportError:     # parametrized fallbacks above still run
+    pass
+
+
+# --------------------------- driver equivalence -----------------------------
+def test_step_loop_matches_fused_scan_with_exhaustion(toy):
+    # depth 2 -> capacity 3 < 8 rounds/owner: refusals hit MID-schedule
+    params, batches, loss_fn, priv = toy
+    seq, key = _round_robin(), jax.random.PRNGKey(11)
+    keys = jax.random.split(key, K)
+    fed_f = _make_fed(loss_fn, priv, depth=2)
+    s_f, m_f = fed_f.run_rounds(fed_f.init_state(params), batches, seq, key)
+    fed_l = _make_fed(loss_fn, priv, depth=2)
+    s_l = fed_l.init_state(params)
+    refused = []
+    for k in range(K):
+        b = {n: v[k] for n, v in batches.items()}
+        s_l, m = fed_l.step(s_l, b, int(seq[k]), keys[k])
+        refused.append(m["refused"])
+    assert _leaves_equal(s_f.theta_L, s_l.theta_L)
+    assert _leaves_equal(s_f.bank, s_l.bank)
+    np.testing.assert_array_equal(np.asarray(s_f.tree.nodes),
+                                  np.asarray(s_l.tree.nodes))
+    np.testing.assert_array_equal(np.asarray(s_f.tree.counts),
+                                  np.asarray(s_l.tree.counts))
+    np.testing.assert_array_equal(np.asarray(m_f["refused"]),
+                                  np.asarray(refused))
+    assert fed_f.reconcile(s_f) == fed_l.ledger()
+
+
+def test_grouped_rounds_advance_identical_tree_state(toy):
+    # Node contents depend only on (key, count) — not on theta — so the
+    # grouped driver must reproduce the sequential tree EXACTLY even
+    # where theta_L deviates (documented group-mean reduction).
+    params, batches, loss_fn, priv = toy
+    seq, key = _round_robin(), jax.random.PRNGKey(13)
+    fed_s = _make_fed(loss_fn, priv, depth=3)
+    s_s, _ = fed_s.run_rounds(fed_s.init_state(params), batches, seq, key)
+    fed_g = _make_fed(loss_fn, priv, depth=3)
+    s_g, _ = fed_g.run_rounds(fed_g.init_state(params), batches, seq, key,
+                              owner_parallel=True, max_group=N_OWNERS)
+    np.testing.assert_array_equal(np.asarray(s_s.tree.counts),
+                                  np.asarray(s_g.tree.counts))
+    np.testing.assert_array_equal(np.asarray(s_s.tree.nodes),
+                                  np.asarray(s_g.tree.nodes))
+    assert fed_s.reconcile(s_s) == fed_g.reconcile(s_g)
+
+
+@pytest.mark.parametrize("bank_dtype", [None, jnp.bfloat16, "int8", "fp8"])
+def test_exhaustion_leaves_tree_bit_exact_per_codec(toy, bank_dtype):
+    # After the cap (depth 2 -> 3 leaves/owner), EVERY further round must
+    # be a bit-exact no-op on nodes and counters, whatever the bank codec.
+    params, batches, loss_fn, priv = toy
+    seq, key = _round_robin(), jax.random.PRNGKey(17)
+    fed = _make_fed(loss_fn, priv, depth=2, bank_dtype=bank_dtype)
+    state = fed.init_state(params)
+    n_granted = 3 * N_OWNERS
+    cut = {n: v[:n_granted] for n, v in batches.items()}
+    rest = {n: v[n_granted:] for n, v in batches.items()}
+    keys = jax.random.split(key, K)
+
+    fused = fed._fused_fn
+    state, _ = fused(state, cut, seq[:n_granted], keys[:n_granted])
+    nodes0 = np.asarray(state.tree.nodes).copy()
+    counts0 = np.asarray(state.tree.counts).copy()
+    assert counts0.tolist() == [3, 3, 3]
+    state, m = fused(state, rest, seq[n_granted:], keys[n_granted:])
+    assert np.asarray(m["refused"]).all()
+    np.testing.assert_array_equal(np.asarray(state.tree.nodes), nodes0)
+    np.testing.assert_array_equal(np.asarray(state.tree.counts), counts0)
+
+
+def test_sharded_1x1_mesh_tree_parity(toy):
+    from repro.launch.mesh import make_debug_mesh
+    from repro.sharding.rules import flat_shardings
+    params, batches, loss_fn, priv = toy
+    seq, key = _round_robin(), jax.random.PRNGKey(19)
+    mesh = make_debug_mesh(1, 1)
+    sh = flat_shardings(mesh, N_OWNERS, 7)
+    assert sh.tree_nodes is not None
+    fed_u = _make_fed(loss_fn, priv, depth=3)
+    s_u, _ = fed_u.run_rounds(fed_u.init_state(params), batches, seq, key)
+    fed_m = _make_fed(loss_fn, priv, depth=3, mesh=mesh)
+    s_m, _ = fed_m.run_rounds(fed_m.init_state(params), batches, seq, key)
+    np.testing.assert_array_equal(np.asarray(s_u.theta_L.buf),
+                                  np.asarray(s_m.theta_L.buf))
+    np.testing.assert_array_equal(np.asarray(s_u.tree.nodes),
+                                  np.asarray(s_m.tree.nodes))
+    np.testing.assert_array_equal(np.asarray(s_u.tree.counts),
+                                  np.asarray(s_m.tree.counts))
+
+
+# ------------------------------- accounting ---------------------------------
+def test_tree_mechanism_scales_and_cap():
+    owners = [DataOwner(n=100, epsilon=2.0, xi=1.0)]
+    cfg = FederationConfig(horizon=1000)
+    mech = make_mechanism("tree", owners, cfg, tree_depth=9)
+    assert mech.cap == 511 and mech.capacity == 511
+    # per-node scale: d * 2 Xi R / (n eps) with R = 511
+    np.testing.assert_allclose(
+        np.asarray(mech.scales()), 9 * 2.0 * 1.0 * 511 / (100 * 2.0),
+        rtol=1e-6)
+    # default depth sizes the tree to the horizon: capacity >= T
+    mech_d = make_mechanism("tree", owners, cfg)
+    assert mech_d.tree_depth == 10 and mech_d.cap == 1000
+    # degenerate depth: paper cap and paper scale
+    mech0 = make_mechanism("tree", owners, cfg, tree_depth=0)
+    assert mech0.cap is None and mech0.capacity is None
+    np.testing.assert_allclose(
+        np.asarray(mech0.scales()),
+        np.asarray(make_mechanism("paper", owners, cfg).scales()))
+
+
+def test_tree_ledger_summary_and_validation():
+    owners = [DataOwner(n=50, epsilon=1.0, xi=1.0)]
+    cfg = FederationConfig(horizon=100)
+    mech = make_mechanism("tree", owners, cfg, tree_depth=4)
+    assert mech.cap == 15
+    for _ in range(5):
+        assert mech.authorize(0)
+    led = mech.ledger()[0]
+    tree = led["tree"]
+    assert tree["depth"] == 4 and tree["capacity"] == 15
+    assert tree["nodes_completed_per_level"] == [5, 2, 1, 0]
+    np.testing.assert_allclose(tree["eps_per_node"], 1.0 / (4 * 15))
+    # eps/(d*R) per node * d node-queries per response recomposes to the
+    # integer ledger's eps/R per response
+    np.testing.assert_allclose(led["spent"], 5 * 1.0 / 15)
+    with pytest.raises(ValueError, match="tree_depth"):
+        make_mechanism("paper", owners, cfg, tree_depth=3)
+    with pytest.raises(ValueError, match="int32"):
+        TreeMechanism(owners, cfg, depth=31)
+    with pytest.raises(ValueError, match="tree_depth"):
+        make_mechanism(TreeMechanism(owners, cfg), owners, cfg,
+                       tree_depth=2)
+
+
+def test_tree_engine_guards(toy):
+    params, batches, loss_fn, priv = toy
+    cfg = AsyncDPConfig(n_owners=2, horizon=100, epsilons=(1.0, 1.0),
+                        owner_sizes=(50, 50), privatizer=priv,
+                        tree_depth=3)
+    with pytest.raises(ValueError, match="holds 7 leaves"):
+        make_train_step(loss_fn, cfg)     # caps default to T=100 > 7
+    ok = AsyncDPConfig(n_owners=2, horizon=100, epsilons=(1.0, 1.0),
+                       owner_sizes=(50, 50), privatizer=priv,
+                       tree_depth=3, caps=(7, 7))
+    step = make_train_step(loss_fn, ok)
+    import dataclasses
+    bare = init_state_flat(params, dataclasses.replace(ok, tree_depth=None))
+    with pytest.raises(ValueError, match="no noise tree"):
+        step(bare, {n: v[0] for n, v in batches.items()},
+             jnp.int32(0), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="no sync counterpart"):
+        make_sync_dp_step(loss_fn, ok, lr=0.1)
+    owners = [DataOwner(n=50, epsilon=1.0, xi=1.0) for _ in range(2)]
+    with pytest.raises(ValueError, match="deep path"):
+        fed = Federation(owners, FederationConfig(horizon=8),
+                         mechanism="tree", tree_depth=2)
+        fed.run(jax.random.PRNGKey(0), None)
+
+
+def test_init_tree_noise_shapes(toy):
+    params, _, _, priv = toy
+    cfg = AsyncDPConfig(n_owners=3, horizon=7, epsilons=(1.0,) * 3,
+                        owner_sizes=(10,) * 3, privatizer=priv,
+                        tree_depth=3)
+    tr = init_tree_noise(cfg, params)              # pytree representation
+    assert tr.nodes["w"].shape == (3, 3, 6)
+    assert tr.nodes["b"].shape == (3, 3)
+    assert tr.counts.shape == (3,) and tr.depth == 3
+    flat = init_state_flat(params, cfg)
+    assert flat.tree.nodes.shape == (3, 3, 7)
+    assert init_tree_noise(
+        AsyncDPConfig(n_owners=3, horizon=7, epsilons=(1.0,) * 3,
+                      owner_sizes=(10,) * 3, privatizer=priv), params) is None
+
+
+def test_flatspec_pack_f32_roundtrip():
+    params = {"w": jnp.ones((4,), jnp.bfloat16), "b": jnp.zeros((2, 3))}
+    spec = flatten_spec(params)
+    noise = {"w": jnp.asarray(np.random.RandomState(0).randn(4), jnp.float32),
+             "b": jnp.asarray(np.random.RandomState(1).randn(2, 3),
+                              jnp.float32)}
+    buf = spec.pack_f32(noise)
+    assert buf.dtype == jnp.float32
+    back = spec.unpack_f32(buf)
+    # no bf16 laundering: the f32 values survive bit-for-bit even though
+    # the model leaf "w" is bf16
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(noise["w"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(noise["b"]))
+    assert back["w"].dtype == jnp.float32
+    with pytest.raises(ValueError, match="shape"):
+        spec.pack_f32({"w": jnp.zeros((5,)), "b": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="buffer shape"):
+        spec.unpack_f32(jnp.zeros((3,), jnp.float32))
