@@ -1,0 +1,172 @@
+"""Chaos harness (PR 8): what the fault layer costs and what faults cost.
+
+Two question families, both on the fused driver:
+
+  * guard_overhead — the fault-armed engine (checksum verification,
+    finite guards, quarantine windows in every round) under a ZERO-fault
+    plan against the fault-off engine on the identical workload:
+    rounds/sec of both and their ratio. The ratio is the price of
+    carrying the guards when nothing goes wrong — the regression guard
+    pins it (an accidental host sync or a per-round reencode would show
+    up here first).
+  * degradation_<mech>_<codec>_p<rate> — convergence under injected
+    faults: final training loss of a clean run vs a faulted run at fault
+    rate p, sweeping mechanism (paper/tree) x bank codec (f32/int8) x
+    fault rate. Deterministic seeds end to end, so `loss_ratio`
+    (faulty/clean, smaller is better) is a committed trajectory metric,
+    not a flaky timing. The fault tallies ride along so a rate change is
+    visible next to its cost.
+
+Timings are interleaved medians (engines alternate within each rep) so
+machine noise hits both alike.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation import (DataOwner, FaultPlan, FaultPolicy, Federation,
+                              FederationConfig, PrivatizerConfig)
+
+N_OWNERS, DIM, BATCH = 16, 32, 8
+POLICY = FaultPolicy(max_faults=8, window=32)
+
+
+def _model():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (DIM, DIM)) / DIM,
+              "b": jnp.zeros((DIM,))}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+
+    return params, loss_fn
+
+
+def _batches(k):
+    return {"x": jax.random.normal(jax.random.PRNGKey(1), (k, BATCH, DIM)),
+            "y": jax.random.normal(jax.random.PRNGKey(2), (k, BATCH, DIM))}
+
+
+def _make_fed(loss_fn, horizon, *, fault_policy=None, bank_dtype=None,
+              mechanism="paper", tree_depth=None):
+    owners = [DataOwner(n=10_000, epsilon=2.0, xi=1.0)
+              for _ in range(N_OWNERS)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              lr_scale=5.0),
+                     mechanism=mechanism, tree_depth=tree_depth,
+                     fault_policy=fault_policy)
+    pack = bank_dtype is not None
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="microbatch", n_microbatches=1),
+        pack_params=pack, bank_dtype=bank_dtype)
+    return fed
+
+
+def _time_run(fed, state, batches, owner_seq, root, **kw):
+    t0 = time.perf_counter()
+    state, _ = fed.run_rounds(state, batches, owner_seq, root, **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state.theta_L)[0])
+    return time.perf_counter() - t0
+
+
+def measure_guard_overhead(k: int, reps: int = 9):
+    """Interleaved-median seconds for K rounds: fault-off engine vs the
+    fault-armed engine under a zero-fault plan (guards fully active,
+    nothing faulting — the steady-state healthy path)."""
+    params, loss_fn = _model()
+    batches = _batches(k)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    fed_p = _make_fed(loss_fn, 4 * k)
+    fed_g = _make_fed(loss_fn, 4 * k, fault_policy=POLICY)
+    runs = ((fed_p, {}), (fed_g, dict(faults=FaultPlan())))
+    # same root key on purpose: warmup and every timed rep must be the
+    # IDENTICAL workload on both engines (equivalence is asserted in
+    # tests/test_faults.py, not here)
+    for fed, kw in runs:                                        # compile
+        _time_run(fed, fed.init_state(params), batches,  # dpcheck: ignore[DPC105]
+                  owner_seq, root, **kw)
+    times = [[], []]
+    for _ in range(reps):
+        for i, (fed, kw) in enumerate(runs):
+            times[i].append(_time_run(  # dpcheck: ignore[DPC105]
+                fed, fed.init_state(params), batches, owner_seq, root,
+                **kw))
+    return float(np.median(times[0])), float(np.median(times[1]))
+
+
+def measure_degradation(k: int, rate: float, *, bank_dtype=None,
+                        mechanism="paper"):
+    """Final mean loss over the training batches: clean run vs a faulted
+    run at total fault rate `rate` (split evenly over the four codes),
+    same schedule/keys. Returns (loss_clean, loss_faulty, tallies)."""
+    params, loss_fn = _model()
+    batches = _batches(k)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    depth = 4 if mechanism == "tree" else None
+
+    def final_loss(plan):
+        fed = _make_fed(loss_fn, 4 * k, fault_policy=POLICY,
+                        bank_dtype=bank_dtype, mechanism=mechanism,
+                        tree_depth=depth)
+        state, m = fed.run_rounds(fed.init_state(params), batches,
+                                  owner_seq, root, faults=plan)
+        theta = state.theta_L
+        if hasattr(theta, "unpack"):
+            theta = theta.unpack()
+        losses = jax.vmap(lambda b: loss_fn(theta, b))(batches)
+        return float(jnp.mean(losses)), m
+
+    loss_clean, _ = final_loss(FaultPlan())
+    q = rate / 4.0
+    loss_faulty, m = final_loss(FaultPlan(drop=q, stale=q, nonfinite=q,
+                                          corrupt=q))
+    tallies = {name: int(np.asarray(m[name]).sum())
+               for name in ("dropped", "faulted", "quarantined")}
+    return loss_clean, loss_faulty, tallies
+
+
+def overhead_row(dt_plain: float, dt_guarded: float, k: int) -> str:
+    return (f"rounds_per_sec_plain={k / dt_plain:.0f};"
+            f"rounds_per_sec_guarded={k / dt_guarded:.0f};"
+            f"overhead_ratio={dt_guarded / dt_plain:.3f}")
+
+
+def degradation_row(loss_clean: float, loss_faulty: float,
+                    tallies: dict, rate: float) -> str:
+    return (f"loss_clean={loss_clean:.5f};loss_faulty={loss_faulty:.5f};"
+            f"loss_ratio={loss_faulty / loss_clean:.4f};"
+            f"fault_rate={rate};"
+            + ";".join(f"n_{n}={v}" for n, v in tallies.items()))
+
+
+def run(fast: bool = False):
+    rows = []
+    k = 96 if fast else 256
+    reps = 5 if fast else 9
+    dt_p, dt_g = measure_guard_overhead(k, reps=reps)
+    rows.append((f"chaos/guard_overhead/owners{N_OWNERS}/K{k}",
+                 dt_g / k * 1e6, overhead_row(dt_p, dt_g, k)))
+    kd = 64 if fast else 192
+    sweep = [("paper", None, 0.2), ("paper", "int8", 0.2),
+             ("tree", None, 0.2)]
+    if not fast:
+        sweep += [("paper", None, 0.5), ("paper", "int8", 0.5),
+                  ("tree", None, 0.5), ("paper", "fp8", 0.2)]
+    for mech, bd, rate in sweep:
+        lc, lf, tallies = measure_degradation(kd, rate, bank_dtype=bd,
+                                              mechanism=mech)
+        codec = bd if isinstance(bd, str) else "f32"
+        rows.append((f"chaos/degradation_{mech}_{codec}_p{rate}/K{kd}",
+                     0.0, degradation_row(lc, lf, tallies, rate)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -41,6 +41,11 @@ CONVERGENCE_GUARDS = (
     ("BENCH_fused_rounds.json", "quant_convergence", "dev_vs_noise_floor"),
     ("BENCH_convergence.json", "tree_vs_laplace",
      "cop_ratio_tree_vs_laplace"),
+    # fault layer (PR 8): the price of carrying the guards on the healthy
+    # path is a within-run ratio (machine-independent), and the loss
+    # ratio under injected faults is seed-deterministic
+    ("BENCH_chaos.json", "guard_overhead", "overhead_ratio"),
+    ("BENCH_chaos.json", "degradation_paper_f32", "loss_ratio"),
 )
 
 

@@ -22,6 +22,8 @@ Mapping to the paper:
                            multi-round driver (device-resident ledger)
     bench_serving       -> beyond-paper: serving-path latency (no paper
                            figure; guards the hybrid-serving example)
+    bench_chaos         -> beyond-paper: fault-layer guard overhead +
+                           convergence degradation under injected faults
     bench_kernels       -> kernel-path microbenches (CPU)
     bench_roofline      -> §Roofline table from the dry-run artifacts
 """
@@ -45,10 +47,11 @@ def main() -> None:
                          "(default: the repo root; '' disables)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_async_vs_sync, bench_collaboration,
-                            bench_comm_timing, bench_convergence,
-                            bench_cop_surface, bench_fused_rounds,
-                            bench_kernels, bench_roofline, bench_serving)
+    from benchmarks import (bench_async_vs_sync, bench_chaos,
+                            bench_collaboration, bench_comm_timing,
+                            bench_convergence, bench_cop_surface,
+                            bench_fused_rounds, bench_kernels,
+                            bench_roofline, bench_serving)
 
     suites = {
         "comm_timing": bench_comm_timing.run,
@@ -61,6 +64,7 @@ def main() -> None:
         "collaboration": bench_collaboration.run,
         "async_vs_sync": lambda: bench_async_vs_sync.run(fast=args.fast),
         "fused_rounds": lambda: bench_fused_rounds.run(fast=args.fast),
+        "chaos": lambda: bench_chaos.run(fast=args.fast),
     }
     from benchmarks.common import write_bench_json
 

@@ -14,7 +14,11 @@ DPC302 (grant masks the bank write): in a function that consults the
 ledger (``.authorized(``), every bank-write call must be refusal-masked:
 either it takes an ``ok=``/``respond=`` keyword or its value arguments are
 derived from the grant mask (jnp.where on it). An unmasked write would let
-a refused round mutate owner state, voiding the budget accounting.
+a refused round mutate owner state, voiding the budget accounting. The
+fault layer's masks are grant sources too: ``verify_row(...)`` /
+``finite_guard(...)`` results and the quarantine flags
+(``.quarantined`` reads) — a write masked by the fault-guard algebra is
+exactly as refusal-safe as one masked by ``.authorized`` alone.
 """
 from __future__ import annotations
 
@@ -133,19 +137,45 @@ class _OrderWalker:
             for line in self.pending]
 
 
+# Calls whose result is a fault-layer guard mask (PR 8): payload checksum
+# verification and the non-finite update guard.
+GUARD_CALLS = ("verify_row", "finite_guard")
+
+
+def _own_nodes(fn: ast.AST):
+    """Walk a def WITHOUT descending into nested defs: every nested def
+    is checked as its own function (iter_functions yields it), so masks
+    bound in one closure must not vouch for writes in a sibling."""
+    todo = list(ast.iter_child_nodes(fn))
+    while todo:
+        node = todo.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield node
+        todo.extend(ast.iter_child_nodes(node))
+
+
 def _grant_masks(fn: ast.AST) -> Set[str]:
-    """Names bound from `.authorized(...)` and names derived from them."""
+    """Names bound from grant/guard sources and names derived from them.
+
+    Sources: `.authorized(...)` ledger reads, `verify_row(...)` /
+    `finite_guard(...)` fault guards, and `.quarantined` flag reads."""
     masks: Set[str] = set()
     changed = True
     while changed:
         changed = False
-        for node in ast.walk(fn):
+        for node in _own_nodes(fn):
             if not isinstance(node, ast.Assign):
                 continue
             derived = False
             for sub in ast.walk(node.value):
-                if (isinstance(sub, ast.Call)
-                        and call_name(sub).endswith(".authorized")):
+                if isinstance(sub, ast.Call):
+                    name = call_name(sub)
+                    if (name.endswith(".authorized")
+                            or name.split(".")[-1] in GUARD_CALLS):
+                        derived = True
+                if isinstance(sub, ast.Attribute) and \
+                        sub.attr == "quarantined":
                     derived = True
                 if isinstance(sub, ast.Name) and sub.id in masks:
                     derived = True
@@ -164,7 +194,7 @@ def _check_bank_writes(ctx: FileCtx, qual: str,
     if not masks:
         return []
     out: List[Violation] = []
-    for node in ast.walk(fn):
+    for node in _own_nodes(fn):
         if not isinstance(node, ast.Call):
             continue
         name = call_name(node)

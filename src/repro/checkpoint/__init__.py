@@ -1,1 +1,5 @@
-from repro.checkpoint.store import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import (latest_step, load_checkpoint,
+                                    load_manifest, save_checkpoint)
+
+__all__ = ["latest_step", "load_checkpoint", "load_manifest",
+           "save_checkpoint"]

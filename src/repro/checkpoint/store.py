@@ -5,11 +5,23 @@ The manifest stores the treedef (as path strings) and dtypes so arbitrary
 nested dict/NamedTuple states round-trip. NamedTuples are stored as dicts
 with a '__namedtuple__' marker and rebuilt on load when the caller passes
 `like=` (a template pytree) — otherwise plain dicts come back.
+
+Saves are ATOMIC: the shard is written to a temp sibling and os.rename'd
+into `step_<k>`, so a crash mid-save never leaves a half-written shard
+that `latest_step` would resume from (rename is atomic on POSIX; the
+temp/backup names never match the `step_` prefix, so a leftover from a
+crash between the two renames is invisible to `latest_step`).
+
+Extended dtypes (bfloat16, float8_*) are stored as raw bit patterns
+(np.load would otherwise hand back opaque void scalars): the npz holds a
+uint view of the buffer and the manifest records the logical dtype, which
+the loader views back before casting into the template's dtype.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+import shutil
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,32 +39,79 @@ def _flatten_with_paths(tree):
     return out
 
 
-def save_checkpoint(directory: str, step: int, state: Any) -> str:
-    d = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
+def _storage_view(a: np.ndarray) -> np.ndarray:
+    """A bit-identical view np.savez/np.load round-trips losslessly."""
+    if a.dtype.kind in "biufc":
+        return a
+    # ml_dtypes arrays (bf16, fp8) come back from np.load as void
+    # scalars — store the raw bits in a same-width uint view instead
+    return a.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[a.dtype.itemsize])
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    extra: Optional[Dict] = None) -> str:
+    """Atomically write `state` under <directory>/step_<k>.
+
+    `extra` (msgpack-serializable dict) rides along in the manifest —
+    e.g. a mechanism dispatch journal — and comes back via
+    load_manifest()['extra']."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = os.path.join(directory, f"_tmp_step_{step:08d}.{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     arrays = _flatten_with_paths(state)
-    np.savez(os.path.join(d, "arrays.npz"),
-             **{k.replace("/", "__SL__"): v for k, v in arrays.items()})
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k.replace("/", "__SL__"): _storage_view(v)
+                for k, v in arrays.items()})
     manifest = {"step": step,
                 "keys": list(arrays.keys()),
                 "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
                 "shapes": {k: list(v.shape) for k, v in arrays.items()}}
-    with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
+    if extra is not None:
+        manifest["extra"] = extra
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
-    return d
+    if os.path.isdir(final):
+        # overwrite in two renames: demote the old shard out of the
+        # step_ namespace first, so no moment exists where `final` is
+        # half-written — a crash in between leaves the old shard gone
+        # but the fully-written tmp shard on disk, never a torn one
+        trash = os.path.join(directory, f"_old_step_{step:08d}.{os.getpid()}")
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
+        os.rename(final, trash)
+        os.rename(tmp, final)
+        shutil.rmtree(trash)
+    else:
+        os.rename(tmp, final)
+    return final
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(n.split("_")[1]) for n in os.listdir(directory)
-             if n.startswith("step_")]
+    steps = []
+    for n in os.listdir(directory):
+        if not n.startswith("step_"):
+            continue        # skips _tmp_step_* / _old_step_* leftovers
+        try:
+            steps.append(int(n.split("_")[1]))
+        except ValueError:
+            continue        # stray non-checkpoint entry
     return max(steps) if steps else None
+
+
+def load_manifest(directory: str, step: int) -> Dict:
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
 
 
 def load_checkpoint(directory: str, step: int, like: Any) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated)."""
     d = os.path.join(directory, f"step_{step:08d}")
+    manifest = load_manifest(directory, step)
     data = np.load(os.path.join(d, "arrays.npz"))
     arrays = {k.replace("__SL__", "/"): data[k] for k in data.files}
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -63,6 +122,12 @@ def load_checkpoint(directory: str, step: int, like: Any) -> Any:
         if key not in arrays:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = arrays[key]
+        logical = manifest["dtypes"].get(key)
+        if logical is not None and logical != str(arr.dtype):
+            # stored as raw bits — view back through the logical dtype
+            # (ml_dtypes registers bf16/fp8 with numpy on import)
+            import ml_dtypes  # noqa: F401
+            arr = arr.view(np.dtype(logical))
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))

@@ -16,6 +16,10 @@ from repro.federation.deep import (AsyncDPConfig, AsyncDPState, TreeNoise,
                                    make_train_step)
 from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
                                      private_grad, resolve_interpret)
+from repro.federation.faults import (CORRUPT_PAYLOAD, DROP, NONFINITE_GRAD,
+                                     OK, STALE, FaultPlan, FaultPolicy,
+                                     FaultState, as_fault_codes,
+                                     bank_checksums, init_fault_state)
 from repro.federation.flatten import (BankCodec, FlatSpec, ParamFlat,
                                       QuantBank, as_bank_codec,
                                       flatten_spec, init_flat_bank,

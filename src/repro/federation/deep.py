@@ -65,9 +65,11 @@ from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.federation import faults as _faults
 from repro.federation.config import paper_rates
 from repro.federation.dp_sgd import (PrivatizerConfig, _group_batch,
                                      private_grad, resolve_interpret)
+from repro.federation.faults import FaultPolicy, FaultState, init_fault_state
 from repro.federation.flatten import (FlatSpec, ParamFlat, QuantBank,
                                       init_flat_bank, pack_params)
 from repro.federation.privacy import DeviceLedger, make_device_ledger
@@ -95,6 +97,12 @@ class AsyncDPConfig:
     # R = min(cap, 2^d - 1). d = 0 is the degenerate tree: bit-for-bit
     # the paper mechanism (parity contract, exercised by tests).
     tree_depth: Optional[int] = None
+    # Fault tolerance (see repro.federation.faults): None = the fault
+    # layer is OFF and every driver traces the PR-7 program verbatim;
+    # a FaultPolicy arms the in-graph guards (payload checksums,
+    # non-finite detection, stale rejection) and quarantine windows,
+    # and the state gains a FaultState (AsyncDPState.faults).
+    fault_policy: Optional[FaultPolicy] = None
 
     @property
     def n_total(self) -> int:
@@ -118,6 +126,10 @@ class AsyncDPState(NamedTuple):
     # Device-resident DP-FTRL noise trees (TreeNoise) when
     # cfg.tree_depth is set; None for the independent-noise mechanisms.
     tree: Optional[Any] = None
+    # Device-resident fault-layer arrays (faults.FaultState) when
+    # cfg.fault_policy is set: per-owner bank-row checksums, fault
+    # windows, quarantine flags. None = fault layer off.
+    faults: Optional[FaultState] = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -194,9 +206,11 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
     bank = jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf[None], (cfg.n_owners,) + leaf.shape), params)
+    faults = (None if cfg.fault_policy is None
+              else init_fault_state(bank, cfg.n_owners))
     return AsyncDPState(params, bank, jnp.zeros((), jnp.int32),
                         make_device_ledger(cfg.effective_caps),
-                        init_tree_noise(cfg, params))
+                        init_tree_noise(cfg, params), faults)
 
 
 def init_state_flat(params, cfg: AsyncDPConfig,
@@ -251,7 +265,14 @@ def init_state_flat(params, cfg: AsyncDPConfig,
             tree = TreeNoise(jax.device_put(tree.nodes, sh.tree_nodes),
                              jax.device_put(tree.counts, sh.ledger),
                              tree.depth)
-    return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger, tree)
+    faults = (None if cfg.fault_policy is None
+              else init_fault_state(bank, cfg.n_owners))
+    if faults is not None and mesh is not None:
+        from repro.sharding.rules import flat_shardings
+        sh = flat_shardings(mesh, cfg.n_owners, flat.size)
+        faults = jax.device_put(faults, sh.faults)
+    return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger, tree,
+                        faults)
 
 
 def _flat_shardings_for(mesh, theta_L, bank):
@@ -730,6 +751,78 @@ def _write_bank(bank, value, owner_idx):
         bank, value)
 
 
+def _require_fault_policy(cfg: AsyncDPConfig, state: AsyncDPState):
+    """Trace-time consistency check between the config's fault policy and
+    the state's FaultState (both present or both absent)."""
+    if state.faults is not None and cfg.fault_policy is None:
+        raise ValueError(
+            "the state carries fault counters but cfg.fault_policy is "
+            "None; build the driver and the state from the same config")
+    return cfg.fault_policy
+
+
+def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
+                   batch, owner_idx, key, fcode, answered, sh):
+    """One fault-guarded round, shared by the per-round step and the
+    fused scan (scalar `owner_idx`/`fcode`).
+
+    `answered` is the caller's grant bit (ledger-authorized, not
+    quarantined, not dropped). The guards verify the owner's resident
+    payload against its stored checksum, NaN-poison the update when the
+    round carries NONFINITE_GRAD, and reject stale replays; a rejected
+    round is a bit-exact no-op on theta/bank/tree (same jnp.where
+    masking as ledger refusal) and its rejection bit comes back as
+    `metrics["faulted"]` — epsilon for it was already charged at
+    response time (see faults module docstring).
+
+    Returns (theta_L, bank, tree, faults, metrics, apply, guard_rej).
+    """
+    fs = state.faults
+    tr = state.tree
+    row, cnt = (None, None) if tr is None else _tree_row_of(tr, owner_idx)
+    # payload integrity is judged on the PRE-ROUND bank (what the round
+    # actually consumed), before any write
+    payload_ok = _faults.verify_row(fs.checksum, state.bank, owner_idx,
+                                    fcode == _faults.CORRUPT_PAYLOAD)
+    new_L, new_i, theta_i, metrics, new_row = compute(
+        state.theta_L, state.bank, batch, owner_idx, key,
+        tree_row=row, tree_count=cnt)
+    new_i = _faults.inject_nonfinite(new_i, fcode == _faults.NONFINITE_GRAD)
+    guard_ok = (payload_ok & _faults.finite_guard((new_i, new_L))
+                & (fcode != _faults.STALE))
+    apply = answered & guard_ok
+    guard_rej = answered & ~guard_ok
+    theta_L = jax.tree_util.tree_map(
+        lambda nl, ol: jnp.where(apply, nl, ol), new_L, state.theta_L)
+    if isinstance(state.bank, QuantBank):
+        # same key as compute() by contract: _quant_write folds in
+        # _CODEC_SALT, so SR bits never touch the privacy stream
+        bank = _quant_write(state.bank, new_i, owner_idx, key,  # dpcheck: ignore[DPC105]
+                            cfg.privatizer, ok=apply)
+    else:
+        bank = _write_bank(
+            state.bank,
+            jax.tree_util.tree_map(lambda a, b: jnp.where(apply, a, b),
+                                   new_i, theta_i),
+            owner_idx)
+    if tr is not None:
+        masked_row = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(apply, a, b), new_row, row)
+        tr = _tree_write(tr, masked_row, owner_idx,
+                         grant=apply.astype(jnp.int32))
+    if sh is not None:
+        theta_L = _constrain(theta_L, sh.theta)
+        bank = _constrain_bank(bank, sh)
+        tr = _constrain_tree(tr, sh)
+    # re-derive the stored checksum from the POST-WRITE row; masked
+    # rounds drop the scatter, so the stored sum stays in lockstep with
+    # the row it describes
+    fs = _faults.update_checksum(fs, bank, owner_idx, apply)
+    metrics = dict(metrics)
+    metrics.update(faulted=guard_rej)
+    return theta_L, bank, tr, fs, metrics, apply, guard_rej
+
+
 def make_train_step(loss_fn, cfg: AsyncDPConfig,
                     scales: Optional[jax.Array] = None, mesh=None):
     """Returns step(state, batch, owner_idx, key) -> (state, metrics).
@@ -747,10 +840,29 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
     """
     compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
 
-    def step(state: AsyncDPState, batch, owner_idx: jax.Array, key
-             ) -> Tuple[AsyncDPState, Dict]:
+    def step(state: AsyncDPState, batch, owner_idx: jax.Array, key,
+             fault_code=None) -> Tuple[AsyncDPState, Dict]:
         tr = _require_tree(cfg, state)
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        if state.faults is not None:
+            # fault-armed state: host-side the session has already
+            # handled DROP and quarantine (neither reaches the step), so
+            # the round is answered and only the in-graph guards decide
+            policy = _require_fault_policy(cfg, state)
+            fcode = (jnp.int8(_faults.OK) if fault_code is None
+                     else jnp.asarray(fault_code, jnp.int8))
+            theta_L, bank, tr, fs, metrics, apply, guard_rej = \
+                _guarded_round(compute, cfg, state, batch, owner_idx, key,
+                               fcode, jnp.bool_(True), sh)
+            fs = _faults.fault_tick(fs, owner_idx, guard_rej, policy,
+                                    active=jnp.bool_(True))
+            return AsyncDPState(theta_L, bank,
+                                state.step + apply.astype(jnp.int32),
+                                state.ledger, tr, fs), metrics
+        if fault_code is not None:
+            raise ValueError(
+                "fault injection needs a fault-armed state; build the "
+                "config with fault_policy=FaultPolicy(...)")
         row, cnt = (None, None) if tr is None else _tree_row_of(tr,
                                                                 owner_idx)
         new_L, new_i, _, metrics, new_row = compute(
@@ -772,7 +884,7 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
             bank = _constrain_bank(bank, sh)
             tr = _constrain_tree(tr, sh)
         return AsyncDPState(new_L, bank, state.step + 1,
-                            state.ledger, tr), metrics
+                            state.ledger, tr, state.faults), metrics
 
     return step
 
@@ -847,15 +959,65 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owner_idx)
         return AsyncDPState(theta_L, bank, state.step + oki, ledger,
-                            tr), metrics
+                            tr, state.faults), metrics
 
-    def run(state: AsyncDPState, batches, owner_seq, keys):
+    def body_faulted(state: AsyncDPState, xs):
+        # fault-armed scan round: same algebra as the per-round step's
+        # faulted branch, with ledger authorization and quarantine
+        # resolved in-graph. Epsilon is charged at response time: spent
+        # counts every ANSWERED round (guard-rejected ones included),
+        # a DROP before the answer spends nothing (ledger.dropped), and
+        # quarantined rounds are masked without refusal accounting
+        # (ledger.quarantined).
+        batch, owner_idx, key, fcode = xs
+        led = state.ledger
+        fs = state.faults
+        policy = cfg.fault_policy
+        sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        quar = fs.quarantined[owner_idx]
+        led_auth = led.authorized(owner_idx)
+        auth = led_auth & ~quar
+        is_drop = fcode == _faults.DROP
+        answered = auth & ~is_drop
+        theta_L, bank, tr, fs, metrics, apply, guard_rej = _guarded_round(
+            compute, cfg, state, batch, owner_idx, key, fcode, answered, sh)
+        ledger = led.replace(
+            spent=led.spent.at[owner_idx].add(answered.astype(jnp.int32)),
+            refused=led.refused.at[owner_idx].add(
+                (~quar & ~led_auth).astype(jnp.int32)),
+            dropped=led.dropped.at[owner_idx].add(
+                (auth & is_drop).astype(jnp.int32)),
+            faulted=led.faulted.at[owner_idx].add(
+                guard_rej.astype(jnp.int32)),
+            quarantined=led.quarantined.at[owner_idx].add(
+                quar.astype(jnp.int32)))
+        fs = _faults.fault_tick(fs, owner_idx, guard_rej | (auth & is_drop),
+                                policy, active=~quar)
+        metrics.update(refused=~quar & ~led_auth, dropped=auth & is_drop,
+                       quarantined=quar, owner=owner_idx)
+        return AsyncDPState(theta_L, bank,
+                            state.step + apply.astype(jnp.int32),
+                            ledger, tr, fs), metrics
+
+    def run(state: AsyncDPState, batches, owner_seq, keys,
+            fault_codes=None):
         if state.ledger is None:
             raise ValueError(
                 "fused rounds need a device ledger on the state; build the "
                 "state with init_state / Federation.init_state")
         _require_tree(cfg, state)
-        return jax.lax.scan(body, state, (batches, owner_seq, keys),
+        if state.faults is None:
+            if fault_codes is not None:
+                raise ValueError(
+                    "fault codes need a fault-armed state; build the "
+                    "config with fault_policy=FaultPolicy(...)")
+            return jax.lax.scan(body, state, (batches, owner_seq, keys),
+                                unroll=unroll)
+        _require_fault_policy(cfg, state)
+        if fault_codes is None:
+            fault_codes = jnp.zeros(owner_seq.shape, jnp.int8)
+        return jax.lax.scan(body_faulted, state,
+                            (batches, owner_seq, keys, fault_codes),
                             unroll=unroll)
 
     return run
@@ -947,26 +1109,25 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         n_ok = jnp.sum(ok.astype(jnp.float32))
         denom = jnp.maximum(n_ok, 1.0)
         if isinstance(bank, QuantBank):
-            # error feedback under member-parallelism: the shared residual
-            # is split equally among the granted members before encoding
-            # (injected mass == one residual row, as sequentially) and the
-            # new residual is the sum of the granted members' fresh
-            # errors; a fully-refused group leaves it untouched
-            okf = ok.astype(jnp.float32)
-            inject = bank.residual[None] * (okf / denom)[:, None]
-            codes_n, scales_n, errs = jax.vmap(
-                lambda v, k: _encode_bank_row(bank, v, k,
-                                              cfg.privatizer))(
-                    new_i + inject, keys_g)
+            # error feedback under member-parallelism: members chain the
+            # shared residual IN ROUND ORDER (groups are consecutive runs
+            # of the schedule), exactly as the fused scan would — encode
+            # every member against the carried residual, advance the
+            # carry only on a grant. Bit-identical to the sequential
+            # driver; a fully-refused group leaves the residual untouched.
+            def _ef_chain(res, inp):
+                v, k, grant = inp
+                c_n, s_n, err = _encode_bank_row(bank, v + res, k,
+                                                 cfg.privatizer)
+                return jnp.where(grant, err, res), (c_n, s_n)
+
+            residual, (codes_n, scales_n) = jax.lax.scan(
+                _ef_chain, bank.residual, (new_i, keys_g, ok))
             owners_c = jnp.where(valid, owners, 0)             # safe gather
             codes_w = jnp.where(_member_mask(ok, codes_n), codes_n,
                                 bank.codes[owners_c])
             scales_w = jnp.where(ok[:, None], scales_n,
                                  bank.scales[owners_c])
-            residual = jnp.where(
-                n_ok > 0,
-                jnp.sum(errs * _member_mask(okf, errs), axis=0),
-                bank.residual)
             bank = QuantBank(
                 bank.codes.at[owners_w].set(codes_w, mode="drop"),
                 bank.scales.at[owners_w].set(scales_w, mode="drop"),
@@ -1009,20 +1170,148 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owners)
         return AsyncDPState(theta_L, bank, state.step + jnp.sum(oki),
-                            ledger, tr), metrics
+                            ledger, tr, state.faults), metrics
+
+    def body_faulted(state: AsyncDPState, xs):
+        # fault-armed group: the per-member grant algebra of the fused
+        # driver's faulted body, vectorized over the group members.
+        # Distinct owners per group (the partition's invariant) keep the
+        # per-owner gathers (quarantine flags, checksums, windows) and
+        # every scatter disjoint, and the tumbling windows key on each
+        # owner's own contact count, so grouping never moves a window
+        # boundary.
+        batch_g, owners, keys_g, valid, fcodes_g = xs
+        led = state.ledger
+        fs = state.faults
+        policy = cfg.fault_policy
+        tr = state.tree
+        sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        theta_L, bank = state.theta_L, state.bank
+        led_auth = jax.vmap(led.authorized)(owners)
+        quar = fs.quarantined[owners]
+        auth = led_auth & ~quar & valid                        # (G,)
+        is_drop = fcodes_g == _faults.DROP
+        answered = auth & ~is_drop
+        payload_ok = jax.vmap(
+            lambda o, c: _faults.verify_row(fs.checksum, bank, o, c))(
+            owners, fcodes_g == _faults.CORRUPT_PAYLOAD)
+
+        if tr is not None:
+            rows_t, cnts = jax.vmap(lambda o: _tree_row_of(tr, o))(owners)
+            new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                lambda b, o, k, r, c: compute(theta_L, bank, b, o, k,
+                                              tree_row=r, tree_count=c))(
+                    batch_g, owners, keys_g, rows_t, cnts)
+        else:
+            new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                lambda b, o, k: compute(theta_L, bank, b, o, k))(
+                    batch_g, owners, keys_g)
+        new_i = _faults.inject_nonfinite(
+            new_i, fcodes_g == _faults.NONFINITE_GRAD)
+        finite = jax.vmap(_faults.finite_guard)((new_i, new_L))
+        guard_ok = payload_ok & finite & (fcodes_g != _faults.STALE)
+        apply = answered & guard_ok
+        guard_rej = answered & ~guard_ok
+
+        owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
+        n_ok = jnp.sum(apply.astype(jnp.float32))
+        denom = jnp.maximum(n_ok, 1.0)
+        if isinstance(bank, QuantBank):
+            # same residual chain as the plain body; a NaN-poisoned
+            # member never advances the carry (its `apply` is False by
+            # the finite guard), so poison cannot leak into the shared
+            # residual
+            def _ef_chain(res, inp):
+                v, k, grant = inp
+                c_n, s_n, err = _encode_bank_row(bank, v + res, k,
+                                                 cfg.privatizer)
+                return jnp.where(grant, err, res), (c_n, s_n)
+
+            residual, (codes_n, scales_n) = jax.lax.scan(
+                _ef_chain, bank.residual, (new_i, keys_g, apply))
+            owners_c = jnp.where(valid, owners, 0)             # safe gather
+            codes_w = jnp.where(_member_mask(apply, codes_n), codes_n,
+                                bank.codes[owners_c])
+            scales_w = jnp.where(apply[:, None], scales_n,
+                                 bank.scales[owners_c])
+            bank = QuantBank(
+                bank.codes.at[owners_w].set(codes_w, mode="drop"),
+                bank.scales.at[owners_w].set(scales_w, mode="drop"),
+                residual, bank.codec)
+        else:
+            rows = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(_member_mask(apply, a), a, b),
+                new_i, theta_i)
+            bank = _write_bank_rows(bank, rows, owners_w)
+
+        if tr is not None:
+            rows_m = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(_member_mask(apply, a), a, b),
+                new_rows, rows_t)
+            nodes = jax.tree_util.tree_map(
+                lambda leaf, v: leaf.at[owners_w].set(v, mode="drop"),
+                tr.nodes, rows_m)
+            tr = tr.replace(nodes=nodes,
+                            counts=tr.counts.at[owners_w].add(
+                                apply.astype(jnp.int32), mode="drop"))
+
+        def reduce_theta(stacked, base):
+            s = jnp.sum(jnp.where(_member_mask(apply, stacked), stacked,
+                                  jnp.zeros_like(stacked)), axis=0) / denom
+            return jnp.where(n_ok > 0, s.astype(base.dtype), base)
+
+        theta_L = jax.tree_util.tree_map(reduce_theta, new_L, theta_L)
+        if sh is not None:
+            theta_L = _constrain(theta_L, sh.theta)
+            bank = _constrain_bank(bank, sh)
+            tr = _constrain_tree(tr, sh)
+        fs = _faults.update_checksum(fs, bank, owners, apply)
+        ledger = led.replace(
+            spent=led.spent.at[owners_w].add(
+                answered.astype(jnp.int32), mode="drop"),
+            refused=led.refused.at[owners_w].add(
+                (valid & ~quar & ~led_auth).astype(jnp.int32), mode="drop"),
+            dropped=led.dropped.at[owners_w].add(
+                (auth & is_drop).astype(jnp.int32), mode="drop"),
+            faulted=led.faulted.at[owners_w].add(
+                guard_rej.astype(jnp.int32), mode="drop"),
+            quarantined=led.quarantined.at[owners_w].add(
+                (valid & quar).astype(jnp.int32), mode="drop"))
+        fs = _faults.fault_tick(fs, owners, guard_rej | (auth & is_drop),
+                                policy, active=valid & ~quar)
+        metrics = dict(metrics)
+        metrics.update(refused=valid & ~quar & ~led_auth,
+                       dropped=auth & is_drop, faulted=guard_rej,
+                       quarantined=valid & quar, owner=owners)
+        return AsyncDPState(theta_L, bank,
+                            state.step + jnp.sum(apply.astype(jnp.int32)),
+                            ledger, tr, fs), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys, group_idx,
-            group_valid, n_groups=None):
+            group_valid, n_groups=None, fault_codes=None):
         if state.ledger is None:
             raise ValueError(
                 "grouped rounds need a device ledger on the state; build "
                 "the state with init_state / Federation.init_state")
         _require_tree(cfg, state)
+        if state.faults is None:
+            if fault_codes is not None:
+                raise ValueError(
+                    "fault codes need a fault-armed state; build the "
+                    "config with fault_policy=FaultPolicy(...)")
+            b = body
+            extra = ()
+        else:
+            _require_fault_policy(cfg, state)
+            if fault_codes is None:
+                fault_codes = jnp.zeros(owner_seq.shape, jnp.int8)
+            b = body_faulted
+            extra = (fault_codes[group_idx],)
         xs = (jax.tree_util.tree_map(lambda a: a[group_idx], batches),
-              owner_seq[group_idx], keys[group_idx], group_valid)
+              owner_seq[group_idx], keys[group_idx], group_valid) + extra
         rows = group_idx.shape[0]
         if rows == 0:
-            return jax.lax.scan(body, state, xs)       # empty dispatch
+            return jax.lax.scan(b, state, xs)          # empty dispatch
         if n_groups is None:
             n_groups = rows
         # dynamic trip count: the group axis is padded to a shape bucket
@@ -1030,7 +1319,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         # land in pre-allocated group-major buffers via one-row updates,
         # the padded rows stay zero (and masked-out downstream)
         m_shape = jax.eval_shape(
-            lambda s, x: body(s, x)[1], state,
+            lambda s, x: b(s, x)[1], state,
             jax.tree_util.tree_map(lambda a: a[0], xs))
         mets0 = jax.tree_util.tree_map(
             lambda sd: jnp.zeros((rows,) + sd.shape, sd.dtype), m_shape)
@@ -1040,7 +1329,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             xg = jax.tree_util.tree_map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, g, 0,
                                                        keepdims=False), xs)
-            st, m = body(st, xg)
+            st, m = b(st, xg)
             mets = jax.tree_util.tree_map(
                 lambda buf, v: jax.lax.dynamic_update_index_in_dim(
                     buf, v, g, 0), mets, m)

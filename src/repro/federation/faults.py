@@ -1,0 +1,323 @@
+"""In-graph fault layer: injection, guards, checksums, quarantine.
+
+The paper's owners are *intermittently available*; real deployments add
+failure modes on top of mere absence — dropped contacts, stale replays,
+non-finite gradients, corrupted payloads (Li et al. 1912.07902). This
+module gives the engine a deterministic, in-graph model of those faults
+so every driver (per-round step, fused scan, grouped vmap) experiences
+an IDENTICAL fault sequence under fixed keys, and the DP accounting
+stays exact *through* faults:
+
+  * ``FaultPlan`` draws one int8 fault code per round from a dedicated
+    key stream (``fold_in(key, FAULT_SALT)`` — disjoint from the round
+    keys by construction), or a precomputed trace replays via
+    :func:`as_fault_codes`.
+  * ``FaultState`` rides inside ``AsyncDPState``: a per-owner int32
+    checksum column next to the bank (payload integrity), tumbling
+    fault-window counters, and a quarantine flag. All updates are
+    where-masked scatters — a faulted round is a bit-exact no-op on the
+    bank, scales, EF residual and tree nodes.
+  * epsilon is charged **at response time**: a DROP (owner never
+    answered) spends nothing; a round that answered and was then
+    rejected by the guards (non-finite update, checksum mismatch, stale
+    replay) HAS spent its budget — the noisy query left the owner. The
+    ``DeviceLedger`` records the distinction in its ``dropped`` /
+    ``faulted`` columns.
+  * owners exceeding ``FaultPolicy.max_faults`` fault events within a
+    ``window``-contact tumbling window are quarantined in-graph:
+    subsequent rounds are masked no-ops charged to the ``quarantined``
+    ledger column (no epsilon, no refusal).
+
+Checksums are exact int32 bit-sums (wraparound addition is associative
+and commutative, so grouped/vmapped verification is reduction-order
+free). Corruption injection never touches the payload — it offsets the
+*observed* checksum by a fixed nonzero delta, so detection is
+guaranteed rather than probabilistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation.flatten import QuantBank
+
+# Per-round fault codes (int8 in traced code, plain ints here so host
+# and device comparisons both work).
+OK = 0                  # healthy round
+DROP = 1                # owner unreachable: query never answered, no eps
+STALE = 2               # owner answered with a stale/replayed update
+NONFINITE_GRAD = 3      # owner answered with a non-finite update
+CORRUPT_PAYLOAD = 4     # owner's resident bank row arrived corrupted
+
+FAULT_CODES = (OK, DROP, STALE, NONFINITE_GRAD, CORRUPT_PAYLOAD)
+
+# Dedicated fold_in stream for fault draws — disjoint from round keys
+# (raw split) and codec bits (_CODEC_SALT) by construction.
+FAULT_SALT = 0x4654     # "FT"
+
+# Fixed nonzero offset added to the OBSERVED row checksum when a round
+# carries CORRUPT_PAYLOAD: obs != stored always holds (delta != 0 mod
+# 2^32), so corruption detection is exact, and the payload itself is
+# never modified.
+CORRUPT_CSUM_DELTA = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-round fault rates; drawn once per dispatch from a salted key.
+
+    Rates are bucket probabilities over [0, 1): a single uniform per
+    round selects DROP / STALE / NONFINITE_GRAD / CORRUPT_PAYLOAD /
+    OK by cumulative thresholds, so the draw is one op and the code
+    stream is identical across drivers under the same key.
+    """
+
+    drop: float = 0.0
+    stale: float = 0.0
+    nonfinite: float = 0.0
+    corrupt: float = 0.0
+
+    def __post_init__(self):
+        rates = (self.drop, self.stale, self.nonfinite, self.corrupt)
+        if any(r < 0.0 for r in rates):
+            raise ValueError(f"fault rates must be >= 0, got {rates}")
+        if sum(rates) > 1.0:
+            raise ValueError(
+                f"fault rates sum to {sum(rates)} > 1; they are bucket "
+                "probabilities over a single per-round uniform")
+
+    def draw(self, key, k: int):
+        """(k,) int8 fault codes from the dedicated FAULT_SALT stream."""
+        u = jax.random.uniform(jax.random.fold_in(key, FAULT_SALT), (k,))
+        t1 = self.drop
+        t2 = t1 + self.stale
+        t3 = t2 + self.nonfinite
+        t4 = t3 + self.corrupt
+        return jnp.where(
+            u < t1, DROP,
+            jnp.where(u < t2, STALE,
+                      jnp.where(u < t3, NONFINITE_GRAD,
+                                jnp.where(u < t4, CORRUPT_PAYLOAD,
+                                          OK)))).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Quarantine policy: > ``max_faults - 1`` fault events within one
+    ``window``-contact tumbling window quarantines the owner (masked
+    no-ops from then on; permanent for the session)."""
+
+    max_faults: int = 3
+    window: int = 16
+
+    def __post_init__(self):
+        if self.max_faults < 1:
+            raise ValueError(f"max_faults must be >= 1, got {self.max_faults}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+
+
+class FaultState(NamedTuple):
+    """Per-owner fault-layer arrays carried inside ``AsyncDPState``.
+
+    ``checksum``    (N,) int32  bit-sum of each owner's resident bank row
+    ``win_faults``  (N,) int32  fault events in the current window
+    ``contacts``    (N,) int32  contacts while not quarantined (windows
+                                tumble per-owner on this counter, which
+                                keeps grouped execution order-free)
+    ``quarantined`` (N,) bool   masked out of every subsequent round
+    """
+
+    checksum: jax.Array
+    win_faults: jax.Array
+    contacts: jax.Array
+    quarantined: jax.Array
+
+
+def _is_float_dtype(dt) -> bool:
+    """Static float-dtype check covering the ml_dtypes extensions
+    (bf16/fp8 register with numpy as kind 'V', not 'f')."""
+    dt = np.dtype(dt)
+    return dt.kind == "f" or dt.name.startswith(("bfloat16", "float8"))
+
+
+def _bits32(leaf) -> jax.Array:
+    """Exact int32 view of a buffer's bits (f32/bf16/f16/fp8/int8/...).
+
+    Sub-4-byte dtypes widen through their unsigned bit pattern so every
+    payload bit lands in the sum; int32 wraparound addition is exact,
+    associative and commutative, so any reduction order agrees.
+    """
+    dt = np.dtype(leaf.dtype)
+    if dt == np.float32:
+        return jax.lax.bitcast_convert_type(leaf, jnp.int32)
+    if dt.itemsize == 2:
+        return jax.lax.bitcast_convert_type(leaf, jnp.uint16).astype(jnp.int32)
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(leaf, jnp.uint8).astype(jnp.int32)
+    return leaf.astype(jnp.int32)
+
+
+def row_checksum(bank, owner_idx) -> jax.Array:
+    """() int32 checksum of one owner's resident row.
+
+    Covers QuantBank codes + per-block scales (the shared EF residual is
+    owned by no one and excluded), a flat (N, P) row, or every leaf row
+    of a pytree bank. vmap-safe: index with dynamic_index_in_dim.
+    """
+    if isinstance(bank, QuantBank):
+        c = jax.lax.dynamic_index_in_dim(bank.codes, owner_idx, 0,
+                                         keepdims=False)
+        s = jax.lax.dynamic_index_in_dim(bank.scales, owner_idx, 0,
+                                         keepdims=False)
+        return (jnp.sum(_bits32(c), dtype=jnp.int32)
+                + jnp.sum(_bits32(s), dtype=jnp.int32))
+    if isinstance(bank, jax.Array):
+        row = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0, keepdims=False)
+        return jnp.sum(_bits32(row), dtype=jnp.int32)
+    tot = jnp.int32(0)
+    for leaf in jax.tree_util.tree_leaves(bank):
+        row = jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0, keepdims=False)
+        tot = tot + jnp.sum(_bits32(row), dtype=jnp.int32)
+    return tot
+
+
+def bank_checksums(bank) -> jax.Array:
+    """(N,) int32 checksums for every owner row (init / audit)."""
+    if isinstance(bank, QuantBank):
+        n = bank.n_owners
+    elif isinstance(bank, jax.Array):
+        n = bank.shape[0]
+    else:
+        n = jax.tree_util.tree_leaves(bank)[0].shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return jax.vmap(lambda i: row_checksum(bank, i))(idx)
+
+
+def init_fault_state(bank, n_owners: int) -> FaultState:
+    # distinct zero buffers per field — donated states may not alias leaves
+    return FaultState(
+        checksum=bank_checksums(bank),
+        win_faults=jnp.zeros((n_owners,), jnp.int32),
+        contacts=jnp.zeros((n_owners,), jnp.int32),
+        quarantined=jnp.zeros((n_owners,), jnp.bool_))
+
+
+def verify_row(checksum, bank, owner_idx, corrupt) -> jax.Array:
+    """bool: does the owner's resident row match its stored checksum?
+
+    ``corrupt`` (CORRUPT_PAYLOAD this round) offsets the *observed* sum
+    by a fixed nonzero delta — detection is guaranteed and the payload
+    is untouched, so a masked-out round stays bit-exact.
+    """
+    obs = row_checksum(bank, owner_idx) + jnp.where(
+        corrupt, jnp.int32(CORRUPT_CSUM_DELTA), jnp.int32(0))
+    return obs == checksum[owner_idx]
+
+
+def inject_nonfinite(tree, flag):
+    """NaN-poison float leaves where ``flag`` is set (bit-identity off).
+
+    ``flag`` is scalar (per-round drivers) or (G,) (grouped members);
+    it broadcasts against each leaf's leading axes.
+    """
+    def poison(leaf):
+        if not _is_float_dtype(leaf.dtype):
+            return leaf
+        fl = flag
+        if np.ndim(fl):
+            fl = jnp.reshape(fl, np.shape(fl)
+                             + (1,) * (np.ndim(leaf) - np.ndim(fl)))
+        return jnp.where(fl, jnp.asarray(jnp.nan, leaf.dtype), leaf)
+    return jax.tree_util.tree_map(poison, tree)
+
+
+def finite_guard(tree) -> jax.Array:
+    """bool: every float leaf of ``tree`` is fully finite."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if _is_float_dtype(leaf.dtype):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def update_checksum(fs: FaultState, bank, owner_idx, apply) -> FaultState:
+    """Re-derive the stored checksum from the POST-WRITE bank row.
+
+    Scatter-dropped where ``apply`` is False, so a masked round leaves
+    the stored checksum (and therefore future verification) untouched.
+    Handles a scalar owner (step / fused) or a (G,) group (vmapped
+    members; owners within a group are distinct, so scatters are
+    disjoint).
+    """
+    n = fs.checksum.shape[0]
+    if np.ndim(owner_idx) == 0:
+        new = row_checksum(bank, owner_idx)
+    else:
+        new = jax.vmap(lambda o: row_checksum(bank, o))(owner_idx)
+    idx = jnp.where(apply, owner_idx, n)
+    return fs._replace(checksum=fs.checksum.at[idx].set(new, mode="drop"))
+
+
+def fault_tick(fs: FaultState, owner_idx, faulted, policy: FaultPolicy,
+               active) -> FaultState:
+    """Advance the per-owner fault window after a contact.
+
+    ``active`` gates the whole tick (quarantined owners and padded group
+    slots tick nothing — their window state freezes, which makes the
+    quarantine permanent). Windows tumble on each owner's own contact
+    count, so grouped execution produces the same window boundaries as
+    the sequential drivers. Works for a scalar owner or a (G,) group of
+    distinct owners.
+    """
+    n = fs.checksum.shape[0]
+    w = jnp.int32(policy.window)
+    base = jnp.where(fs.contacts[owner_idx] % w == 0,
+                     jnp.int32(0), fs.win_faults[owner_idx])
+    wf = base + jnp.asarray(faulted, jnp.bool_).astype(jnp.int32)
+    idx = jnp.where(active, owner_idx, n)
+    return FaultState(
+        checksum=fs.checksum,
+        win_faults=fs.win_faults.at[idx].set(wf, mode="drop"),
+        contacts=fs.contacts.at[idx].add(1, mode="drop"),
+        quarantined=fs.quarantined.at[idx].set(
+            wf >= policy.max_faults, mode="drop"))
+
+
+def as_fault_codes(codes, k: Optional[int] = None) -> jax.Array:
+    """Validate + coerce an explicit per-round fault-code trace.
+
+    Host-side bounds check (skipped for tracers, mirroring
+    ``as_owner_seq``): every code must be one of FAULT_CODES, and the
+    length must match the dispatch when ``k`` is given.
+    """
+    codes = jnp.asarray(codes)
+    if codes.ndim != 1:
+        raise ValueError(f"fault codes must be 1-D, got shape {codes.shape}")
+    if not jnp.issubdtype(codes.dtype, jnp.integer):
+        raise ValueError(f"fault codes must be integer, got {codes.dtype}")
+    if k is not None and codes.shape[0] != k:
+        raise ValueError(
+            f"{codes.shape[0]} fault codes for a {k}-round dispatch")
+    if isinstance(codes, jax.core.Tracer):
+        return codes.astype(jnp.int8)
+    arr = jax.device_get(codes)
+    if arr.size and (arr.min() < OK or arr.max() > CORRUPT_PAYLOAD):
+        raise ValueError(
+            f"fault codes must lie in {FAULT_CODES}, got range "
+            f"[{arr.min()}, {arr.max()}]")
+    return codes.astype(jnp.int8)
+
+
+__all__ = [
+    "OK", "DROP", "STALE", "NONFINITE_GRAD", "CORRUPT_PAYLOAD",
+    "FAULT_CODES", "FAULT_SALT", "CORRUPT_CSUM_DELTA",
+    "FaultPlan", "FaultPolicy", "FaultState",
+    "init_fault_state", "bank_checksums", "row_checksum", "verify_row",
+    "inject_nonfinite", "finite_guard", "update_checksum", "fault_tick",
+    "as_fault_codes",
+]

@@ -110,11 +110,22 @@ class _LedgeredMechanism:
             composition=composition, cap_slack=cap_slack,
             n_owners=len(self.owners), tree_depth=tree_depth)
         self.refusals = {i: 0 for i in range(len(self.owners))}
+        # Fault-outcome tallies (PR 8). None of these touch the
+        # accountant: `dropped` and `quarantined` rounds never produced a
+        # response (no epsilon), and `faulted` rounds are already inside
+        # the `spent` count (epsilon is charged at response time — see
+        # DeviceLedger's docstring).
+        self.dropped_rounds = {i: 0 for i in range(len(self.owners))}
+        self.faulted_rounds = {i: 0 for i in range(len(self.owners))}
+        self.quarantined_rounds = {i: 0 for i in range(len(self.owners))}
         # Device-ledger counters already folded back by reconcile() —
         # deltas against these make reconcile idempotent over chunked
         # run_rounds()/reconcile() cycles.
         self._folded_spent = {i: 0 for i in range(len(self.owners))}
         self._folded_refused = {i: 0 for i in range(len(self.owners))}
+        self._folded_dropped = {i: 0 for i in range(len(self.owners))}
+        self._folded_faulted = {i: 0 for i in range(len(self.owners))}
+        self._folded_quarantined = {i: 0 for i in range(len(self.owners))}
         self._snapshot_sid = 0       # generation of the live device ledger
 
     @property
@@ -143,6 +154,26 @@ class _LedgeredMechanism:
             self.refusals[int(owner_idx)] += 1
         return ok
 
+    def exhausted(self, owner_idx: int) -> bool:
+        """Peek: is the owner's budget spent? (No refusal is recorded —
+        use authorize() to actually charge or refuse a round.)"""
+        return self._accountant.ledgers[int(owner_idx)].exhausted
+
+    def record_dropped(self, owner_idx: int) -> None:
+        """Tally a round lost BEFORE the owner answered (no epsilon)."""
+        self.dropped_rounds[int(owner_idx)] += 1
+
+    def record_faulted(self, owner_idx: int) -> None:
+        """Tally an answered-then-rejected round. The epsilon was already
+        charged by authorize() — this only records that the spend bought
+        no progress."""
+        self.faulted_rounds[int(owner_idx)] += 1
+
+    def record_quarantined(self, owner_idx: int) -> None:
+        """Tally a round masked because the owner was quarantined (no
+        answer, no epsilon, no refusal)."""
+        self.quarantined_rounds[int(owner_idx)] += 1
+
     def authorize_many(self, owner_idx: int, count: int) -> int:
         """Bulk-ledger `count` responses for one owner (order-free: how
         many are granted depends only on the cap, not the sequence)."""
@@ -153,8 +184,11 @@ class _LedgeredMechanism:
 
     def ledger(self) -> Dict[int, Dict]:
         summary = self._accountant.summary()
-        for i, r in self.refusals.items():
-            summary[i]["refused"] = r
+        for i in self.refusals:
+            summary[i]["refused"] = self.refusals[i]
+            summary[i]["dropped"] = self.dropped_rounds[i]
+            summary[i]["faulted"] = self.faulted_rounds[i]
+            summary[i]["quarantined"] = self.quarantined_rounds[i]
         return summary
 
     def device_ledger(self) -> DeviceLedger:
@@ -165,15 +199,24 @@ class _LedgeredMechanism:
         snapshot's state chain may reconcile — a superseded state raises
         instead of folding divergent counters against this baseline."""
         self._snapshot_sid += 1
+        n = len(self.owners)
+
+        def col(d):
+            return jnp.asarray([d[i] for i in range(n)], jnp.int32)
+
         led = self._accountant.device_ledger()
         led = led.replace(
-            refused=jnp.asarray([self.refusals[i]
-                                 for i in range(len(self.owners))],
-                                jnp.int32),
+            refused=col(self.refusals),
+            dropped=col(self.dropped_rounds),
+            faulted=col(self.faulted_rounds),
+            quarantined=col(self.quarantined_rounds),
             sid=self._snapshot_sid)
-        for i in range(len(self.owners)):
+        for i in range(n):
             self._folded_spent[i] = self._accountant.ledgers[i].responses
             self._folded_refused[i] = self.refusals[i]
+            self._folded_dropped[i] = self.dropped_rounds[i]
+            self._folded_faulted[i] = self.faulted_rounds[i]
+            self._folded_quarantined[i] = self.quarantined_rounds[i]
         return led
 
     def reconcile(self, ledger: DeviceLedger) -> Dict[int, Dict]:
@@ -187,6 +230,9 @@ class _LedgeredMechanism:
         untouched, so callers can recover from a consistent state."""
         spent = np.asarray(ledger.spent)
         refused = np.asarray(ledger.refused)
+        dropped = np.asarray(ledger.dropped)
+        faulted = np.asarray(ledger.faulted)
+        quarantined = np.asarray(ledger.quarantined)
         if spent.shape != (len(self.owners),):
             raise ValueError(f"device ledger for {spent.shape[0]} owners, "
                              f"mechanism has {len(self.owners)}")
@@ -201,12 +247,16 @@ class _LedgeredMechanism:
         for i in range(len(self.owners)):
             d_spent = int(spent[i]) - self._folded_spent[i]
             d_refused = int(refused[i]) - self._folded_refused[i]
-            if d_spent < 0 or d_refused < 0:
+            d_dropped = int(dropped[i]) - self._folded_dropped[i]
+            d_faulted = int(faulted[i]) - self._folded_faulted[i]
+            d_quar = int(quarantined[i]) - self._folded_quarantined[i]
+            if min(d_spent, d_refused, d_dropped, d_faulted, d_quar) < 0:
                 raise LedgerDriftError(
                     f"owner {i}: device counters went backwards "
-                    f"(spent {spent[i]} < folded {self._folded_spent[i]} or "
-                    f"refused {refused[i]} < {self._folded_refused[i]}); "
-                    "was the state ledger rebuilt without device_ledger()?")
+                    f"(spent {spent[i]} < folded {self._folded_spent[i]}, "
+                    f"refused {refused[i]} < {self._folded_refused[i]}, or a "
+                    "fault-outcome column shrank); was the state ledger "
+                    "rebuilt without device_ledger()?")
             led_i = self._accountant.ledgers[i]
             room = led_i.effective_horizon - led_i.responses
             if d_spent > room:
@@ -216,14 +266,89 @@ class _LedgeredMechanism:
                     "is stale (host-authorized rounds ran after the "
                     "snapshot); take a fresh Federation.init_state / "
                     "device_ledger()")
-            deltas.append((d_spent, d_refused))
-        for i, (d_spent, d_refused) in enumerate(deltas):
+            deltas.append((d_spent, d_refused, d_dropped, d_faulted, d_quar))
+        for i, (d_spent, d_refused, d_dropped, d_faulted,
+                d_quar) in enumerate(deltas):
             granted = self._accountant.record_responses(i, d_spent)
             assert granted == d_spent, (i, granted, d_spent)
             self.refusals[i] += d_refused
+            # Fault outcomes carry no epsilon of their own (faulted rounds
+            # are a subset of the d_spent just ledgered) — they fold into
+            # the host tallies without touching the accountant.
+            self.dropped_rounds[i] += d_dropped
+            self.faulted_rounds[i] += d_faulted
+            self.quarantined_rounds[i] += d_quar
             self._folded_spent[i] = int(spent[i])
             self._folded_refused[i] = int(refused[i])
+            self._folded_dropped[i] = int(dropped[i])
+            self._folded_faulted[i] = int(faulted[i])
+            self._folded_quarantined[i] = int(quarantined[i])
         return self.ledger()
+
+    def export_journal(self) -> Dict:
+        """Host-accountant snapshot for crash-resume (PR 8).
+
+        Saved alongside the device checkpoint by
+        ``Federation.save_session``, this records everything reconcile()
+        depends on: per-owner response/refusal/fault tallies, the
+        folded-counter baselines, and the snapshot generation id. A
+        restored mechanism therefore reconciles the restored device
+        ledger against the SAME baseline the crashed process would have —
+        replaying a partially-reconciled dispatch cannot double-count
+        epsilon. All per-owner vectors are lists indexed by owner id
+        (msgpack map keys must be strings, so no int-keyed dicts)."""
+        n = len(self.owners)
+
+        def col(d):
+            return [int(d[i]) for i in range(n)]
+
+        return {
+            "version": 1,
+            "sid": int(self._snapshot_sid),
+            "responses": [int(self._accountant.ledgers[i].responses)
+                          for i in range(n)],
+            "refusals": col(self.refusals),
+            "dropped": col(self.dropped_rounds),
+            "faulted": col(self.faulted_rounds),
+            "quarantined": col(self.quarantined_rounds),
+            "folded_spent": col(self._folded_spent),
+            "folded_refused": col(self._folded_refused),
+            "folded_dropped": col(self._folded_dropped),
+            "folded_faulted": col(self._folded_faulted),
+            "folded_quarantined": col(self._folded_quarantined),
+        }
+
+    def restore_journal(self, journal: Dict) -> None:
+        """Rewind the host accountant to an export_journal() snapshot.
+
+        The mechanism must have been built from the same owners/config
+        (scales and caps are re-derived, not journaled)."""
+        if int(journal.get("version", -1)) != 1:
+            raise ValueError(f"unknown journal version "
+                             f"{journal.get('version')!r}")
+        n = len(self.owners)
+        cols = ("responses", "refusals", "dropped", "faulted",
+                "quarantined", "folded_spent", "folded_refused",
+                "folded_dropped", "folded_faulted", "folded_quarantined")
+        for c in cols:
+            if len(journal[c]) != n:
+                raise ValueError(
+                    f"journal column {c!r} has {len(journal[c])} owners, "
+                    f"mechanism has {n} — restore with the same federation")
+        for i in range(n):
+            self._accountant.ledgers[i].responses = int(
+                journal["responses"][i])
+            self.refusals[i] = int(journal["refusals"][i])
+            self.dropped_rounds[i] = int(journal["dropped"][i])
+            self.faulted_rounds[i] = int(journal["faulted"][i])
+            self.quarantined_rounds[i] = int(journal["quarantined"][i])
+            self._folded_spent[i] = int(journal["folded_spent"][i])
+            self._folded_refused[i] = int(journal["folded_refused"][i])
+            self._folded_dropped[i] = int(journal["folded_dropped"][i])
+            self._folded_faulted[i] = int(journal["folded_faulted"][i])
+            self._folded_quarantined[i] = int(
+                journal["folded_quarantined"][i])
+        self._snapshot_sid = int(journal["sid"])
 
 
 class PaperMechanism(_LedgeredMechanism):

@@ -100,17 +100,40 @@ class DeviceLedger:
     and reconcile only accepts the lineage of the latest snapshot — two
     live states from one session would otherwise fold divergent counter
     chains against a single baseline and silently under-count spend.
+
+    Fault-outcome columns (PR 8 — epsilon is charged AT RESPONSE TIME):
+    `spent` counts every round the owner ANSWERED, including rounds the
+    in-graph guards subsequently rejected — the noisy query left the
+    owner, so its budget is gone whether or not the learner kept the
+    update. `dropped` counts rounds lost BEFORE the query was answered
+    (owner unreachable): no response happened, no epsilon is spent.
+    `faulted` counts answered-then-rejected rounds (non-finite update,
+    payload-checksum mismatch, stale replay) — a subset of `spent`'s
+    increments, recorded so the host accountant can see budget that
+    bought no progress. `quarantined` counts rounds masked because the
+    owner was quarantined (no answer, no epsilon, no refusal).
     """
 
     def __init__(self, spent: jax.Array, cap: jax.Array, refused: jax.Array,
+                 dropped: Optional[jax.Array] = None,
+                 faulted: Optional[jax.Array] = None,
+                 quarantined: Optional[jax.Array] = None,
                  sid: int = 0):
         self.spent = spent      # (N,) int32 — responses granted so far
         self.cap = cap          # (N,) int32 — per-owner response cap (T_eff)
         self.refused = refused  # (N,) int32 — in-graph refusals
+        # distinct zero buffers per field — donated states may not alias
+        self.dropped = (jnp.zeros_like(spent) if dropped is None
+                        else dropped)        # lost pre-answer: no eps
+        self.faulted = (jnp.zeros_like(spent) if faulted is None
+                        else faulted)        # answered, rejected: eps spent
+        self.quarantined = (jnp.zeros_like(spent) if quarantined is None
+                            else quarantined)  # masked while quarantined
         self.sid = sid
 
     def tree_flatten(self):
-        return (self.spent, self.cap, self.refused), self.sid
+        return (self.spent, self.cap, self.refused, self.dropped,
+                self.faulted, self.quarantined), self.sid
 
     @classmethod
     def tree_unflatten(cls, sid, children):
@@ -118,7 +141,9 @@ class DeviceLedger:
 
     def replace(self, **kw) -> "DeviceLedger":
         fields = {"spent": self.spent, "cap": self.cap,
-                  "refused": self.refused, "sid": self.sid}
+                  "refused": self.refused, "dropped": self.dropped,
+                  "faulted": self.faulted,
+                  "quarantined": self.quarantined, "sid": self.sid}
         fields.update(kw)
         return DeviceLedger(**fields)
 
@@ -133,16 +158,20 @@ class DeviceLedger:
 def make_device_ledger(caps: Sequence[int],
                        spent: Optional[Sequence[int]] = None,
                        refused: Optional[Sequence[int]] = None,
+                       dropped: Optional[Sequence[int]] = None,
+                       faulted: Optional[Sequence[int]] = None,
+                       quarantined: Optional[Sequence[int]] = None,
                        sid: int = 0) -> DeviceLedger:
     caps = jnp.asarray(caps, jnp.int32)
-    # distinct buffers per field — donated states may not alias leaves
-    return DeviceLedger(
-        spent=(jnp.zeros(caps.shape, jnp.int32) if spent is None
-               else jnp.asarray(spent, jnp.int32)),
-        cap=caps,
-        refused=(jnp.zeros(caps.shape, jnp.int32) if refused is None
-                 else jnp.asarray(refused, jnp.int32)),
-        sid=sid)
+
+    def col(v):
+        # distinct buffers per field — donated states may not alias leaves
+        return (jnp.zeros(caps.shape, jnp.int32) if v is None
+                else jnp.asarray(v, jnp.int32))
+
+    return DeviceLedger(spent=col(spent), cap=caps, refused=col(refused),
+                        dropped=col(dropped), faulted=col(faulted),
+                        quarantined=col(quarantined), sid=sid)
 
 
 @dataclasses.dataclass

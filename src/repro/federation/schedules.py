@@ -187,10 +187,33 @@ class AvailabilityTraceSchedule:
     hours straddle the period boundary. If no owner is available at a tick
     (a gap in the trace), every owner is considered available so the clock
     keeps ticking — the learner never idles on an empty federation.
+
+    `trace` replays a RECORDED owner sequence instead of sampling one
+    (tiled to the horizon if shorter): deterministic replay of a
+    production availability log, e.g. for chaos/regression studies. The
+    ids are validated against the windowed owner count AT CONSTRUCTION —
+    an out-of-range id would otherwise scatter with mode='drop' inside
+    the fused scan and silently lose the round.
     """
     windows: Tuple[Tuple[float, float], ...]
     period: float = 24.0
     rate: float = 1.0
+    trace: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.trace is None:
+            return
+        trace = tuple(int(o) for o in self.trace)
+        if not trace:
+            raise ValueError("an empty trace cannot schedule any round")
+        n = len(self.windows)
+        bad = sorted({o for o in trace if not 0 <= o < n})
+        if bad:
+            raise ValueError(
+                f"trace owner ids {bad} out of range for the {n} windowed "
+                "owners — inside the fused scan an out-of-range id would "
+                "scatter with mode='drop' and silently lose the round")
+        object.__setattr__(self, "trace", trace)
 
     def draw_with_times(self, key, n_owners: int, horizon: int) -> Schedule:
         if len(self.windows) != n_owners:
@@ -198,6 +221,10 @@ class AvailabilityTraceSchedule:
                 f"{len(self.windows)} windows for {n_owners} owners")
         k_time, k_pick = jax.random.split(key)
         times = poisson_schedule(k_time, n_owners, horizon, self.rate).times
+        if self.trace is not None:
+            owners = jnp.asarray(np.resize(
+                np.asarray(self.trace, np.int32), horizon))
+            return Schedule(times, owners)
         inside = self.available(times, fallback=True)            # (T, N)
         gumbel = jax.random.gumbel(k_pick, (horizon, n_owners))
         owners = jnp.argmax(jnp.where(inside, gumbel, -jnp.inf),

@@ -47,6 +47,8 @@ from repro.federation.deep import (AsyncDPConfig, AsyncDPState, init_state,
                                    make_group_rounds, make_sync_dp_step,
                                    make_train_step)
 from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.faults import (DROP, OK, FaultPlan, FaultPolicy,
+                                     as_fault_codes, fault_tick)
 from repro.federation.flatten import ParamFlat
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
@@ -65,19 +67,26 @@ class Federation:
                  schedule: Optional[ScheduleProtocol] = None,
                  strategy: str = "async",
                  cap_slack: Optional[float] = None,
-                 tree_depth: Optional[int] = None):
+                 tree_depth: Optional[int] = None,
+                 fault_policy: Optional[FaultPolicy] = None):
         if strategy not in _STRATEGIES:
             raise ValueError(f"strategy must be one of {_STRATEGIES}")
         self.owners = list(owners)
         self.config = config
         self.schedule = schedule if schedule is not None else UniformSchedule()
         self.strategy = strategy
+        # fault_policy arms the in-graph fault layer (deep path only):
+        # states grow FaultState counters, drivers accept fault codes, and
+        # owners exceeding the policy's fault budget are quarantined.
+        # None keeps every driver tracing the fault-free program verbatim.
+        self.fault_policy = fault_policy
         self.mechanism = make_mechanism(mechanism, self.owners, config,
                                         cap_slack=cap_slack,
                                         tree_depth=tree_depth)
         self._step_fn = None
         self._fused_fn = None
         self._group_fn = None
+        self._tick_fn = None
         self._pack_params = False
         self._bank_dtype = None
         self._mesh = None
@@ -202,7 +211,8 @@ class Federation:
             privatizer=privatizer or PrivatizerConfig(xi=xi),
             lr_scale=cfg.lr_scale,
             caps=None if cap is None else (cap,) * self.n_owners,
-            tree_depth=getattr(self.mechanism, "tree_depth", None))
+            tree_depth=getattr(self.mechanism, "tree_depth", None),
+            fault_policy=self.fault_policy)
 
     def init_state(self, params, pack_params: Optional[bool] = None,
                    bank_dtype=None, mesh=None) -> AsyncDPState:
@@ -304,6 +314,14 @@ class Federation:
         self._pack_params = pack_params
         self._bank_dtype = bank_dtype
         self._mesh = mesh
+        if self.fault_policy is not None and self.strategy == "async":
+            # Host-protocol rounds that never enter the step graph
+            # (drops, refusals) still advance the fault window exactly as
+            # the fused driver's in-graph tick would.
+            pol = self.fault_policy
+            self._tick_fn = jax.jit(
+                lambda fs, i, f: fault_tick(fs, jnp.int32(i), jnp.bool_(f),
+                                            pol, active=jnp.bool_(True)))
         acfg = self.as_async_config(privatizer)
         scales = self.mechanism.scales(p=n_params,
                                        clip_norm=acfg.privatizer.xi)
@@ -332,24 +350,70 @@ class Federation:
             raise RuntimeError("call make_step(loss_fn) before step()")
         return self._step_fn
 
-    def step(self, state: AsyncDPState, batch, owner_idx, key
+    def step(self, state: AsyncDPState, batch, owner_idx, key,
+             fault_code: Optional[int] = None
              ) -> Tuple[AsyncDPState, Dict[str, Any]]:
         """One ledgered asynchronous round. A budget-exhausted owner is
         refused: model state (central AND bank) is returned untouched and
-        the refusal is recorded in the ledger."""
+        the refusal is recorded in the ledger.
+
+        With a fault-armed federation (fault_policy set), `fault_code`
+        injects one of faults.OK/DROP/STALE/NONFINITE_GRAD/
+        CORRUPT_PAYLOAD into the round. The host mirrors the fused
+        driver's outcome order exactly: quarantined owners are masked
+        before anything else (no epsilon, no refusal, no window tick); a
+        DROP on an exhausted owner is a refusal (the budget check
+        precedes the contact); a plain DROP costs no epsilon; every
+        answered round is charged at response time even if the in-graph
+        guards then reject it (metrics['faulted'])."""
         if self.strategy != "async":
             raise ValueError("step() is the async path; use sync_round()")
         step_fn = self._require_step()
         i = int(owner_idx)
+        if state.faults is None:
+            if fault_code is not None:
+                raise ValueError(
+                    "fault injection needs a fault-armed state; build the "
+                    "Federation with fault_policy=FaultPolicy(...)")
+            if not self.mechanism.authorize(i):
+                return state, {"refused": True, "owner": i}
+            new_state, metrics = step_fn(state, batch, jnp.int32(i), key)
+            metrics = dict(metrics)
+            metrics.update(refused=False, owner=i)
+            return new_state, metrics
+
+        fc = OK if fault_code is None else int(fault_code)
+        flags = {"refused": False, "dropped": False, "faulted": False,
+                 "quarantined": False, "owner": i}
+        if bool(state.faults.quarantined[i]):
+            # masked before any budget decision; the fused tick is also
+            # inactive for quarantined owners, so no window advance
+            self.mechanism.record_quarantined(i)
+            return state, dict(flags, quarantined=True)
+        if fc == DROP:
+            if self.mechanism.exhausted(i):
+                # refusal takes precedence: the budget check happens
+                # before the contact could be lost
+                self.mechanism.authorize(i)      # records the refusal
+                faults = self._tick_fn(state.faults, i, False)
+                return state._replace(faults=faults), dict(flags,
+                                                           refused=True)
+            self.mechanism.record_dropped(i)     # no answer -> no epsilon
+            faults = self._tick_fn(state.faults, i, True)
+            return state._replace(faults=faults), dict(flags, dropped=True)
         if not self.mechanism.authorize(i):
-            return state, {"refused": True, "owner": i}
-        new_state, metrics = step_fn(state, batch, jnp.int32(i), key)
+            faults = self._tick_fn(state.faults, i, False)
+            return state._replace(faults=faults), dict(flags, refused=True)
+        new_state, metrics = step_fn(state, batch, jnp.int32(i), key,
+                                     jnp.int8(fc))
         metrics = dict(metrics)
-        metrics.update(refused=False, owner=i)
+        if bool(metrics["faulted"]):
+            self.mechanism.record_faulted(i)     # epsilon already charged
+        metrics.update(flags, faulted=bool(metrics["faulted"]))
         return new_state, metrics
 
     def run_rounds(self, state: AsyncDPState, batches, owner_seq=None,
-                   key=None, *, owner_parallel: bool = False,
+                   key=None, *, faults=None, owner_parallel: bool = False,
                    max_group: Union[int, str, None] = "auto"
                    ) -> Tuple[AsyncDPState, Dict[str, Any]]:
         """K asynchronous rounds in ONE dispatch (lax.scan over the jitted
@@ -387,6 +451,14 @@ class Federation:
 
         metrics are stacked (K,) round-order arrays either way (refused
         mask, owner, clip_frac, max_grad_norm, grad_noise_scale).
+
+        `faults` (fault-armed federations only) injects per-round faults
+        in-graph: a `FaultPlan` draws one int8 code per round
+        deterministically from this call's key (domain-separated from the
+        round keys, so the same key reproduces the same faults on every
+        driver), or pass a (K,) code array to replay a recorded trace.
+        Fault outcomes land in the device ledger's dropped/faulted/
+        quarantined columns and fold back on `reconcile(state)`.
         """
         if self.strategy != "async":
             raise ValueError("run_rounds() is the async path")
@@ -404,9 +476,28 @@ class Federation:
                                            k).astype(jnp.int32)
         else:
             owner_seq = as_owner_seq(owner_seq, self.n_owners)
-        keys = jax.random.split(key, owner_seq.shape[0])
+        k_rounds = owner_seq.shape[0]
+        fault_codes = None
+        if faults is not None:
+            if state.faults is None:
+                raise ValueError(
+                    "fault injection needs a fault-armed state; build the "
+                    "Federation with fault_policy=FaultPolicy(...)")
+            if isinstance(faults, FaultPlan):
+                # drawn from THIS key (salted fold-in keeps the stream
+                # disjoint from the per-round keys split below), so fixed
+                # key -> identical faults on every driver
+                fault_codes = faults.draw(key, k_rounds)
+            else:
+                fault_codes = as_fault_codes(faults, k_rounds)
+        # same key as FaultPlan.draw by contract: draw folds in
+        # FAULT_SALT, so the fault stream never touches the round keys
+        keys = jax.random.split(key, k_rounds)  # dpcheck: ignore[DPC105]
         if not owner_parallel:
-            return self._fused_fn(state, batches, owner_seq, keys)
+            if fault_codes is None:
+                return self._fused_fn(state, batches, owner_seq, keys)
+            return self._fused_fn(state, batches, owner_seq, keys,
+                                  fault_codes)
 
         # schedule analysis is a host-side pass: one sync per dispatch
         if max_group == "auto":
@@ -415,7 +506,10 @@ class Federation:
         if all(length <= 1 for _, length in groups):
             # every group is a single round: the sequential scan IS the
             # grouped execution, bit-for-bit
-            return self._fused_fn(state, batches, owner_seq, keys)
+            if fault_codes is None:
+                return self._fused_fn(state, batches, owner_seq, keys)
+            return self._fused_fn(state, batches, owner_seq, keys,
+                                  fault_codes)
         idx, valid = pack_groups(groups)
         # Shape-stabilize for the jit cache: schedule-drawn partitions
         # give a different (n_groups, G_max) almost every dispatch, and
@@ -432,9 +526,14 @@ class Federation:
         rows = -(-n_g // 4) * 4
         idx = np.pad(idx, ((0, rows - n_g), (0, gpad - gmax)))
         valid = np.pad(valid, ((0, rows - n_g), (0, gpad - gmax)))
-        state, gm = self._group_fn(state, batches, owner_seq, keys,
-                                   jnp.asarray(idx), jnp.asarray(valid),
-                                   jnp.int32(n_g))
+        if fault_codes is None:
+            state, gm = self._group_fn(state, batches, owner_seq, keys,
+                                       jnp.asarray(idx), jnp.asarray(valid),
+                                       jnp.int32(n_g))
+        else:
+            state, gm = self._group_fn(state, batches, owner_seq, keys,
+                                       jnp.asarray(idx), jnp.asarray(valid),
+                                       jnp.int32(n_g), fault_codes)
         # group-major (n_groups, G_max) -> round-order (K,): groups are
         # consecutive and in order, so the valid entries flatten in order
         order = np.flatnonzero(valid.reshape(-1))
@@ -452,6 +551,63 @@ class Federation:
             raise NotImplementedError(
                 f"mechanism {self.mechanism.name!r} has no reconcile()")
         return fold(state.ledger)
+
+    # --------------------------- crash-resume ------------------------------
+    def save_session(self, directory, state: AsyncDPState,
+                     step: Optional[int] = None) -> int:
+        """Checkpoint the device state AND the host accountant together.
+
+        Atomically writes the full AsyncDPState (params, bank, ledger,
+        tree, fault counters) plus the mechanism's dispatch journal —
+        everything `reconcile` depends on — so a process killed any time
+        after this call resumes via `restore_session` with exactly the
+        accounting the crashed process had. Returns the step the
+        checkpoint was filed under (state.step when not given)."""
+        from repro.checkpoint import save_checkpoint
+        if step is None:
+            step = int(state.step)
+        extra = {}
+        exp = getattr(self.mechanism, "export_journal", None)
+        if exp is not None:
+            extra["journal"] = exp()
+        save_checkpoint(directory, step, state, extra=extra or None)
+        return int(step)
+
+    def restore_session(self, directory, like: AsyncDPState,
+                        step: Optional[int] = None) -> AsyncDPState:
+        """Restore a save_session checkpoint into THIS federation.
+
+        `like` is a template state (e.g. a fresh `init_state(params)`)
+        supplying structure, dtypes, and static metadata. The mechanism's
+        journal is replayed first, rewinding the host accountant to the
+        saved baselines, and the restored ledger adopts the journaled
+        snapshot generation — so `reconcile` after resume folds exactly
+        the deltas the crashed process had not yet folded, never
+        double-counting epsilon. The federation must be built from the
+        same owners/config as the one that saved."""
+        from repro.checkpoint import (latest_step, load_checkpoint,
+                                      load_manifest)
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {directory!r}")
+        state = load_checkpoint(directory, step, like)
+        manifest = load_manifest(directory, step)
+        journal = (manifest.get("extra") or {}).get("journal")
+        if journal is not None:
+            rest = getattr(self.mechanism, "restore_journal", None)
+            if rest is None:
+                raise NotImplementedError(
+                    f"mechanism {self.mechanism.name!r} cannot replay the "
+                    "checkpoint's dispatch journal")
+            rest(journal)
+            if state.ledger is not None:
+                # sid is static pytree metadata, so it came from `like`,
+                # not the checkpoint — adopt the journaled generation
+                state = state._replace(
+                    ledger=state.ledger.replace(sid=int(journal["sid"])))
+        return state
 
     def sync_round(self, params, batches, key):
         """One ledgered synchronous round: every live owner contributes;

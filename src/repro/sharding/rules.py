@@ -244,6 +244,9 @@ class FlatShardings(NamedTuple):
     # replicated depth axis in between, so the per-round row gather/scatter
     # and the tree-delta elementwise ops stay local in P.
     tree_nodes: NamedSharding = None
+    # Fault-layer counters (faults.FaultState: four (N,) vectors) — tiny,
+    # replicated exactly like the ledger.
+    faults: NamedSharding = None
 
 
 def flat_axes(mesh: Mesh, n_owners: int, p: int
@@ -275,4 +278,5 @@ def flat_shardings(mesh: Mesh, n_owners: int, p: int) -> FlatShardings:
                          row=NamedSharding(mesh, P(p_ax)),
                          ledger=NamedSharding(mesh, P()),
                          bank_scales=NamedSharding(mesh, P(n_ax)),
-                         tree_nodes=NamedSharding(mesh, P(n_ax, None, p_ax)))
+                         tree_nodes=NamedSharding(mesh, P(n_ax, None, p_ax)),
+                         faults=NamedSharding(mesh, P()))

@@ -1,0 +1,307 @@
+"""Checkpoint store + crash-resume (PR 8).
+
+Contracts under test:
+  * atomic saves — `latest_step` never resumes from a temp/trash shard,
+    and overwriting an existing step is torn-write safe;
+  * extended dtypes (bf16, fp8) round-trip bit-exactly through the raw
+    uint views;
+  * every AsyncDPState variant (pytree bank, flat f32/bf16, QuantBank
+    int8/fp8 with scales + EF residual, TreeNoise, FaultState) restores
+    and CONTINUES `run_rounds` bit-for-bit vs an uninterrupted run;
+  * reconcile-after-restore is idempotent: a subprocess that reconciles,
+    checkpoints, keeps training and then dies resumes with exactly the
+    uninterrupted run's accounting (no double-counted epsilon).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint, load_manifest,
+                              save_checkpoint)
+from repro.federation import (DataOwner, FaultPlan, FaultPolicy, Federation,
+                              FederationConfig)
+from repro.federation.dp_sgd import PrivatizerConfig
+
+N_OWNERS, K = 3, 12
+
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    params = {"w": jnp.zeros((6,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    kb = jax.random.PRNGKey(7)
+    batches = {"x": jax.random.normal(kb, (K, 4, 6)),
+               "y": jnp.ones((K, 4))}
+    return params, batches
+
+
+def _make_fed(*, fault_policy=None, pack=False, bank_dtype=None,
+              mechanism="paper", tree_depth=None):
+    owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * N_OWNERS
+    cfg = FederationConfig(horizon=16, sigma=1e-2, theta_max=10.0,
+                           lr_scale=5.0)
+    fed = Federation(owners, cfg, mechanism=mechanism,
+                     tree_depth=tree_depth, fault_policy=fault_policy)
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="example"), pack_params=pack,
+        bank_dtype=bank_dtype)
+    return fed
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(la, lb))
+
+
+# ----------------------------- store level ---------------------------------
+
+def test_roundtrip_plain_pytree(tmp_path):
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": {"c": jnp.asarray(3, jnp.int32)}}
+    save_checkpoint(str(tmp_path), 5, state)
+    assert latest_step(str(tmp_path)) == 5
+    back = load_checkpoint(str(tmp_path), 5, state)
+    assert _leaves_equal(state, back)
+
+
+def test_roundtrip_extended_dtypes(tmp_path):
+    state = {"bf16": jnp.arange(8, dtype=jnp.bfloat16) / 3,
+             "fp8": jnp.asarray([1.5, -2.0, 0.125, 7.0],
+                                jnp.float8_e4m3fn)}
+    save_checkpoint(str(tmp_path), 0, state)
+    back = load_checkpoint(str(tmp_path), 0, state)
+    for k in state:
+        assert back[k].dtype == state[k].dtype
+        assert bool((back[k].view(jnp.uint8)
+                     == state[k].view(jnp.uint8)).all())
+
+
+def test_extra_rides_in_manifest(tmp_path):
+    extra = {"journal": {"version": 1, "spent": [1, 2, 3]}}
+    save_checkpoint(str(tmp_path), 2, {"x": jnp.zeros(3)}, extra=extra)
+    man = load_manifest(str(tmp_path), 2)
+    assert man["extra"] == extra
+    # and absent when not given
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.zeros(3)})
+    assert "extra" not in load_manifest(str(tmp_path), 3)
+
+
+def test_latest_step_ignores_temp_trash_and_foreign(tmp_path):
+    save_checkpoint(str(tmp_path), 4, {"x": jnp.zeros(2)})
+    # crash leftovers from the two-rename protocol + stray files
+    os.makedirs(tmp_path / "_tmp_step_00000009.1234")
+    os.makedirs(tmp_path / "_old_step_00000008.1234")
+    os.makedirs(tmp_path / "step_garbage")
+    (tmp_path / "README.txt").write_text("not a shard")
+    assert latest_step(str(tmp_path)) == 4
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_overwrite_existing_step_is_atomic(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(4)})
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(4)})
+    back = load_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(4)})
+    assert bool((back["x"] == 1.0).all())
+    # no temp/backup residue after a clean overwrite
+    assert all(n.startswith("step_") for n in os.listdir(tmp_path))
+
+
+def test_missing_leaf_and_shape_mismatch_fail_loudly(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(4)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        load_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(4),
+                                           "y": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(5)})
+
+
+# --------------------- session resume, every variant -----------------------
+
+VARIANTS = [
+    dict(pack=False, bank_dtype=None),                       # pytree bank
+    dict(pack=True, bank_dtype=None),                        # flat f32
+    dict(pack=True, bank_dtype=jnp.bfloat16),                # flat bf16
+    dict(pack=True, bank_dtype="int8"),                      # QuantBank
+    dict(pack=True, bank_dtype="fp8"),                       # QuantBank fp8
+    dict(pack=False, bank_dtype=None, mechanism="tree",
+         tree_depth=3),                                      # TreeNoise
+]
+IDS = ["pytree", "flat_f32", "flat_bf16", "int8", "fp8", "tree"]
+
+
+@pytest.mark.parametrize("kw", VARIANTS, ids=IDS)
+def test_restored_state_continues_bit_for_bit(toy, tmp_path, kw):
+    params, batches = toy
+    seq = jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+    k1, k2 = jax.random.PRNGKey(31), jax.random.PRNGKey(32)
+    cut = K // 2
+    first = jax.tree_util.tree_map(lambda a: a[:cut], batches)
+    rest = jax.tree_util.tree_map(lambda a: a[cut:], batches)
+    pol = FaultPolicy(max_faults=4, window=8)
+    plan = FaultPlan(drop=0.2, stale=0.1, nonfinite=0.1, corrupt=0.1)
+
+    # uninterrupted reference
+    fed_a = _make_fed(fault_policy=pol, **kw)
+    s_a = fed_a.init_state(params)
+    s_a, _ = fed_a.run_rounds(s_a, first, seq[:cut], k1, faults=plan)
+    s_a, _ = fed_a.run_rounds(s_a, rest, seq[cut:], k2, faults=plan)
+    led_a = fed_a.reconcile(s_a)
+
+    # checkpoint at the cut, restore into a FRESH federation, continue
+    fed_b = _make_fed(fault_policy=pol, **kw)
+    s_b = fed_b.init_state(params)
+    s_b, _ = fed_b.run_rounds(s_b, first, seq[:cut], k1, faults=plan)
+    fed_b.reconcile(s_b)
+    step = fed_b.save_session(str(tmp_path), s_b)
+    assert latest_step(str(tmp_path)) == step
+
+    fed_c = _make_fed(fault_policy=pol, **kw)
+    s_c = fed_c.restore_session(str(tmp_path), fed_c.init_state(params))
+    assert _leaves_equal(s_b, s_c)
+    s_c, _ = fed_c.run_rounds(s_c, rest, seq[cut:], k2, faults=plan)
+
+    assert _leaves_equal(s_a.theta_L, s_c.theta_L)
+    assert _leaves_equal(s_a.bank, s_c.bank)
+    assert _leaves_equal(s_a.faults, s_c.faults)
+    if s_a.tree is not None:
+        assert _leaves_equal(s_a.tree, s_c.tree)
+    assert int(s_a.step) == int(s_c.step)
+    assert fed_c.reconcile(s_c) == led_a
+
+
+def test_restore_without_checkpoint_raises(toy, tmp_path):
+    params, _ = toy
+    fed = _make_fed(pack=True, bank_dtype="int8",
+                    fault_policy=FaultPolicy(max_faults=4, window=8))
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        fed.restore_session(str(tmp_path / "empty"),
+                            fed.init_state(params))
+
+
+def test_reconcile_after_restore_is_idempotent(toy, tmp_path):
+    # reconcile BEFORE saving, then reconcile again after restoring:
+    # the journaled baselines mean the second fold sees zero new deltas
+    params, batches = toy
+    seq = jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+    fed = _make_fed(pack=True, bank_dtype="int8",
+                    fault_policy=FaultPolicy(max_faults=4, window=8))
+    s = fed.init_state(params)
+    s, _ = fed.run_rounds(s, batches, seq, jax.random.PRNGKey(41),
+                          faults=FaultPlan(drop=0.3))
+    led = fed.reconcile(s)
+    fed.save_session(str(tmp_path), s)
+
+    fed2 = _make_fed(pack=True, bank_dtype="int8",
+                     fault_policy=FaultPolicy(max_faults=4, window=8))
+    s2 = fed2.restore_session(str(tmp_path), fed2.init_state(params))
+    assert fed2.reconcile(s2) == led
+    assert fed2.reconcile(s2) == led        # idempotent: fold again
+
+
+# ------------------------- subprocess crash test ---------------------------
+
+_CHILD = textwrap.dedent("""
+    import os, sys, json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.federation import (DataOwner, FaultPlan, FaultPolicy,
+                                  Federation, FederationConfig)
+    from repro.federation.dp_sgd import PrivatizerConfig
+
+    ckpt = sys.argv[1]
+    N_OWNERS, K = 3, 12
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros((6,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    kb = jax.random.PRNGKey(7)
+    batches = {"x": jax.random.normal(kb, (K, 4, 6)),
+               "y": jnp.ones((K, 4))}
+    owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * N_OWNERS
+    cfg = FederationConfig(horizon=16, sigma=1e-2, theta_max=10.0,
+                           lr_scale=5.0)
+    fed = Federation(owners, cfg, mechanism="paper",
+                     fault_policy=FaultPolicy(max_faults=4, window=8))
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="example"), pack_params=True,
+        bank_dtype="int8")
+    seq = jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+    cut = K // 2
+    first = jax.tree_util.tree_map(lambda a: a[:cut], batches)
+    rest = jax.tree_util.tree_map(lambda a: a[cut:], batches)
+    s = fed.init_state(params)
+    s, _ = fed.run_rounds(s, first, seq[:cut], jax.random.PRNGKey(51),
+                          faults=FaultPlan(drop=0.2, stale=0.2))
+    fed.reconcile(s)
+    fed.save_session(ckpt, s)
+    # keep training past the checkpoint, then die without saving —
+    # everything after the checkpoint must be recomputed by the parent
+    s, _ = fed.run_rounds(s, rest, seq[cut:], jax.random.PRNGKey(52),
+                          faults=FaultPlan(drop=0.2, stale=0.2))
+    os._exit(1)
+""")
+
+
+def test_crash_resume_matches_uninterrupted_run(toy, tmp_path):
+    params, batches = toy
+    ckpt = str(tmp_path / "ckpt")
+    child = tmp_path / "child.py"
+    child.write_text(_CHILD)
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, str(child), ckpt],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 1, proc.stderr      # the crash, not a bug
+    assert latest_step(ckpt) is not None
+
+    seq = jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+    cut = K // 2
+    first = jax.tree_util.tree_map(lambda a: a[:cut], batches)
+    rest = jax.tree_util.tree_map(lambda a: a[cut:], batches)
+    pol = FaultPolicy(max_faults=4, window=8)
+    plan = FaultPlan(drop=0.2, stale=0.2)
+
+    # uninterrupted reference, same dispatch plan as the child
+    fed_a = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s_a = fed_a.init_state(params)
+    s_a, _ = fed_a.run_rounds(s_a, first, seq[:cut],
+                              jax.random.PRNGKey(51), faults=plan)
+    s_a, _ = fed_a.run_rounds(s_a, rest, seq[cut:],
+                              jax.random.PRNGKey(52), faults=plan)
+    led_a = fed_a.reconcile(s_a)
+
+    # resume from the child's shard and replay the post-crash chunk
+    fed_b = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s_b = fed_b.restore_session(ckpt, fed_b.init_state(params))
+    s_b, _ = fed_b.run_rounds(s_b, rest, seq[cut:],
+                              jax.random.PRNGKey(52), faults=plan)
+    assert _leaves_equal(s_a.theta_L, s_b.theta_L)
+    assert _leaves_equal(s_a.bank, s_b.bank)
+    assert _leaves_equal(s_a.faults, s_b.faults)
+    assert int(s_a.step) == int(s_b.step)
+    assert fed_b.reconcile(s_b) == led_a
+    # the crashed process's accounting is recovered exactly — nothing
+    # double-counted, nothing lost
+    assert json.dumps({str(k): v for k, v in led_a.items()},
+                      sort_keys=True)

@@ -318,6 +318,60 @@ def test_dpc302_masked_write_ok(tmp_path):
     assert vs == []
 
 
+def test_dpc302_fault_guard_masks_are_grant_sources(tmp_path):
+    # PR 8 fault algebra: verify_row / finite_guard results and the
+    # quarantine flags mask a write exactly as lawfully as .authorized
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, fs, bank, new_i, old_i, owner_idx, corrupt):
+            auth = led.authorized(owner_idx) & ~fs.quarantined[owner_idx]
+            good = verify_row(fs.checksum, bank, owner_idx, corrupt)
+            good = good & finite_guard(new_i)
+            grant = auth & good
+            masked = jnp.where(grant, new_i, old_i)
+            return _write_bank(bank, masked, owner_idx)
+    """)
+    assert vs == []
+
+
+def test_dpc302_unrelated_mask_still_flagged(tmp_path):
+    # masking by a name that is NOT derived from the grant algebra does
+    # not launder the write
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, bank, new_i, old_i, owner_idx, mood):
+            ok = led.authorized(owner_idx)
+            theta = jnp.where(ok, new_i, old_i)
+            masked = jnp.where(mood, new_i, old_i)
+            return _write_bank(bank, masked, owner_idx)
+    """)
+    assert "DPC302" in _rules(vs)
+
+
+def test_dpc302_sibling_closure_mask_does_not_vouch(tmp_path):
+    # a grant mask bound inside one nested def must not vouch for a
+    # write in a sibling closure of the same factory
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def make(led, bank):
+            def guarded(new_i, old_i, owner_idx):
+                ok = led.authorized(owner_idx)
+                ok_row = jnp.where(ok, new_i, old_i)
+                return _write_bank(bank, ok_row, owner_idx)
+
+            def sneaky(new_i, owner_idx):
+                ok = led.authorized(owner_idx)
+                return _write_bank(bank, new_i, owner_idx)
+
+            return guarded, sneaky
+    """)
+    assert _rules(vs) == ["DPC302"]
+    assert len([v for v in vs if v.rule == "DPC302"]) == 1
+
+
 # ----------------------- DPC4xx: kernel conformance ------------------------
 def _kernel_tree(tmp_path, files, test_src=""):
     kd = tmp_path / "src" / "repro" / "kernels" / "mykern"

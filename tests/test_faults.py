@@ -1,0 +1,369 @@
+"""Fault layer (PR 8): in-graph injection, guards, quarantine, parity.
+
+The contracts under test:
+  * zero-fault FaultPlan reproduces the fault-OFF engine bit-for-bit
+    (every codec);
+  * under a fixed fault key, step loop == fused scan == grouped driver
+    produce bit-identical params/bank/ledger/tree/fault state;
+  * a faulted round leaves bank rows, scales, EF residual and tree nodes
+    bit-exactly untouched;
+  * epsilon is charged at response time (DROP spends nothing, a
+    guard-rejected answer spends);
+  * owners exceeding the FaultPolicy budget are quarantined in-graph.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federation import (CORRUPT_PAYLOAD, DROP, NONFINITE_GRAD, OK,
+                              STALE, DataOwner, FaultPlan, FaultPolicy,
+                              Federation, FederationConfig, QuantBank,
+                              as_fault_codes, bank_checksums)
+from repro.federation import faults as faults_mod
+from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.schedules import AvailabilityTraceSchedule
+
+N_OWNERS, K = 3, 12
+CODECS = [None, jnp.bfloat16, "int8", "fp8"]
+
+
+@pytest.fixture(scope="module")
+def toy():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros((6,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+    kb = jax.random.PRNGKey(7)
+    batches = {"x": jax.random.normal(kb, (K, 4, 6)),
+               "y": jnp.ones((K, 4))}
+    return loss_fn, params, batches
+
+
+def _make_fed(loss_fn, *, fault_policy=None, pack=False, bank_dtype=None,
+              mechanism="paper", tree_depth=None, horizon=16):
+    owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * N_OWNERS
+    cfg = FederationConfig(horizon=horizon, sigma=1e-2, theta_max=10.0,
+                           lr_scale=5.0)
+    fed = Federation(owners, cfg, mechanism=mechanism,
+                     tree_depth=tree_depth, fault_policy=fault_policy)
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="example"), pack_params=pack,
+        bank_dtype=bank_dtype)
+    return fed
+
+
+def _round_robin():
+    return jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(la, lb))
+
+
+PLAN = FaultPlan(drop=0.2, stale=0.1, nonfinite=0.2, corrupt=0.2)
+POLICY = FaultPolicy(max_faults=2, window=8)
+
+
+# ------------------------- zero-fault parity -------------------------------
+
+@pytest.mark.parametrize("bank_dtype", CODECS)
+def test_zero_fault_plan_matches_fault_off_engine(toy, bank_dtype):
+    loss_fn, params, batches = toy
+    key = jax.random.PRNGKey(3)
+    seq = _round_robin()
+    pack = bank_dtype is not None
+
+    fed_off = _make_fed(loss_fn, pack=pack, bank_dtype=bank_dtype)
+    s_off = fed_off.init_state(params)
+    s_off, m_off = fed_off.run_rounds(s_off, batches, seq, key)
+
+    fed_on = _make_fed(loss_fn, fault_policy=POLICY, pack=pack,
+                       bank_dtype=bank_dtype)
+    s_on = fed_on.init_state(params)
+    s_on, m_on = fed_on.run_rounds(s_on, batches, seq, key,
+                                   faults=FaultPlan())
+
+    assert _leaves_equal(s_off.theta_L, s_on.theta_L)
+    assert _leaves_equal(s_off.bank, s_on.bank)
+    assert int(s_off.step) == int(s_on.step)
+    assert not bool(np.asarray(m_on["faulted"]).any())
+    assert fed_off.reconcile(s_off) == fed_on.reconcile(s_on)
+
+
+# ------------------ three-driver equivalence with faults -------------------
+
+@pytest.mark.parametrize("bank_dtype", CODECS)
+def test_drivers_bit_identical_under_faults(toy, bank_dtype):
+    loss_fn, params, batches = toy
+    key = jax.random.PRNGKey(5)
+    seq = _round_robin()
+    pack = bank_dtype is not None
+
+    # fused scan
+    fed_f = _make_fed(loss_fn, fault_policy=POLICY, pack=pack,
+                      bank_dtype=bank_dtype)
+    s_f = fed_f.init_state(params)
+    s_f, m_f = fed_f.run_rounds(s_f, batches, seq, key, faults=PLAN)
+    led_f = fed_f.reconcile(s_f)
+
+    # per-round step loop under the same codes + keys
+    codes = PLAN.draw(key, K)
+    keys = jax.random.split(key, K)
+    fed_l = _make_fed(loss_fn, fault_policy=POLICY, pack=pack,
+                      bank_dtype=bank_dtype)
+    s_l = fed_l.init_state(params)
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_l, _ = fed_l.step(s_l, b, int(seq[k]), keys[k],
+                            fault_code=int(codes[k]))
+
+    # grouped driver (round-robin -> real multi-member groups)
+    fed_g = _make_fed(loss_fn, fault_policy=POLICY, pack=pack,
+                      bank_dtype=bank_dtype)
+    s_g = fed_g.init_state(params)
+    s_g, m_g = fed_g.run_rounds(s_g, batches, seq, key, faults=PLAN,
+                                owner_parallel=True, max_group=N_OWNERS)
+
+    for other in (s_l, s_g):
+        assert _leaves_equal(s_f.theta_L, other.theta_L)
+        assert _leaves_equal(s_f.bank, other.bank)
+        assert _leaves_equal(s_f.faults, other.faults)
+        assert int(s_f.step) == int(other.step)
+    assert led_f == fed_l.ledger()
+    assert led_f == fed_g.reconcile(s_g)
+    for name in ("faulted", "dropped", "quarantined", "refused"):
+        assert bool((np.asarray(m_f[name]) == np.asarray(m_g[name])).all())
+
+
+def test_drivers_bit_identical_under_faults_tree_mechanism(toy):
+    loss_fn, params, batches = toy
+    key = jax.random.PRNGKey(9)
+    seq = _round_robin()
+
+    fed_f = _make_fed(loss_fn, fault_policy=POLICY, mechanism="tree",
+                      tree_depth=4)
+    s_f = fed_f.init_state(params)
+    s_f, _ = fed_f.run_rounds(s_f, batches, seq, key, faults=PLAN)
+
+    codes = PLAN.draw(key, K)
+    keys = jax.random.split(key, K)
+    fed_l = _make_fed(loss_fn, fault_policy=POLICY, mechanism="tree",
+                      tree_depth=4)
+    s_l = fed_l.init_state(params)
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        s_l, _ = fed_l.step(s_l, b, int(seq[k]), keys[k],
+                            fault_code=int(codes[k]))
+
+    assert _leaves_equal(s_f.theta_L, s_l.theta_L)
+    assert _leaves_equal(s_f.tree.nodes, s_l.tree.nodes)
+    assert bool((np.asarray(s_f.tree.counts)
+                 == np.asarray(s_l.tree.counts)).all())
+    assert _leaves_equal(s_f.faults, s_l.faults)
+    assert fed_f.reconcile(s_f) == fed_l.ledger()
+
+
+# ---------------------- faulted rounds are no-ops --------------------------
+
+@pytest.mark.parametrize("code", [DROP, STALE, NONFINITE_GRAD,
+                                  CORRUPT_PAYLOAD])
+@pytest.mark.parametrize("bank_dtype", CODECS)
+def test_faulted_round_leaves_owner_state_untouched(toy, bank_dtype, code):
+    loss_fn, params, batches = toy
+    key = jax.random.PRNGKey(11)
+    seq = _round_robin()
+    pack = bank_dtype is not None
+    cut = 4
+
+    # lenient policy: every fault ticks the window, so a strict one would
+    # quarantine mid-dispatch and relabel the later rounds
+    fed = _make_fed(loss_fn, fault_policy=FaultPolicy(max_faults=99,
+                                                      window=8),
+                    pack=pack, bank_dtype=bank_dtype,
+                    mechanism="tree" if not pack else "paper",
+                    tree_depth=3 if not pack else None)
+    s = fed.init_state(params)
+    part = jax.tree_util.tree_map(lambda a: a[:cut], batches)
+    s, _ = fed.run_rounds(s, part, seq[:cut], key)   # warm the bank
+
+    # one all-faulted dispatch: every round must be a bit-exact no-op on
+    # bank rows, scales, EF residual, tree nodes and the checksums
+    rest = jax.tree_util.tree_map(lambda a: a[cut:], batches)
+    codes = jnp.full((K - cut,), code, jnp.int8)
+    before_bank = jax.tree_util.tree_map(jnp.copy, s.bank)
+    before_tree = None if s.tree is None else jax.tree_util.tree_map(
+        jnp.copy, s.tree)
+    s2, m = fed.run_rounds(s, rest, seq[cut:], jax.random.PRNGKey(12),
+                           faults=codes)
+    assert _leaves_equal(before_bank, s2.bank)
+    if before_tree is not None:
+        assert _leaves_equal(before_tree, s2.tree)
+    assert _leaves_equal(s.theta_L, s2.theta_L)
+    assert int(s.step) == int(s2.step)
+    assert bool((np.asarray(s.faults.checksum)
+                 == np.asarray(s2.faults.checksum)).all())
+    if code == DROP:
+        assert bool(np.asarray(m["dropped"]).all())
+    else:
+        assert bool(np.asarray(m["faulted"]).all())
+
+
+def test_epsilon_charged_at_response_time(toy):
+    loss_fn, params, batches = toy
+    seq = _round_robin()
+    fed = _make_fed(loss_fn, fault_policy=FaultPolicy(max_faults=99,
+                                                      window=8))
+    s = fed.init_state(params)
+    codes = jnp.asarray([DROP, STALE, OK] * (K // 3), jnp.int8)
+    s, _ = fed.run_rounds(s, batches, seq, jax.random.PRNGKey(13),
+                          faults=codes)
+    led = fed.reconcile(s)
+    per = K // N_OWNERS
+    # the code cycle aligns with the round-robin: owner 0 always DROPs
+    # (query never answered -> no eps), owner 1 is always STALE (answered
+    # then guard-rejected -> eps IS spent), owner 2 always answers OK
+    assert led[0]["dropped"] == per and led[0]["responses"] == 0
+    assert led[1]["faulted"] == per and led[1]["responses"] == per
+    assert led[2]["responses"] == per
+    assert led[2]["dropped"] == 0 and led[2]["faulted"] == 0
+
+
+# ------------------------------ quarantine ---------------------------------
+
+def test_owner_quarantined_after_fault_budget(toy):
+    loss_fn, params, batches = toy
+    fed = _make_fed(loss_fn, fault_policy=FaultPolicy(max_faults=2,
+                                                      window=16))
+    s = fed.init_state(params)
+    seq = jnp.zeros((K,), jnp.int32)          # hammer owner 0
+    codes = jnp.full((K,), STALE, jnp.int8)
+    s, m = fed.run_rounds(s, batches, seq, jax.random.PRNGKey(14),
+                          faults=codes)
+    assert bool(s.faults.quarantined[0])
+    assert not bool(np.asarray(s.faults.quarantined[1:]).any())
+    q = np.asarray(m["quarantined"])
+    # two faults trip the policy; every later round is masked out
+    assert not q[:2].any() and q[2:].all()
+    led = fed.reconcile(s)
+    assert led[0]["faulted"] == 2
+    assert led[0]["quarantined"] == K - 2
+    assert led[0]["responses"] == 2            # eps spent on the 2 answers
+    # healthy owners keep training after the quarantine
+    s2, m2 = fed.run_rounds(s, batches, jnp.ones((K,), jnp.int32),
+                            jax.random.PRNGKey(15), faults=FaultPlan())
+    assert not bool(np.asarray(m2["quarantined"]).any())
+    assert int(s2.step) - int(s.step) == K
+
+
+def test_genuine_bank_corruption_is_detected(toy):
+    loss_fn, params, batches = toy
+    fed = _make_fed(loss_fn, fault_policy=POLICY, pack=True,
+                    bank_dtype="int8")
+    s = fed.init_state(params)
+    cut = 4
+    part = jax.tree_util.tree_map(lambda a: a[:cut], batches)
+    s, _ = fed.run_rounds(s, part, _round_robin()[:cut],
+                          jax.random.PRNGKey(16))
+    # flip one bit of owner 1's resident codes OUT-OF-BAND (rot, torn
+    # write...): the stored checksum no longer matches the row
+    codes = s.bank.codes.at[1, 0].add(1)
+    s = s._replace(bank=QuantBank(codes, s.bank.scales, s.bank.residual,
+                                  s.bank.codec))
+    rest = jax.tree_util.tree_map(lambda a: a[cut:], batches)
+    seq = jnp.ones((K - cut,), jnp.int32)
+    s2, m = fed.run_rounds(s, rest, seq, jax.random.PRNGKey(17),
+                           faults=FaultPlan())
+    # the checksum guard rejects every contact until the fault budget
+    # (max_faults=2) trips, then the owner sits in quarantine
+    f, q = np.asarray(m["faulted"]), np.asarray(m["quarantined"])
+    assert f[:2].all() and not q[:2].any()
+    assert q[2:].all() and not f[2:].any()
+    assert bool(s2.faults.quarantined[1])
+    assert _leaves_equal(s.theta_L, s2.theta_L)
+
+
+# --------------------------- plan / code plumbing --------------------------
+
+def test_fault_plan_draw_is_deterministic_and_salted():
+    plan = FaultPlan(drop=0.3, stale=0.2, nonfinite=0.1, corrupt=0.1)
+    key = jax.random.PRNGKey(21)
+    a = plan.draw(key, 64)
+    assert a.dtype == jnp.int8
+    assert bool((a == plan.draw(key, 64)).all())
+    assert not bool((a == plan.draw(jax.random.PRNGKey(22), 64)).all())
+    # empirically every code shows up at these rates
+    assert set(np.unique(np.asarray(a))) <= set(faults_mod.FAULT_CODES)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(drop=-0.1)
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(drop=0.6, stale=0.6)
+    with pytest.raises(ValueError, match="max_faults"):
+        FaultPolicy(max_faults=0)
+    with pytest.raises(ValueError, match="window"):
+        FaultPolicy(window=0)
+
+
+def test_as_fault_codes_validation():
+    assert as_fault_codes([0, 1, 4], 3).dtype == jnp.int8
+    with pytest.raises(ValueError, match="1-D"):
+        as_fault_codes([[0, 1]])
+    with pytest.raises(ValueError, match="integer"):
+        as_fault_codes([0.5, 1.0])
+    with pytest.raises(ValueError, match="3 fault codes"):
+        as_fault_codes([0, 1, 2], 5)
+    with pytest.raises(ValueError, match="must lie in"):
+        as_fault_codes([0, 9])
+
+
+def test_faults_on_unarmed_state_raise(toy):
+    loss_fn, params, batches = toy
+    fed = _make_fed(loss_fn)                       # no fault_policy
+    s = fed.init_state(params)
+    with pytest.raises(ValueError, match="fault-armed"):
+        fed.run_rounds(s, batches, _round_robin(), jax.random.PRNGKey(1),
+                       faults=FaultPlan())
+    b = jax.tree_util.tree_map(lambda a: a[0], batches)
+    with pytest.raises(ValueError, match="fault-armed"):
+        fed.step(s, b, 0, jax.random.PRNGKey(2), fault_code=DROP)
+
+
+def test_checksums_cover_codes_and_scales(toy):
+    loss_fn, params, batches = toy
+    fed = _make_fed(loss_fn, fault_policy=POLICY, pack=True,
+                    bank_dtype="fp8")
+    s = fed.init_state(params)
+    base = bank_checksums(s.bank)
+    assert bool((base == s.faults.checksum).all())
+    tweaked = QuantBank(s.bank.codes,
+                        s.bank.scales.at[2].add(1.0),
+                        s.bank.residual, s.bank.codec)
+    assert int(bank_checksums(tweaked)[2]) != int(base[2])
+    # the shared EF residual belongs to no owner: not in any checksum
+    tweaked = QuantBank(s.bank.codes, s.bank.scales,
+                        s.bank.residual + 1.0, s.bank.codec)
+    assert bool((bank_checksums(tweaked) == base).all())
+
+
+# ------------------------- trace schedule validation -----------------------
+
+def test_trace_schedule_rejects_out_of_range_ids():
+    windows = (((0.0, 1.0),) * 3)
+    with pytest.raises(ValueError, match=r"\[3, 7\] out of range"):
+        AvailabilityTraceSchedule(windows, trace=(0, 3, 1, 7))
+    with pytest.raises(ValueError, match="empty trace"):
+        AvailabilityTraceSchedule(windows, trace=())
+
+
+def test_trace_schedule_replays_and_tiles():
+    sched = AvailabilityTraceSchedule(((0.0, 1.0),) * 3, trace=(2, 0, 1))
+    seq = sched.draw(jax.random.PRNGKey(0), 3, 7)
+    assert seq.tolist() == [2, 0, 1, 2, 0, 1, 2]
