@@ -1,0 +1,188 @@
+"""Paged owner bank (PR 9): resident-memory scaling + paging overhead.
+
+Two question families, both on the fused driver (engine-direct, no
+session layer, so the numbers isolate the pager itself):
+
+  * parity — flat bank vs paged bank (n_hot = N, every row permanently
+    resident) on the identical workload: rounds/sec of both and their
+    ratio. At full residency the paged engine's only extra cost is the
+    in-scan page-table lookup (searchsorted over n_hot ids) and the slot
+    indirection — the ratio is that price, and the regression guard pins
+    the absolute rounds/sec.
+  * paged_trace — a LARGE federation (10k owners always; 100k in the
+    full run) streamed from an availability trace through a TraceRing,
+    hot tier fixed at n_hot rows: rounds/sec with eviction/prefetch
+    traffic in the loop, plus `resident_bytes` (measured device bytes of
+    the paged row state), `flat_bytes` (what the dense (N, P) bank WOULD
+    cost — analytic, never allocated), and their ratio. The two rows
+    share one n_hot, so equal resident_bytes across owner scales is the
+    working-set claim made measurable; `resident_bytes_ratio` is
+    machine-independent and sits in check_regression's convergence-guard
+    table.
+
+Timings are interleaved medians (engines alternate within each rep) so
+machine noise hits both alike.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation.deep import (AsyncDPConfig, init_state_flat,
+                                   make_fused_rounds)
+from repro.federation.dp_sgd import PrivatizerConfig
+from repro.federation.paging import init_paged_state
+from repro.federation.schedules import TraceRing
+
+DIM, BATCH = 32, 8
+
+
+def _model():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (DIM, DIM)) / DIM,
+              "b": jnp.zeros((DIM,))}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+
+    return params, loss_fn
+
+
+def _batches(k):
+    return {"x": jax.random.normal(jax.random.PRNGKey(1), (k, BATCH, DIM)),
+            "y": jax.random.normal(jax.random.PRNGKey(2), (k, BATCH, DIM))}
+
+
+def _cfg(n_owners: int) -> AsyncDPConfig:
+    return AsyncDPConfig(
+        n_owners=n_owners, horizon=1 << 20,
+        epsilons=(2.0,) * n_owners, owner_sizes=(10_000,) * n_owners,
+        caps=(64,) * n_owners,
+        privatizer=PrivatizerConfig(xi=1.0, granularity="microbatch",
+                                    n_microbatches=1))
+
+
+def _paged_nbytes(state) -> int:
+    """Measured device bytes of the PAGED row state (hot rows + page
+    table). (N,)-scalar counters are excluded on both sides of the
+    ratio — they are identical between flat and paged by design."""
+    bank = state.bank
+    n = int(np.asarray(bank.hot_ids).nbytes)
+    hot = bank.hot
+    leaves = jax.tree_util.tree_leaves(hot)
+    return n + sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+
+def measure_parity(n_owners: int, n_rounds: int, reps: int = 9):
+    """Interleaved-median seconds for K fused rounds: flat bank vs the
+    paged bank at FULL residency (n_hot = n_owners) on the same
+    schedule, batches, and keys."""
+    params, loss_fn = _model()
+    cfg = _cfg(n_owners)
+    batches = _batches(n_rounds)
+    seq = jnp.asarray(
+        np.random.default_rng(5).integers(0, n_owners, n_rounds), jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(6), n_rounds)
+    run = jax.jit(make_fused_rounds(loss_fn, cfg))
+
+    s_flat = init_state_flat(params, cfg)
+    s_paged, pager = init_paged_state(params, cfg, n_hot=n_owners)
+    s_paged = pager.prefetch(s_paged, np.asarray(seq))
+
+    def once(state):
+        out, _ = run(state, batches, seq, keys)
+        jax.block_until_ready(out.theta_L.buf)
+        return out
+
+    once(s_flat), once(s_paged)              # compile both programs
+    t_flat, t_paged = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        once(s_flat)
+        t1 = time.perf_counter()
+        once(s_paged)
+        t2 = time.perf_counter()
+        t_flat.append(t1 - t0)
+        t_paged.append(t2 - t1)
+    return float(np.median(t_flat)), float(np.median(t_paged))
+
+
+def measure_trace(n_owners: int, n_hot: int, k_total: int, chunk: int,
+                  trace_len: int = 4096):
+    """Rounds/sec of the paged engine streaming an availability trace
+    through a TraceRing at a FIXED hot tier, prefetch/evict traffic
+    included. Returns (seconds, resident_bytes, flat_bytes, stats)."""
+    params, loss_fn = _model()
+    cfg = _cfg(n_owners)
+    rng = np.random.default_rng(7)
+    # zipf-flavored trace: a heavy head (the working set that stays
+    # resident) over a long uniform tail (the eviction traffic)
+    head = rng.integers(0, n_hot // 2, trace_len // 2)
+    tail = rng.integers(0, n_owners, trace_len - head.size)
+    trace = np.empty(trace_len, np.int64)
+    trace[0::2], trace[1::2] = head, tail
+    run = jax.jit(make_fused_rounds(loss_fn, cfg))
+    batches = _batches(chunk)
+    keys = jax.random.split(jax.random.PRNGKey(8), chunk)
+
+    state, pager = init_paged_state(params, cfg, n_hot=n_hot)
+    flat_bytes = n_owners * int(np.asarray(state.theta_L.buf).size) * 4
+    resident = _paged_nbytes(state)
+
+    def stream(state, ring, rounds):
+        for _ in range(rounds // chunk):
+            window = ring.window(chunk)
+            state = pager.prefetch(state, window)
+            state, _ = run(state, batches, ring.next(chunk), keys)
+        jax.block_until_ready(state.theta_L.buf)
+        return state
+
+    state = stream(state, TraceRing(trace, chunk=4 * chunk), chunk)  # warm
+    ring = TraceRing(trace, chunk=4 * chunk)
+    t0 = time.perf_counter()
+    stream(state, ring, k_total)
+    dt = time.perf_counter() - t0
+    return dt, resident, flat_bytes, dict(pager.stats)
+
+
+def run(fast: bool = False):
+    rows = []
+    # fixed row shapes in BOTH modes: CI's --fast rows must carry the
+    # same names as the committed full-run baseline or the rounds/sec
+    # guard only ever sees "new" rows; fast mode trims reps, not shape
+    n_par, k = 64, 192
+    reps = 5 if fast else 9
+    dt_f, dt_p = measure_parity(n_par, k, reps=reps)
+    rows.append((
+        f"paged_bank/parity/owners{n_par}/K{k}", dt_p / k * 1e6,
+        f"rounds_per_sec_flat={k / dt_f:.1f};"
+        f"rounds_per_sec_paged={k / dt_p:.1f};"
+        f"paged_vs_flat={dt_p / dt_f:.3f}x"))
+
+    # the 10k row always runs at the SAME shape (its name must match the
+    # committed baseline exactly, or the CI ratio guard only ever sees a
+    # "new" row); the 100k row is the full run's scaling point — same
+    # n_hot, so resident_bytes must not move while flat_bytes grows 10x
+    scales = [(10_000, 512)]
+    if not fast:
+        scales.append((100_000, 512))
+    for n_owners, k_total in scales:
+        n_hot, chunk = 256, 64
+        dt, resident, flat_bytes, stats = measure_trace(
+            n_owners, n_hot, k_total, chunk)
+        rows.append((
+            f"paged_bank/paged_trace/owners{n_owners}/hot{n_hot}/K{k_total}",
+            dt / k_total * 1e6,
+            f"rounds_per_sec_paged={k_total / dt:.1f};"
+            f"resident_bytes={resident};flat_bytes={flat_bytes};"
+            f"resident_bytes_ratio={resident / flat_bytes:.6f};"
+            f"loads={stats['loads']};evictions={stats['evictions']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -46,6 +46,10 @@ CONVERGENCE_GUARDS = (
     # ratio under injected faults is seed-deterministic
     ("BENCH_chaos.json", "guard_overhead", "overhead_ratio"),
     ("BENCH_chaos.json", "degradation_paper_f32", "loss_ratio"),
+    # paged owner bank (PR 9): resident device bytes over the analytic
+    # dense-bank cost — pure bytes math, machine-independent. A rise
+    # means hot-tier state grew or started scaling with N again.
+    ("BENCH_paged_bank.json", "paged_trace", "resident_bytes_ratio"),
 )
 
 

@@ -24,6 +24,9 @@ Mapping to the paper:
                            figure; guards the hybrid-serving example)
     bench_chaos         -> beyond-paper: fault-layer guard overhead +
                            convergence degradation under injected faults
+    bench_paged_bank    -> beyond-paper: paged owner bank — full-residency
+                           parity overhead + resident-bytes scaling on
+                           10k/100k-owner availability traces
     bench_kernels       -> kernel-path microbenches (CPU)
     bench_roofline      -> §Roofline table from the dry-run artifacts
 """
@@ -51,7 +54,8 @@ def main() -> None:
                             bench_collaboration, bench_comm_timing,
                             bench_convergence, bench_cop_surface,
                             bench_fused_rounds, bench_kernels,
-                            bench_roofline, bench_serving)
+                            bench_paged_bank, bench_roofline,
+                            bench_serving)
 
     suites = {
         "comm_timing": bench_comm_timing.run,
@@ -65,6 +69,7 @@ def main() -> None:
         "async_vs_sync": lambda: bench_async_vs_sync.run(fast=args.fast),
         "fused_rounds": lambda: bench_fused_rounds.run(fast=args.fast),
         "chaos": lambda: bench_chaos.run(fast=args.fast),
+        "paged_bank": lambda: bench_paged_bank.run(fast=args.fast),
     }
     from benchmarks.common import write_bench_json
 

@@ -159,13 +159,29 @@ def _grant_masks(fn: ast.AST) -> Set[str]:
     """Names bound from grant/guard sources and names derived from them.
 
     Sources: `.authorized(...)` ledger reads, `verify_row(...)` /
-    `finite_guard(...)` fault guards, and `.quarantined` flag reads."""
+    `finite_guard(...)` fault guards, `.quarantined` flag reads, and the
+    HIT bit of a page-residency lookup (`slot, hit = bank.lookup(i)` —
+    paged-bank writes masked on residency are lawful no-ops for
+    non-resident rows; the slot index itself vouches for nothing)."""
     masks: Set[str] = set()
     changed = True
     while changed:
         changed = False
         for node in _own_nodes(fn):
             if not isinstance(node, ast.Assign):
+                continue
+            # residency lookup: ONLY the second target of the 2-name
+            # unpack becomes a mask — `slot` must never launder a write
+            if (isinstance(node.value, ast.Call)
+                    and (call_name(node.value) or "").endswith(".lookup")
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Tuple)
+                    and len(node.targets[0].elts) == 2
+                    and isinstance(node.targets[0].elts[1], ast.Name)):
+                hit = node.targets[0].elts[1].id
+                if hit not in masks:
+                    masks.add(hit)
+                    changed = True
                 continue
             derived = False
             for sub in ast.walk(node.value):

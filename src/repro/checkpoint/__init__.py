@@ -1,5 +1,6 @@
-from repro.checkpoint.store import (latest_step, load_checkpoint,
+from repro.checkpoint.store import (MemmapRowStore, MemoryRowStore,
+                                    latest_step, load_checkpoint,
                                     load_manifest, save_checkpoint)
 
-__all__ = ["latest_step", "load_checkpoint", "load_manifest",
-           "save_checkpoint"]
+__all__ = ["MemmapRowStore", "MemoryRowStore", "latest_step",
+           "load_checkpoint", "load_manifest", "save_checkpoint"]

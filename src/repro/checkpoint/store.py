@@ -108,6 +108,131 @@ def load_manifest(directory: str, step: int) -> Dict:
         return msgpack.unpackb(f.read())
 
 
+# --------------------- per-row cold-tier stores -----------------------------
+# Backing tier for the paged owner bank (repro.federation.paging): a row
+# store holds one fixed-shape row per owner, supports PARTIAL read/write
+# (only the rows a prefetch touches move), and reads never-written rows
+# as a shared immutable `default` row — so a 10^5-owner bank costs O(rows
+# actually trained) host memory/disk instead of materializing N*P at
+# init. Round-trips are bit-exact for every storage dtype the bank uses
+# (f32/bf16/int8/fp8 via the same raw-bit views the checkpoints use).
+
+
+class MemoryRowStore:
+    """Dict-backed row store: rows live host-side as numpy copies."""
+
+    def __init__(self, n_rows: int, row_shape, dtype, default: np.ndarray):
+        default = np.asarray(default)
+        if tuple(default.shape) != tuple(row_shape):
+            raise ValueError(f"default row shape {default.shape} != "
+                             f"{tuple(row_shape)}")
+        self.n_rows = int(n_rows)
+        self.row_shape = tuple(row_shape)
+        self.dtype = np.dtype(dtype) if np.dtype(dtype).kind in "biufc" \
+            else default.dtype
+        self._default = np.ascontiguousarray(default)
+        self._default.setflags(write=False)
+        self._rows: Dict[int, np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    @property
+    def written(self) -> int:
+        """Rows that hold real (non-default) data."""
+        return len(self._rows)
+
+    def _check(self, ids: np.ndarray):
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_rows):
+            raise IndexError(
+                f"row ids out of range for {self.n_rows}-row store")
+
+    def read_rows(self, ids) -> np.ndarray:
+        """(k, *row_shape) stacked rows; unwritten ids read as default."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self._check(ids)
+        return np.stack([self._rows.get(int(i), self._default)
+                         for i in ids]) if ids.size else np.zeros(
+            (0,) + self.row_shape, self._default.dtype)
+
+    def write_rows(self, ids, values) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self._check(ids)
+        values = np.asarray(values)
+        if values.shape != (ids.size,) + self.row_shape:
+            raise ValueError(f"values shape {values.shape} != "
+                             f"{(ids.size,) + self.row_shape}")
+        for j, i in enumerate(ids):
+            self._rows[int(i)] = np.copy(values[j])
+
+
+class MemmapRowStore:
+    """Disk-backed row store on ``np.lib.format.open_memmap``.
+
+    The data file is created lazily as a sparse (n_rows, *row_shape)
+    .npy next to a written-row bitmap; unwritten rows read as the
+    `default` row, so creating a million-owner store costs no real disk
+    until rows are actually evicted to it. Extended dtypes (bf16/fp8)
+    are stored through the same-width uint view `_storage_view` uses, so
+    round-trips stay bit-exact.
+    """
+
+    def __init__(self, path: str, n_rows: int, row_shape, dtype,
+                 default: np.ndarray):
+        default = np.asarray(default)
+        if tuple(default.shape) != tuple(row_shape):
+            raise ValueError(f"default row shape {default.shape} != "
+                             f"{tuple(row_shape)}")
+        self.n_rows = int(n_rows)
+        self.row_shape = tuple(row_shape)
+        self._logical_dtype = default.dtype
+        self._default = np.ascontiguousarray(default)
+        self._default.setflags(write=False)
+        os.makedirs(path, exist_ok=True)
+        self._data_path = os.path.join(path, "rows.npy")
+        store_view = _storage_view(self._default)
+        self._store_dtype = store_view.dtype
+        self._mm = np.lib.format.open_memmap(
+            self._data_path, mode="w+",
+            dtype=self._store_dtype, shape=(self.n_rows,) + self.row_shape)
+        self._written = np.zeros((self.n_rows,), bool)
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    @property
+    def written(self) -> int:
+        return int(self._written.sum())
+
+    def _check(self, ids: np.ndarray):
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_rows):
+            raise IndexError(
+                f"row ids out of range for {self.n_rows}-row store")
+
+    def read_rows(self, ids) -> np.ndarray:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self._check(ids)
+        out = np.array(self._mm[ids])             # copy out of the map
+        out = out.view(self._logical_dtype)
+        unwritten = ~self._written[ids]
+        if unwritten.any():
+            out[unwritten] = self._default
+        return out
+
+    def write_rows(self, ids, values) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self._check(ids)
+        values = np.asarray(values)
+        if values.shape != (ids.size,) + self.row_shape:
+            raise ValueError(f"values shape {values.shape} != "
+                             f"{(ids.size,) + self.row_shape}")
+        self._mm[ids] = _storage_view(np.ascontiguousarray(values))
+        self._written[ids] = True
+
+    def flush(self) -> None:
+        self._mm.flush()
+
+
 def load_checkpoint(directory: str, step: int, like: Any) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated)."""
     d = os.path.join(directory, f"step_{step:08d}")

@@ -20,8 +20,8 @@ from repro.federation.faults import (CORRUPT_PAYLOAD, DROP, NONFINITE_GRAD,
                                      OK, STALE, FaultPlan, FaultPolicy,
                                      FaultState, as_fault_codes,
                                      bank_checksums, init_fault_state)
-from repro.federation.flatten import (BankCodec, FlatSpec, ParamFlat,
-                                      QuantBank, as_bank_codec,
+from repro.federation.flatten import (BankCodec, FlatSpec, PagedBank,
+                                      ParamFlat, QuantBank, as_bank_codec,
                                       flatten_spec, init_flat_bank,
                                       pack_params)
 from repro.federation.linear import (LinearProblem, Owner, fitness,
@@ -32,6 +32,7 @@ from repro.federation.mechanisms import (CappedRoundsMechanism,
                                          PaperMechanism, StrictMechanism,
                                          TreeMechanism, make_mechanism)
 from repro.federation.owners import DataOwner, federate_problem, with_budgets
+from repro.federation.paging import OwnerPager, init_paged_state
 from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
                                       capped_rounds, laplace_noise,
                                       laplace_noise_tree,
@@ -39,7 +40,8 @@ from repro.federation.privacy import (DeviceLedger, PrivacyAccountant,
                                       make_device_ledger)
 from repro.federation.schedules import (AvailabilityTraceSchedule,
                                         PoissonSchedule, ScheduleProtocol,
-                                        UniformSchedule, as_owner_seq,
-                                        auto_max_group, pack_groups,
+                                        TraceRing, UniformSchedule,
+                                        as_owner_seq, auto_max_group,
+                                        pack_groups,
                                         partition_conflict_free)
 from repro.federation.session import Federation

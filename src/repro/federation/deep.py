@@ -70,8 +70,8 @@ from repro.federation.config import paper_rates
 from repro.federation.dp_sgd import (PrivatizerConfig, _group_batch,
                                      private_grad, resolve_interpret)
 from repro.federation.faults import FaultPolicy, FaultState, init_fault_state
-from repro.federation.flatten import (FlatSpec, ParamFlat, QuantBank,
-                                      init_flat_bank, pack_params)
+from repro.federation.flatten import (FlatSpec, PagedBank, ParamFlat,
+                                      QuantBank, init_flat_bank, pack_params)
 from repro.federation.privacy import DeviceLedger, make_device_ledger
 
 
@@ -179,23 +179,32 @@ def init_tree_noise(cfg: AsyncDPConfig, theta_L) -> Optional[TreeNoise]:
     return TreeNoise(nodes, jnp.zeros((n,), jnp.int32), d)
 
 
-def _tree_row_of(tree: TreeNoise, owner_idx):
-    """Gather one owner's (depth, ...) node row + its leaf count."""
+def _tree_row_of(tree: TreeNoise, owner_idx, row_idx=None):
+    """Gather one owner's (depth, ...) node row + its leaf count.
+
+    `row_idx` separates the NODE-ROW index from the COUNTER index for
+    paged states (nodes page with the bank's hot slots, (n_hot, d, P);
+    the leaf counters stay a per-owner (N,) column). None keeps both
+    equal to `owner_idx` — the non-paged trace, verbatim."""
+    ridx = owner_idx if row_idx is None else row_idx
     row = jax.tree_util.tree_map(
-        lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
+        lambda leaf: jax.lax.dynamic_index_in_dim(leaf, ridx, 0,
                                                   keepdims=False),
         tree.nodes)
     return row, tree.counts[owner_idx]
 
 
-def _tree_write(tree: TreeNoise, new_row, owner_idx, grant=1) -> TreeNoise:
+def _tree_write(tree: TreeNoise, new_row, owner_idx, grant=1,
+                row_idx=None) -> TreeNoise:
     """Scatter an owner's node row back and bump its leaf counter by
     `grant` (0/1 — the fused driver passes the grant bit; callers mask
     `new_row` back to the old row on refusal, so a refused round is a
-    bit-exact no-op on the whole tree)."""
+    bit-exact no-op on the whole tree). `row_idx` (paged states) puts
+    the node scatter at the hot slot while the counter stays per-owner."""
+    ridx = owner_idx if row_idx is None else row_idx
     nodes = jax.tree_util.tree_map(
         lambda leaf, v: jax.lax.dynamic_update_index_in_dim(leaf, v,
-                                                            owner_idx, 0),
+                                                            ridx, 0),
         tree.nodes, new_row)
     return tree.replace(nodes=nodes,
                         counts=tree.counts.at[owner_idx].add(grant))
@@ -282,6 +291,10 @@ def _flat_shardings_for(mesh, theta_L, bank):
     if mesh is None or not isinstance(theta_L, ParamFlat):
         return None
     from repro.sharding.rules import flat_shardings
+    if isinstance(bank, PagedBank):
+        # hot rows shard like bank rows, n_hot standing in for N (the
+        # per-owner (N,) counters are replicated either way)
+        bank = bank.hot
     n = bank.n_owners if isinstance(bank, QuantBank) else bank.shape[0]
     return flat_shardings(mesh, n, theta_L.size)
 
@@ -298,9 +311,16 @@ def _constrain(x, sharding):
 
 def _constrain_bank(bank, sh):
     """Pin a bank to the mesh layout: dense (N, P) matrices to sh.bank;
-    quantized banks pin codes/scales/residual to their bundle entries."""
+    quantized banks pin codes/scales/residual to their bundle entries.
+    Paged banks pin the hot tier recursively (sh was built from n_hot)
+    and the page table to the replicated counter rule."""
     if sh is None:
         return bank
+    if isinstance(bank, PagedBank):
+        return bank.replace(
+            hot=_constrain_bank(bank.hot, sh),
+            hot_ids=jax.lax.with_sharding_constraint(bank.hot_ids,
+                                                     sh.ledger))
     if isinstance(bank, QuantBank):
         return QuantBank(
             jax.lax.with_sharding_constraint(bank.codes, sh.bank),
@@ -369,7 +389,7 @@ def _encode_bank_row(bank: QuantBank, value, key,
                       interpret=resolve_interpret(pcfg.kernel_interpret))
 
 
-def _quant_write(bank: QuantBank, new_i, owner_idx, key,
+def _quant_write(bank, new_i, owner_idx, key,
                  pcfg: PrivatizerConfig, ok=None) -> QuantBank:
     """Scatter a granted owner update into a quantized bank.
 
@@ -378,7 +398,11 @@ def _quant_write(bank: QuantBank, new_i, owner_idx, key,
     residual. `ok` (a traced bool, fused-driver refusal masking) selects
     between the new row and the owner's untouched codes/scales — and
     leaves the residual alone on refusal, so a refused round stays a
-    bit-exact no-op on the whole bank."""
+    bit-exact no-op on the whole bank. A PagedBank recurses on its hot
+    tier — `owner_idx` is then the HOT SLOT the caller resolved."""
+    if isinstance(bank, PagedBank):
+        return bank.replace(hot=_quant_write(bank.hot, new_i, owner_idx,
+                                             key, pcfg, ok=ok))
     codes_n, scales_n, err = _encode_bank_row(bank, new_i + bank.residual,
                                               key, pcfg)
     if ok is None:
@@ -482,7 +506,12 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         return new_L, new_i, metrics, zeta
 
     def compute(theta_L, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None):
+                tree_row=None, tree_count=None, row_idx=None):
+        if isinstance(bank, PagedBank):
+            raise TypeError(
+                "PagedBank needs the flat engine (paging.init_paged_state "
+                "builds ParamFlat states); the pytree path cannot page")
+        del row_idx                 # pytree banks index rows by owner
         theta_i = jax.tree_util.tree_map(
             lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
                                                    keepdims=False),
@@ -617,15 +646,20 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     pcfg = cfg.privatizer
 
     def compute(theta_L: ParamFlat, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None):
+                tree_row=None, tree_count=None, row_idx=None):
         spec = theta_L.spec
         sh = _flat_shardings_for(mesh, theta_L, bank)
         d = cfg.tree_depth
         tree_on = tree_row is not None and d          # static (trace-time)
-        if isinstance(bank, QuantBank):
-            theta_i = _decode_bank_row(bank, owner_idx, pcfg)      # (P,)
+        # paged banks gather from the hot tier at the RESOLVED slot;
+        # row_idx=None + a non-paged bank leaves the trace verbatim
+        # (ridx IS owner_idx). Scales/weights always index by owner.
+        hot = bank.hot if isinstance(bank, PagedBank) else bank
+        ridx = owner_idx if row_idx is None else row_idx
+        if isinstance(hot, QuantBank):
+            theta_i = _decode_bank_row(hot, ridx, pcfg)            # (P,)
         else:
-            theta_i = jax.lax.dynamic_index_in_dim(bank, owner_idx, 0,
+            theta_i = jax.lax.dynamic_index_in_dim(hot, ridx, 0,
                                                    keepdims=False)  # (P,)
         if sh is not None:
             # the gathered row keeps the bank's P-axis layout (== theta's),
@@ -731,17 +765,21 @@ def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner, mesh=mesh)
 
     def compute(theta_L, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None):
+                tree_row=None, tree_count=None, row_idx=None):
         if isinstance(theta_L, ParamFlat):
             return flat_c(theta_L, bank, batch, owner_idx, key,
-                          tree_row=tree_row, tree_count=tree_count)
+                          tree_row=tree_row, tree_count=tree_count,
+                          row_idx=row_idx)
         return tree_c(theta_L, bank, batch, owner_idx, key,
-                      tree_row=tree_row, tree_count=tree_count)
+                      tree_row=tree_row, tree_count=tree_count,
+                      row_idx=row_idx)
 
     return compute
 
 
 def _write_bank(bank, value, owner_idx):
+    if isinstance(bank, PagedBank):    # paged: callers pass the HOT SLOT
+        return bank.replace(hot=_write_bank(bank.hot, value, owner_idx))
     if isinstance(bank, jax.Array):    # flat (N, P) bank: one row scatter
         return jax.lax.dynamic_update_index_in_dim(
             bank, value.astype(bank.dtype), owner_idx, 0)
@@ -749,6 +787,26 @@ def _write_bank(bank, value, owner_idx):
         lambda leaf, v: jax.lax.dynamic_update_index_in_dim(
             leaf, v.astype(leaf.dtype), owner_idx, 0),
         bank, value)
+
+
+def _bank_slot(bank, owner_idx):
+    """(row_idx, hit) for one owner contact.
+
+    Paged banks resolve owner -> hot slot in-graph via the device page
+    table (see PagedBank.lookup); the drivers fold `hit` into their
+    grant mask, so a non-resident owner is a bit-exact masked no-op.
+    Non-paged banks index rows BY OWNER: (None, None) keeps every
+    downstream trace verbatim (no lookup op, unconditional grant).
+    """
+    if isinstance(bank, PagedBank):
+        return bank.lookup(owner_idx)
+    return None, None
+
+
+def _bank_is_quant(bank) -> bool:
+    """Static: does this bank store quantized rows (possibly paged)?"""
+    hot = bank.hot if isinstance(bank, PagedBank) else bank
+    return isinstance(hot, QuantBank)
 
 
 def _require_fault_policy(cfg: AsyncDPConfig, state: AsyncDPState):
@@ -762,31 +820,39 @@ def _require_fault_policy(cfg: AsyncDPConfig, state: AsyncDPState):
 
 
 def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
-                   batch, owner_idx, key, fcode, answered, sh):
+                   batch, owner_idx, key, fcode, answered, sh,
+                   row_idx=None):
     """One fault-guarded round, shared by the per-round step and the
     fused scan (scalar `owner_idx`/`fcode`).
 
     `answered` is the caller's grant bit (ledger-authorized, not
-    quarantined, not dropped). The guards verify the owner's resident
-    payload against its stored checksum, NaN-poison the update when the
-    round carries NONFINITE_GRAD, and reject stale replays; a rejected
-    round is a bit-exact no-op on theta/bank/tree (same jnp.where
-    masking as ledger refusal) and its rejection bit comes back as
+    quarantined, not dropped — and, for paged banks, resident: the
+    caller folds the page-table `hit` in, so a miss reaches here
+    already masked). The guards verify the owner's resident payload
+    against its stored checksum, NaN-poison the update when the round
+    carries NONFINITE_GRAD, and reject stale replays; a rejected round
+    is a bit-exact no-op on theta/bank/tree (same jnp.where masking as
+    ledger refusal) and its rejection bit comes back as
     `metrics["faulted"]` — epsilon for it was already charged at
-    response time (see faults module docstring).
+    response time (see faults module docstring). `row_idx` (paged
+    banks) is the resolved hot slot every row gather/scatter uses,
+    while checksum/counter columns stay per-owner.
 
     Returns (theta_L, bank, tree, faults, metrics, apply, guard_rej).
     """
     fs = state.faults
     tr = state.tree
-    row, cnt = (None, None) if tr is None else _tree_row_of(tr, owner_idx)
+    widx = owner_idx if row_idx is None else row_idx
+    row, cnt = (None, None) if tr is None else _tree_row_of(tr, owner_idx,
+                                                            row_idx)
     # payload integrity is judged on the PRE-ROUND bank (what the round
     # actually consumed), before any write
     payload_ok = _faults.verify_row(fs.checksum, state.bank, owner_idx,
-                                    fcode == _faults.CORRUPT_PAYLOAD)
+                                    fcode == _faults.CORRUPT_PAYLOAD,
+                                    row_idx=row_idx)
     new_L, new_i, theta_i, metrics, new_row = compute(
         state.theta_L, state.bank, batch, owner_idx, key,
-        tree_row=row, tree_count=cnt)
+        tree_row=row, tree_count=cnt, row_idx=row_idx)
     new_i = _faults.inject_nonfinite(new_i, fcode == _faults.NONFINITE_GRAD)
     guard_ok = (payload_ok & _faults.finite_guard((new_i, new_L))
                 & (fcode != _faults.STALE))
@@ -794,22 +860,22 @@ def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
     guard_rej = answered & ~guard_ok
     theta_L = jax.tree_util.tree_map(
         lambda nl, ol: jnp.where(apply, nl, ol), new_L, state.theta_L)
-    if isinstance(state.bank, QuantBank):
+    if _bank_is_quant(state.bank):
         # same key as compute() by contract: _quant_write folds in
         # _CODEC_SALT, so SR bits never touch the privacy stream
-        bank = _quant_write(state.bank, new_i, owner_idx, key,  # dpcheck: ignore[DPC105]
+        bank = _quant_write(state.bank, new_i, widx, key,  # dpcheck: ignore[DPC105]
                             cfg.privatizer, ok=apply)
     else:
         bank = _write_bank(
             state.bank,
             jax.tree_util.tree_map(lambda a, b: jnp.where(apply, a, b),
                                    new_i, theta_i),
-            owner_idx)
+            widx)
     if tr is not None:
         masked_row = jax.tree_util.tree_map(
             lambda a, b: jnp.where(apply, a, b), new_row, row)
         tr = _tree_write(tr, masked_row, owner_idx,
-                         grant=apply.astype(jnp.int32))
+                         grant=apply.astype(jnp.int32), row_idx=row_idx)
     if sh is not None:
         theta_L = _constrain(theta_L, sh.theta)
         bank = _constrain_bank(bank, sh)
@@ -817,7 +883,8 @@ def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
     # re-derive the stored checksum from the POST-WRITE row; masked
     # rounds drop the scatter, so the stored sum stays in lockstep with
     # the row it describes
-    fs = _faults.update_checksum(fs, bank, owner_idx, apply)
+    fs = _faults.update_checksum(fs, bank, owner_idx, apply,
+                                 row_idx=row_idx)
     metrics = dict(metrics)
     metrics.update(faulted=guard_rej)
     return theta_L, bank, tr, fs, metrics, apply, guard_rej
@@ -844,18 +911,22 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
              fault_code=None) -> Tuple[AsyncDPState, Dict]:
         tr = _require_tree(cfg, state)
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        slot, hit = _bank_slot(state.bank, owner_idx)
         if state.faults is not None:
             # fault-armed state: host-side the session has already
             # handled DROP and quarantine (neither reaches the step), so
-            # the round is answered and only the in-graph guards decide
+            # the round is answered and only the in-graph guards decide.
+            # Paged states additionally gate on page residency — a miss
+            # (the pager failed its prefetch contract) is a masked no-op
+            answered = jnp.bool_(True) if hit is None else hit
             policy = _require_fault_policy(cfg, state)
             fcode = (jnp.int8(_faults.OK) if fault_code is None
                      else jnp.asarray(fault_code, jnp.int8))
             theta_L, bank, tr, fs, metrics, apply, guard_rej = \
                 _guarded_round(compute, cfg, state, batch, owner_idx, key,
-                               fcode, jnp.bool_(True), sh)
+                               fcode, answered, sh, row_idx=slot)
             fs = _faults.fault_tick(fs, owner_idx, guard_rej, policy,
-                                    active=jnp.bool_(True))
+                                    active=answered)
             return AsyncDPState(theta_L, bank,
                                 state.step + apply.astype(jnp.int32),
                                 state.ledger, tr, fs), metrics
@@ -864,26 +935,44 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
                 "fault injection needs a fault-armed state; build the "
                 "config with fault_policy=FaultPolicy(...)")
         row, cnt = (None, None) if tr is None else _tree_row_of(tr,
-                                                                owner_idx)
-        new_L, new_i, _, metrics, new_row = compute(
+                                                                owner_idx,
+                                                                slot)
+        new_L, new_i, theta_i, metrics, new_row = compute(
             state.theta_L, state.bank, batch, owner_idx, key,
-            tree_row=row, tree_count=cnt)
-        if isinstance(state.bank, QuantBank):
+            tree_row=row, tree_count=cnt, row_idx=slot)
+        if hit is not None:
+            # paged, host-authorized: no ledger in-graph, so residency is
+            # the only grant bit — a miss masks every write bit-exactly
+            new_L = jax.tree_util.tree_map(
+                lambda nl, ol: jnp.where(hit, nl, ol), new_L,
+                state.theta_L)
+        widx = owner_idx if slot is None else slot
+        if _bank_is_quant(state.bank):
             # same key as compute() by contract: _quant_write folds in
             # _CODEC_SALT, so SR bits never touch the privacy stream
-            bank = _quant_write(state.bank, new_i, owner_idx, key,  # dpcheck: ignore[DPC105]
-                                cfg.privatizer)
+            bank = _quant_write(state.bank, new_i, widx, key,  # dpcheck: ignore[DPC105]
+                                cfg.privatizer, ok=hit)
         else:
-            bank = _write_bank(state.bank, new_i, owner_idx)
+            value = (new_i if hit is None
+                     else jnp.where(hit, new_i, theta_i))
+            bank = _write_bank(state.bank, value, widx)
         if tr is not None:
             # host-authorized path: the round always counts (refusal
-            # happens before step() is called), so the leaf always lands
-            tr = _tree_write(tr, new_row, owner_idx)
+            # happens before step() is called), so the leaf lands unless
+            # a paged state missed
+            if hit is None:
+                tr = _tree_write(tr, new_row, owner_idx)
+            else:
+                masked_row = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(hit, a, b), new_row, row)
+                tr = _tree_write(tr, masked_row, owner_idx,
+                                 grant=hit.astype(jnp.int32), row_idx=slot)
         if sh is not None:
             new_L = _constrain(new_L, sh.theta)
             bank = _constrain_bank(bank, sh)
             tr = _constrain_tree(tr, sh)
-        return AsyncDPState(new_L, bank, state.step + 1,
+        bump = 1 if hit is None else hit.astype(jnp.int32)
+        return AsyncDPState(new_L, bank, state.step + bump,
                             state.ledger, tr, state.faults), metrics
 
     return step
@@ -925,31 +1014,43 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
         led = state.ledger
         tr = state.tree
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        slot, hit = _bank_slot(state.bank, owner_idx)
         ok = led.authorized(owner_idx)
+        if hit is not None:
+            # paged: residency folds into the grant BEFORE the ledger
+            # update — a miss spends nothing and lands in `refused`
+            # (lawful: no epsilon without a response; in a correctly
+            # prefetched session misses never occur, so a nonzero
+            # refused count under an authorized schedule flags a pager
+            # bug, not a privacy event)
+            ok = ok & hit
         oki = ok.astype(jnp.int32)
         row, cnt = (None, None) if tr is None else _tree_row_of(tr,
-                                                                owner_idx)
+                                                                owner_idx,
+                                                                slot)
         new_L, new_i, theta_i, metrics, new_row = compute(
             state.theta_L, state.bank, batch, owner_idx, key,
-            tree_row=row, tree_count=cnt)
+            tree_row=row, tree_count=cnt, row_idx=slot)
         theta_L = jax.tree_util.tree_map(
             lambda nl, ol: jnp.where(ok, nl, ol), new_L, state.theta_L)
-        if isinstance(state.bank, QuantBank):
-            bank = _quant_write(state.bank, new_i, owner_idx, key,
+        widx = owner_idx if slot is None else slot
+        if _bank_is_quant(state.bank):
+            bank = _quant_write(state.bank, new_i, widx, key,
                                 cfg.privatizer, ok=ok)
         else:
             bank = _write_bank(
                 state.bank,
                 jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b),
                                        new_i, theta_i),
-                owner_idx)
+                widx)
         if tr is not None:
             # refusal masking: the old row is written back and the leaf
             # counter bumps by the grant bit, so a refused round is a
             # bit-exact no-op on the tree (same contract as the bank)
             masked_row = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(ok, a, b), new_row, row)
-            tr = _tree_write(tr, masked_row, owner_idx, grant=oki)
+            tr = _tree_write(tr, masked_row, owner_idx, grant=oki,
+                             row_idx=slot)
         if sh is not None:
             theta_L = _constrain(theta_L, sh.theta)
             bank = _constrain_bank(bank, sh)
@@ -974,13 +1075,20 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
         fs = state.faults
         policy = cfg.fault_policy
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
+        slot, hit = _bank_slot(state.bank, owner_idx)
         quar = fs.quarantined[owner_idx]
         led_auth = led.authorized(owner_idx)
+        if hit is not None:
+            # paged: a page miss refuses like budget exhaustion (spends
+            # nothing, counts in `refused` unless quarantined) — see the
+            # plain body
+            led_auth = led_auth & hit
         auth = led_auth & ~quar
         is_drop = fcode == _faults.DROP
         answered = auth & ~is_drop
         theta_L, bank, tr, fs, metrics, apply, guard_rej = _guarded_round(
-            compute, cfg, state, batch, owner_idx, key, fcode, answered, sh)
+            compute, cfg, state, batch, owner_idx, key, fcode, answered, sh,
+            row_idx=slot)
         ledger = led.replace(
             spent=led.spent.at[owner_idx].add(answered.astype(jnp.int32)),
             refused=led.refused.at[owner_idx].add(
@@ -1080,35 +1188,86 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
     compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
     n_owners = cfg.n_owners
 
+    def vmap_rounds(theta_L, bank, tr, batch_g, owners, keys_g, slots):
+        """vmapped round compute over the group members. `slots` is the
+        per-member hot-slot vector for paged banks, None otherwise (the
+        non-paged call chain is verbatim — no extra traced operand).
+        Returns (new_L, new_i, theta_i, metrics, new_rows, rows_t)."""
+        if tr is not None:
+            # distinct owners per group (the partition's invariant), so
+            # the per-member tree rows are disjoint reads AND writes
+            if slots is None:
+                rows_t, cnts = jax.vmap(
+                    lambda o: _tree_row_of(tr, o))(owners)
+                new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                    lambda b, o, k, r, c: compute(theta_L, bank, b, o, k,
+                                                  tree_row=r,
+                                                  tree_count=c))(
+                        batch_g, owners, keys_g, rows_t, cnts)
+            else:
+                rows_t, cnts = jax.vmap(
+                    lambda o, s: _tree_row_of(tr, o, s))(owners, slots)
+                new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                    lambda b, o, k, r, c, s: compute(
+                        theta_L, bank, b, o, k, tree_row=r, tree_count=c,
+                        row_idx=s))(batch_g, owners, keys_g, rows_t,
+                                    cnts, slots)
+            return new_L, new_i, theta_i, metrics, new_rows, rows_t
+        if slots is None:
+            new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                lambda b, o, k: compute(theta_L, bank, b, o, k))(
+                    batch_g, owners, keys_g)
+        else:
+            new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                lambda b, o, k, s: compute(theta_L, bank, b, o, k,
+                                           row_idx=s))(
+                    batch_g, owners, keys_g, slots)
+        return new_L, new_i, theta_i, metrics, None, None
+
+    def scatter_indices(bank, owners, valid, slots, hit_g):
+        """(idx_w, idx_c): the row-scatter and safe-gather index vectors.
+
+        Non-paged banks index rows by owner (pad -> the n_owners drop
+        sentinel). Paged banks index by hot slot, and members that
+        MISSED drop from the scatter entirely: distinct owners can clamp
+        to the SAME slot on a miss, so the write-own-row-back idiom
+        could collide — dropping is the same bit-exact no-op."""
+        if slots is None:
+            return (jnp.where(valid, owners, n_owners),
+                    jnp.where(valid, owners, 0))
+        resident = valid & hit_g
+        return (jnp.where(resident, slots, bank.n_hot),
+                jnp.where(resident, slots, 0))
+
     def body(state: AsyncDPState, xs):
         batch_g, owners, keys_g, valid = xs
         led = state.ledger
         tr = state.tree
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         theta_L, bank = state.theta_L, state.bank
-        ok = jax.vmap(led.authorized)(owners) & valid          # (G,)
+        if isinstance(bank, PagedBank):
+            slots, hit_g = jax.vmap(bank.lookup)(owners)       # (G,)
+            # residency folds into the grant BEFORE the ledger update —
+            # a miss spends nothing and lands in `refused` (see the
+            # fused driver's body)
+            ok = jax.vmap(led.authorized)(owners) & valid & hit_g
+        else:
+            slots, hit_g = None, None
+            ok = jax.vmap(led.authorized)(owners) & valid      # (G,)
         oki = ok.astype(jnp.int32)
 
         # fully-invalid groups are jit-cache shape padding only; the
         # dynamic trip count in run() means they never reach this body,
         # so every executed group has at least one valid member
-        if tr is not None:
-            # distinct owners per group (the partition's invariant), so
-            # the per-member tree rows are disjoint reads AND writes
-            rows_t, cnts = jax.vmap(lambda o: _tree_row_of(tr, o))(owners)
-            new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
-                lambda b, o, k, r, c: compute(theta_L, bank, b, o, k,
-                                              tree_row=r, tree_count=c))(
-                    batch_g, owners, keys_g, rows_t, cnts)
-        else:
-            new_L, new_i, theta_i, metrics, _ = jax.vmap(
-                lambda b, o, k: compute(theta_L, bank, b, o, k))(
-                    batch_g, owners, keys_g)
+        new_L, new_i, theta_i, metrics, new_rows, rows_t = vmap_rounds(
+            theta_L, bank, tr, batch_g, owners, keys_g, slots)
 
         owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
+        idx_w, idx_c = scatter_indices(bank, owners, valid, slots, hit_g)
         n_ok = jnp.sum(ok.astype(jnp.float32))
         denom = jnp.maximum(n_ok, 1.0)
-        if isinstance(bank, QuantBank):
+        hot = bank.hot if slots is not None else bank
+        if isinstance(hot, QuantBank):
             # error feedback under member-parallelism: members chain the
             # shared residual IN ROUND ORDER (groups are consecutive runs
             # of the schedule), exactly as the fused scan would — encode
@@ -1117,27 +1276,28 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             # driver; a fully-refused group leaves the residual untouched.
             def _ef_chain(res, inp):
                 v, k, grant = inp
-                c_n, s_n, err = _encode_bank_row(bank, v + res, k,
+                c_n, s_n, err = _encode_bank_row(hot, v + res, k,
                                                  cfg.privatizer)
                 return jnp.where(grant, err, res), (c_n, s_n)
 
             residual, (codes_n, scales_n) = jax.lax.scan(
-                _ef_chain, bank.residual, (new_i, keys_g, ok))
-            owners_c = jnp.where(valid, owners, 0)             # safe gather
+                _ef_chain, hot.residual, (new_i, keys_g, ok))
             codes_w = jnp.where(_member_mask(ok, codes_n), codes_n,
-                                bank.codes[owners_c])
+                                hot.codes[idx_c])
             scales_w = jnp.where(ok[:, None], scales_n,
-                                 bank.scales[owners_c])
-            bank = QuantBank(
-                bank.codes.at[owners_w].set(codes_w, mode="drop"),
-                bank.scales.at[owners_w].set(scales_w, mode="drop"),
-                residual, bank.codec)
+                                 hot.scales[idx_c])
+            new_hot = QuantBank(
+                hot.codes.at[idx_w].set(codes_w, mode="drop"),
+                hot.scales.at[idx_w].set(scales_w, mode="drop"),
+                residual, hot.codec)
         else:
             # refused/padded members write their own row back unchanged
             rows = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(_member_mask(ok, a), a, b),
                 new_i, theta_i)
-            bank = _write_bank_rows(bank, rows, owners_w)
+            new_hot = _write_bank_rows(hot, rows, idx_w)
+        bank = (bank.replace(hot=new_hot) if slots is not None
+                else new_hot)
 
         if tr is not None:
             # refused/padded members scatter their own row back unchanged
@@ -1145,7 +1305,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
                 lambda a, b: jnp.where(_member_mask(ok, a), a, b),
                 new_rows, rows_t)
             nodes = jax.tree_util.tree_map(
-                lambda leaf, v: leaf.at[owners_w].set(v, mode="drop"),
+                lambda leaf, v: leaf.at[idx_w].set(v, mode="drop"),
                 tr.nodes, rows_m)
             tr = tr.replace(nodes=nodes,
                             counts=tr.counts.at[owners_w].add(
@@ -1188,24 +1348,29 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         theta_L, bank = state.theta_L, state.bank
         led_auth = jax.vmap(led.authorized)(owners)
+        if isinstance(bank, PagedBank):
+            slots, hit_g = jax.vmap(bank.lookup)(owners)       # (G,)
+            # a page miss refuses like budget exhaustion (see the fused
+            # driver's faulted body)
+            led_auth = led_auth & hit_g
+        else:
+            slots, hit_g = None, None
         quar = fs.quarantined[owners]
         auth = led_auth & ~quar & valid                        # (G,)
         is_drop = fcodes_g == _faults.DROP
         answered = auth & ~is_drop
-        payload_ok = jax.vmap(
-            lambda o, c: _faults.verify_row(fs.checksum, bank, o, c))(
-            owners, fcodes_g == _faults.CORRUPT_PAYLOAD)
-
-        if tr is not None:
-            rows_t, cnts = jax.vmap(lambda o: _tree_row_of(tr, o))(owners)
-            new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
-                lambda b, o, k, r, c: compute(theta_L, bank, b, o, k,
-                                              tree_row=r, tree_count=c))(
-                    batch_g, owners, keys_g, rows_t, cnts)
+        if slots is None:
+            payload_ok = jax.vmap(
+                lambda o, c: _faults.verify_row(fs.checksum, bank, o, c))(
+                owners, fcodes_g == _faults.CORRUPT_PAYLOAD)
         else:
-            new_L, new_i, theta_i, metrics, _ = jax.vmap(
-                lambda b, o, k: compute(theta_L, bank, b, o, k))(
-                    batch_g, owners, keys_g)
+            payload_ok = jax.vmap(
+                lambda o, c, s: _faults.verify_row(fs.checksum, bank, o,
+                                                   c, row_idx=s))(
+                owners, fcodes_g == _faults.CORRUPT_PAYLOAD, slots)
+
+        new_L, new_i, theta_i, metrics, new_rows, rows_t = vmap_rounds(
+            theta_L, bank, tr, batch_g, owners, keys_g, slots)
         new_i = _faults.inject_nonfinite(
             new_i, fcodes_g == _faults.NONFINITE_GRAD)
         finite = jax.vmap(_faults.finite_guard)((new_i, new_L))
@@ -1214,42 +1379,45 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         guard_rej = answered & ~guard_ok
 
         owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
+        idx_w, idx_c = scatter_indices(bank, owners, valid, slots, hit_g)
         n_ok = jnp.sum(apply.astype(jnp.float32))
         denom = jnp.maximum(n_ok, 1.0)
-        if isinstance(bank, QuantBank):
+        hot = bank.hot if slots is not None else bank
+        if isinstance(hot, QuantBank):
             # same residual chain as the plain body; a NaN-poisoned
             # member never advances the carry (its `apply` is False by
             # the finite guard), so poison cannot leak into the shared
             # residual
             def _ef_chain(res, inp):
                 v, k, grant = inp
-                c_n, s_n, err = _encode_bank_row(bank, v + res, k,
+                c_n, s_n, err = _encode_bank_row(hot, v + res, k,
                                                  cfg.privatizer)
                 return jnp.where(grant, err, res), (c_n, s_n)
 
             residual, (codes_n, scales_n) = jax.lax.scan(
-                _ef_chain, bank.residual, (new_i, keys_g, apply))
-            owners_c = jnp.where(valid, owners, 0)             # safe gather
+                _ef_chain, hot.residual, (new_i, keys_g, apply))
             codes_w = jnp.where(_member_mask(apply, codes_n), codes_n,
-                                bank.codes[owners_c])
+                                hot.codes[idx_c])
             scales_w = jnp.where(apply[:, None], scales_n,
-                                 bank.scales[owners_c])
-            bank = QuantBank(
-                bank.codes.at[owners_w].set(codes_w, mode="drop"),
-                bank.scales.at[owners_w].set(scales_w, mode="drop"),
-                residual, bank.codec)
+                                 hot.scales[idx_c])
+            new_hot = QuantBank(
+                hot.codes.at[idx_w].set(codes_w, mode="drop"),
+                hot.scales.at[idx_w].set(scales_w, mode="drop"),
+                residual, hot.codec)
         else:
             rows = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(_member_mask(apply, a), a, b),
                 new_i, theta_i)
-            bank = _write_bank_rows(bank, rows, owners_w)
+            new_hot = _write_bank_rows(hot, rows, idx_w)
+        bank = (bank.replace(hot=new_hot) if slots is not None
+                else new_hot)
 
         if tr is not None:
             rows_m = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(_member_mask(apply, a), a, b),
                 new_rows, rows_t)
             nodes = jax.tree_util.tree_map(
-                lambda leaf, v: leaf.at[owners_w].set(v, mode="drop"),
+                lambda leaf, v: leaf.at[idx_w].set(v, mode="drop"),
                 tr.nodes, rows_m)
             tr = tr.replace(nodes=nodes,
                             counts=tr.counts.at[owners_w].add(
@@ -1265,7 +1433,8 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             theta_L = _constrain(theta_L, sh.theta)
             bank = _constrain_bank(bank, sh)
             tr = _constrain_tree(tr, sh)
-        fs = _faults.update_checksum(fs, bank, owners, apply)
+        fs = _faults.update_checksum(fs, bank, owners, apply,
+                                     row_idx=slots)
         ledger = led.replace(
             spent=led.spent.at[owners_w].add(
                 answered.astype(jnp.int32), mode="drop"),

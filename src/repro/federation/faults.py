@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.federation.flatten import QuantBank
+from repro.federation.flatten import PagedBank, QuantBank
 
 # Per-round fault codes (int8 in traced code, plain ints here so host
 # and device comparisons both work).
@@ -167,8 +167,14 @@ def row_checksum(bank, owner_idx) -> jax.Array:
 
     Covers QuantBank codes + per-block scales (the shared EF residual is
     owned by no one and excluded), a flat (N, P) row, or every leaf row
-    of a pytree bank. vmap-safe: index with dynamic_index_in_dim.
+    of a pytree bank. For a PagedBank, `owner_idx` must be the HOT SLOT
+    (the caller resolves owner -> slot via ``bank.lookup``); the sum
+    covers the slot's resident payload, whose bits round-trip the cold
+    tier exactly, so a row keeps its checksum across evict/refetch.
+    vmap-safe: index with dynamic_index_in_dim.
     """
+    if isinstance(bank, PagedBank):
+        return row_checksum(bank.hot, owner_idx)
     if isinstance(bank, QuantBank):
         c = jax.lax.dynamic_index_in_dim(bank.codes, owner_idx, 0,
                                          keepdims=False)
@@ -199,6 +205,17 @@ def bank_checksums(bank) -> jax.Array:
 
 
 def init_fault_state(bank, n_owners: int) -> FaultState:
+    if isinstance(bank, PagedBank):
+        # at init every row — hot, cold, and never-materialized — equals
+        # the default row (paging.init_paged_state's contract), so the
+        # (N,) checksum column is one row's sum tiled, never an O(N*P)
+        # materialization
+        one = row_checksum(bank.hot, jnp.int32(0))
+        return FaultState(
+            checksum=jnp.broadcast_to(one, (n_owners,)).astype(jnp.int32),
+            win_faults=jnp.zeros((n_owners,), jnp.int32),
+            contacts=jnp.zeros((n_owners,), jnp.int32),
+            quarantined=jnp.zeros((n_owners,), jnp.bool_))
     # distinct zero buffers per field — donated states may not alias leaves
     return FaultState(
         checksum=bank_checksums(bank),
@@ -207,14 +224,21 @@ def init_fault_state(bank, n_owners: int) -> FaultState:
         quarantined=jnp.zeros((n_owners,), jnp.bool_))
 
 
-def verify_row(checksum, bank, owner_idx, corrupt) -> jax.Array:
+def verify_row(checksum, bank, owner_idx, corrupt,
+               row_idx=None) -> jax.Array:
     """bool: does the owner's resident row match its stored checksum?
 
     ``corrupt`` (CORRUPT_PAYLOAD this round) offsets the *observed* sum
     by a fixed nonzero delta — detection is guaranteed and the payload
     is untouched, so a masked-out round stays bit-exact.
+
+    ``row_idx`` separates the PAYLOAD index from the CHECKSUM-COLUMN
+    index for paged banks: the observed sum reads the hot slot, the
+    stored sum lives in the per-owner (N,) column. None (flat banks)
+    keeps both equal to ``owner_idx``.
     """
-    obs = row_checksum(bank, owner_idx) + jnp.where(
+    ridx = owner_idx if row_idx is None else row_idx
+    obs = row_checksum(bank, ridx) + jnp.where(
         corrupt, jnp.int32(CORRUPT_CSUM_DELTA), jnp.int32(0))
     return obs == checksum[owner_idx]
 
@@ -245,20 +269,23 @@ def finite_guard(tree) -> jax.Array:
     return ok
 
 
-def update_checksum(fs: FaultState, bank, owner_idx, apply) -> FaultState:
+def update_checksum(fs: FaultState, bank, owner_idx, apply,
+                    row_idx=None) -> FaultState:
     """Re-derive the stored checksum from the POST-WRITE bank row.
 
     Scatter-dropped where ``apply`` is False, so a masked round leaves
     the stored checksum (and therefore future verification) untouched.
     Handles a scalar owner (step / fused) or a (G,) group (vmapped
     members; owners within a group are distinct, so scatters are
-    disjoint).
+    disjoint). ``row_idx`` (paged banks) reads the payload from the hot
+    slot while the stored sum scatters into the per-owner column.
     """
     n = fs.checksum.shape[0]
+    ridx = owner_idx if row_idx is None else row_idx
     if np.ndim(owner_idx) == 0:
-        new = row_checksum(bank, owner_idx)
+        new = row_checksum(bank, ridx)
     else:
-        new = jax.vmap(lambda o: row_checksum(bank, o))(owner_idx)
+        new = jax.vmap(lambda r: row_checksum(bank, r))(ridx)
     idx = jnp.where(apply, owner_idx, n)
     return fs._replace(checksum=fs.checksum.at[idx].set(new, mode="drop"))
 

@@ -320,6 +320,89 @@ class QuantBank:
                 f"N={self.n_owners}, P={self.size})")
 
 
+@jax.tree_util.register_pytree_node_class
+class PagedBank:
+    """Paged owner bank: a device-resident working set of `n_hot` rows
+    backed by a host cold tier (see ``repro.federation.paging``).
+
+    `hot` is the resident tier — a dense `(n_hot, P)` matrix or a
+    `QuantBank` with `n_hot` rows (codes + scales + the shared EF
+    residual, which belongs to the *session*, not to any owner, and
+    therefore never pages). `hot_ids` is the device-resident page table:
+    a SORTED `(n_hot,)` int32 vector of the owner ids resident in each
+    slot, with the sentinel `n_owners` marking empty slots (the sentinel
+    sorts after every real id, so the vector stays sorted by
+    construction). `n_owners` (static aux) is the federation size N —
+    resident bytes are O(n_hot * row), independent of N.
+
+    `lookup` resolves owner id -> hot slot IN-GRAPH via
+    ``jnp.searchsorted`` over the sorted page table — no host sync
+    inside a scan body — and returns a `hit` bit the drivers fold into
+    their grant mask, so a round touching a non-resident owner is a
+    bit-exact masked no-op (the clamped slot's row is written back to
+    itself), exactly like a ledger refusal. The host-side
+    ``paging.OwnerPager`` keeps the working set ahead of the schedule so
+    misses never occur in a correctly-driven session.
+    """
+
+    def __init__(self, hot, hot_ids: jax.Array, n_owners: int):
+        self.hot = hot
+        self.hot_ids = hot_ids
+        self.n_owners = n_owners
+
+    def tree_flatten(self):
+        return (self.hot, self.hot_ids), self.n_owners
+
+    @classmethod
+    def tree_unflatten(cls, n_owners, children):
+        return cls(children[0], children[1], n_owners)
+
+    @property
+    def n_hot(self) -> int:
+        return self.hot_ids.shape[0]
+
+    @property
+    def size(self) -> int:
+        return self.hot.size if isinstance(self.hot, QuantBank) \
+            else self.hot.shape[-1]
+
+    @property
+    def codec(self) -> Optional[BankCodec]:
+        return self.hot.codec if isinstance(self.hot, QuantBank) else None
+
+    @property
+    def nbytes(self) -> int:
+        """Device-resident bytes: the hot tier + the page table."""
+        hot = (self.hot.nbytes if isinstance(self.hot, QuantBank)
+               else self.hot.nbytes)
+        return hot + self.hot_ids.nbytes
+
+    def lookup(self, owner_idx) -> Tuple[jax.Array, jax.Array]:
+        """owner id -> (slot, hit), both traced; vmap-safe.
+
+        `slot` is clamped into [0, n_hot) so it is ALWAYS a safe gather
+        index; `hit` is False when the owner is not resident (the
+        clamped slot then points at some other owner's row, which the
+        drivers' masked writes leave bit-exactly untouched)."""
+        slot = jnp.searchsorted(self.hot_ids,
+                                jnp.asarray(owner_idx, jnp.int32))
+        slot = jnp.minimum(slot, self.n_hot - 1).astype(jnp.int32)
+        hit = self.hot_ids[slot] == owner_idx
+        return slot, hit
+
+    def replace(self, **kw) -> "PagedBank":
+        args = {"hot": self.hot, "hot_ids": self.hot_ids,
+                "n_owners": self.n_owners}
+        args.update(kw)
+        return PagedBank(**args)
+
+    def __repr__(self) -> str:
+        fmt = self.codec.fmt if self.codec is not None else str(
+            self.hot.dtype)
+        return (f"PagedBank(n_hot={self.n_hot}, N={self.n_owners}, "
+                f"P={self.size}, storage={fmt!r})")
+
+
 def init_flat_bank(flat: ParamFlat, n_owners: int, dtype=None,
                    sharding=None, scales_sharding=None,
                    residual_sharding=None):

@@ -1,0 +1,357 @@
+"""Paged owner bank: host-side pager + paged-state construction.
+
+The flat engine's owner bank is the algorithm's dominant memory cost —
+N owner copies of the model, (N, P) resident on device. That caps the
+federation size at whatever N*P fits in accelerator memory, even though
+any single dispatch only ever touches the few owners its schedule window
+names. This module splits the bank into two tiers:
+
+  * HOT  — a device-resident working set of `n_hot` rows
+    (``flatten.PagedBank``: a dense (n_hot, P) matrix or a QuantBank
+    with n_hot code rows, plus the sorted (n_hot,) page table). The
+    DP-FTRL tree's node rows page WITH their bank rows ((n_hot, d, P));
+    every (N,)-scalar column — ledger counters, tree leaf counts, fault
+    checksums/windows/quarantine — stays resident, so paging changes
+    WHERE rows live, never what the accounting sees.
+  * COLD — a host row store (``repro.checkpoint.MemoryRowStore`` /
+    ``MemmapRowStore``) with default-row lazy semantics: a never-written
+    owner reads as the shared init row, so a million-owner federation
+    costs O(rows actually trained), not O(N*P), until trained.
+
+``OwnerPager`` is the host half: before each dispatch the session hands
+it the schedule's upcoming window (``prefetch``), and the pager makes
+every owner in it resident — evicting the least-recently-dispatched
+rows to the cold tier (dirty rows write back; clean rows just drop) and
+installing the needed rows via ONE device gather + scatter that keeps
+the page table sorted. Inside the scan the drivers resolve owner id ->
+hot slot with ``PagedBank.lookup`` (searchsorted over the sorted table
+— no host sync), and a row that is somehow NOT resident is a bit-exact
+masked no-op charged as a refusal, so the engine stays lawful even if
+the prefetch contract is violated.
+
+Bit-exactness contract: row bits round-trip the cold tier exactly for
+every storage dtype (f32/bf16 and the int8/fp8 codec's codes+scales go
+through the checkpoint module's raw-bit views), the shared EF residual
+belongs to the session and never pages, and with ``n_hot >= N`` every
+row is permanently resident — the paged engine then reproduces the flat
+engine bit-for-bit on all three drivers (parity-tested).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import MemmapRowStore, MemoryRowStore
+from repro.federation.deep import (AsyncDPConfig, AsyncDPState, TreeNoise,
+                                   init_fault_state)
+from repro.federation.flatten import (PagedBank, ParamFlat, QuantBank,
+                                      as_bank_codec, init_flat_bank,
+                                      pack_params)
+from repro.federation.privacy import make_device_ledger
+
+
+def _as_host(a) -> np.ndarray:
+    """Device -> host copy preserving raw bits (bf16/fp8 come back as
+    their ml_dtypes numpy counterparts, which the row stores round-trip
+    through uint views)."""
+    return np.asarray(jax.device_get(a))
+
+
+class OwnerPager:
+    """Host half of the paged owner bank (see module docstring).
+
+    Tracks a host mirror of the device page table, the dirty set (owners
+    dispatched since their row was last written back — the device may
+    have rewritten any dispatched row, so dispatch marks dirty), and an
+    LRU stamp per resident owner. All device traffic is batched: one
+    row gather + one scatter per prefetch that changes residency, one
+    read-back per eviction/flush.
+    """
+
+    def __init__(self, n_owners: int, n_hot: int, hot_ids: np.ndarray,
+                 stores: Dict[str, Any]):
+        self.n_owners = int(n_owners)
+        self.n_hot = int(n_hot)
+        self._sentinel = self.n_owners
+        self._hot_ids = np.array(hot_ids, np.int32)   # host mirror, sorted
+        self.stores = stores                          # name -> row store
+        self.dirty: set = set()
+        self._clock = 0
+        self._last_used: Dict[int, int] = {
+            int(o): 0 for o in self._hot_ids if o != self._sentinel}
+        self.stats = {"prefetches": 0, "loads": 0, "evictions": 0,
+                      "writebacks": 0}
+
+    # ------------------------------------------------------------- views
+
+    @property
+    def resident_ids(self) -> np.ndarray:
+        """Sorted real owner ids currently resident (host mirror)."""
+        return self._hot_ids[self._hot_ids != self._sentinel]
+
+    def _slot_of(self) -> Dict[int, int]:
+        return {int(o): s for s, o in enumerate(self._hot_ids)
+                if o != self._sentinel}
+
+    # ----------------------------------------------------- device access
+
+    def _read_slots(self, state: AsyncDPState,
+                    slots: np.ndarray) -> Dict[str, np.ndarray]:
+        """Batched host read of the named slots' row payloads."""
+        hot = state.bank.hot
+        out: Dict[str, np.ndarray] = {}
+        if isinstance(hot, QuantBank):
+            out["codes"] = _as_host(hot.codes[slots])
+            out["scales"] = _as_host(hot.scales[slots])
+        else:
+            out["rows"] = _as_host(hot[slots])
+        if "tree" in self.stores:
+            out["tree"] = _as_host(state.tree.nodes[slots])
+        return out
+
+    def _install(self, state: AsyncDPState, new_ids: np.ndarray,
+                 src: np.ndarray, fresh_pos: np.ndarray,
+                 fresh: Dict[str, np.ndarray]) -> AsyncDPState:
+        """Re-lay the hot tier: slot i takes old slot src[i], then the
+        fresh (cold-loaded or default) rows land at fresh_pos. One
+        gather + one scatter per buffer, page table uploaded once."""
+        src_d = jnp.asarray(src, jnp.int32)
+        pos_d = jnp.asarray(fresh_pos, jnp.int32)
+        hot = state.bank.hot
+
+        def relay(buf, key):
+            new = buf[src_d]
+            if fresh_pos.size:
+                new = new.at[pos_d].set(
+                    jnp.asarray(fresh[key], dtype=buf.dtype))
+            return new
+
+        if isinstance(hot, QuantBank):
+            hot = QuantBank(relay(hot.codes, "codes"),
+                            relay(hot.scales, "scales"),
+                            hot.residual, hot.codec)
+        else:
+            hot = relay(hot, "rows")
+        bank = state.bank.replace(hot=hot,
+                                  hot_ids=jnp.asarray(new_ids, jnp.int32))
+        tree = state.tree
+        if "tree" in self.stores:
+            tree = tree.replace(nodes=relay(tree.nodes, "tree"))
+        self._hot_ids = np.array(new_ids, np.int32)
+        return state._replace(bank=bank, tree=tree)
+
+    # -------------------------------------------------------- operations
+
+    def prefetch(self, state: AsyncDPState, window) -> AsyncDPState:
+        """Make every owner in the upcoming dispatch window resident.
+
+        `window` is the HOST owner-id view of the rounds the next
+        dispatch will run (e.g. ``TraceRing.window(k)`` or the (K,)
+        sequence about to be passed to the driver). Owners already
+        resident cost nothing; the rest are loaded from the cold tier
+        into slots freed by evicting the least-recently-dispatched
+        rows (dirty rows write back first). Raises if the window's
+        working set exceeds n_hot. Every owner in the window is marked
+        dirty — the device may rewrite any dispatched row."""
+        ids = np.unique(np.asarray(window, np.int64).reshape(-1))
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_owners):
+            raise ValueError(
+                f"window owner ids out of range for {self.n_owners} owners")
+        if ids.size > self.n_hot:
+            raise ValueError(
+                f"dispatch window touches {ids.size} distinct owners but "
+                f"the hot tier holds {self.n_hot} rows; raise n_hot or "
+                f"shorten the dispatch")
+        self.stats["prefetches"] += 1
+        self._clock += 1
+        id_list = [int(i) for i in ids]
+        for o in id_list:
+            self._last_used[o] = self._clock
+        resident = set(int(o) for o in self.resident_ids)
+        need = [o for o in id_list if o not in resident]
+        self.dirty.update(id_list)
+        if not need:
+            return state
+
+        # pick victims: least-recently-dispatched residents not needed now
+        keep_free = resident - set(id_list)
+        n_free = self.n_hot - len(resident)
+        n_evict = max(0, len(need) - n_free)
+        victims = sorted(keep_free,
+                         key=lambda o: (self._last_used.get(o, -1), o)
+                         )[:n_evict]
+        slot_of = self._slot_of()
+        if victims:
+            self._evict(state, victims, slot_of)
+
+        new_res = sorted((resident - set(victims)) | set(need))
+        new_ids = np.full((self.n_hot,), self._sentinel, np.int32)
+        new_ids[:len(new_res)] = new_res      # sentinel sorts last: sorted
+
+        # source map: surviving rows permute from their old slot; loaded
+        # and sentinel rows come in fresh (cold tier serves the default
+        # row for never-written owners — its lazy-init contract)
+        src = np.zeros((self.n_hot,), np.int32)
+        fresh_pos: List[int] = []
+        fresh_ids: List[int] = []
+        survivors = resident - set(victims)
+        for pos, o in enumerate(new_ids.tolist()):
+            if o != self._sentinel and o in survivors:
+                src[pos] = slot_of[o]
+            else:
+                # needed ids load from cold; sentinel slots take the
+                # store default row so freed slots never keep stale bits
+                fresh_pos.append(pos)
+                fresh_ids.append(o)
+        fresh: Dict[str, np.ndarray] = {}
+        for key, store in self.stores.items():
+            rows = np.stack([
+                store._default if o == self._sentinel
+                else store.read_rows([o])[0]
+                for o in fresh_ids]) if fresh_ids else np.zeros(
+                (0,) + store.row_shape, store._default.dtype)
+            fresh[key] = rows
+        self.stats["loads"] += sum(1 for o in fresh_ids
+                                   if o != self._sentinel)
+        return self._install(state, new_ids, src,
+                             np.asarray(fresh_pos, np.int32), fresh)
+
+    def _evict(self, state: AsyncDPState, victims: List[int],
+               slot_of: Dict[int, int]) -> None:
+        """Write back the victims' device rows (dirty ones) to cold."""
+        self.stats["evictions"] += len(victims)
+        dirty_victims = [v for v in victims if v in self.dirty]
+        if dirty_victims:
+            slots = np.asarray([slot_of[v] for v in dirty_victims],
+                               np.int64)
+            data = self._read_slots(state, slots)
+            for key, store in self.stores.items():
+                store.write_rows(dirty_victims, data[key])
+            self.stats["writebacks"] += len(dirty_victims)
+            self.dirty.difference_update(dirty_victims)
+
+    def flush(self, state: AsyncDPState, only_dirty: bool = True) -> None:
+        """Write resident rows back to the cold tier WITHOUT evicting
+        (session checkpoint/shutdown path). `only_dirty=False` forces
+        every resident row out (snapshot support)."""
+        slot_of = self._slot_of()
+        ids = [o for o in (int(i) for i in self.resident_ids)
+               if not only_dirty or o in self.dirty]
+        if not ids:
+            return
+        slots = np.asarray([slot_of[o] for o in ids], np.int64)
+        data = self._read_slots(state, slots)
+        for key, store in self.stores.items():
+            store.write_rows(ids, data[key])
+        self.stats["writebacks"] += len(ids)
+        self.dirty.difference_update(ids)
+
+    def snapshot(self, state: AsyncDPState) -> Dict[str, np.ndarray]:
+        """Full (N, ...) host materialization of every paged column —
+        testing/inspection only (this is exactly the O(N*P) cost paging
+        exists to avoid). Flushes resident rows first so the cold tier
+        is authoritative."""
+        self.flush(state, only_dirty=False)
+        all_ids = np.arange(self.n_owners, dtype=np.int64)
+        return {key: store.read_rows(all_ids)
+                for key, store in self.stores.items()}
+
+
+def init_paged_state(params, cfg: AsyncDPConfig, n_hot: int,
+                     bank_dtype=None, mesh=None,
+                     cold_dir: Optional[str] = None
+                     ) -> Tuple[AsyncDPState, OwnerPager]:
+    """Flat-engine state with a PAGED owner bank + its host pager.
+
+    Exactly ``init_state_flat`` except the (N, P) bank (and the tree's
+    (N, d, P) node matrix) become an (n_hot, ...) hot tier backed by a
+    cold row store — device-resident bytes are O(n_hot * row),
+    independent of N. `bank_dtype` selects the same storage codecs as
+    the flat bank (None/f32, "bfloat16", "int8"/"fp8"). `cold_dir`
+    (None = in-memory dict store) puts the cold tier on disk via
+    ``MemmapRowStore`` — lazily allocated, so a million-owner store
+    costs no real disk until rows are evicted. `mesh` lays the hot tier
+    out under ``sharding.rules.paged_shardings`` (hot rows shard like
+    bank rows with n_hot standing in for N).
+
+    At init every row — hot, cold, and never-materialized — equals the
+    default row (the packed central params, encoded per the storage
+    codec), which is what lets the fault layer tile one checksum across
+    the (N,) column instead of materializing the bank.
+    """
+    n_hot = int(n_hot)
+    if n_hot < 1:
+        raise ValueError(f"n_hot must be >= 1, got {n_hot}")
+    if cfg.init_bank_zero:
+        params = jax.tree_util.tree_map(jnp.zeros_like, params)
+    flat = pack_params(params)
+    N = cfg.n_owners
+    ledger = make_device_ledger(cfg.effective_caps)
+    codec = as_bank_codec(bank_dtype)
+    sh = None
+    if mesh is not None:
+        from repro.sharding.rules import paged_shardings
+        sh = paged_shardings(mesh, n_hot, flat.size)
+        flat = ParamFlat(jax.device_put(flat.buf, sh.theta), flat.spec)
+    hot = init_flat_bank(
+        flat, n_hot, bank_dtype,
+        sharding=None if sh is None else sh.bank,
+        scales_sharding=None if sh is None else sh.bank_scales,
+        residual_sharding=None if sh is None else sh.row)
+    m = min(n_hot, N)
+    ids = np.full((n_hot,), N, np.int32)    # sentinel N sorts last
+    ids[:m] = np.arange(m, dtype=np.int32)
+    hot_ids = jnp.asarray(ids)
+    if sh is not None:
+        hot_ids = jax.device_put(hot_ids, sh.ledger)
+        ledger = jax.device_put(ledger, sh.ledger)
+    bank = PagedBank(hot, hot_ids, N)
+
+    tree = None
+    if cfg.tree_depth is not None:
+        d = cfg.tree_depth
+        nodes = jnp.zeros((n_hot, d, flat.size), jnp.float32)
+        counts = jnp.zeros((N,), jnp.int32)
+        if sh is not None:
+            nodes = jax.device_put(nodes, sh.tree_nodes)
+            counts = jax.device_put(counts, sh.ledger)
+        tree = TreeNoise(nodes, counts, d)
+
+    faults = (None if cfg.fault_policy is None
+              else init_fault_state(bank, N))
+    if faults is not None and sh is not None:
+        faults = jax.device_put(faults, sh.faults)
+
+    # cold tier: one store per paged buffer, default = the init row
+    def make_store(name, row_shape, dtype, default):
+        if cold_dir is None:
+            return MemoryRowStore(N, row_shape, dtype, default)
+        return MemmapRowStore(os.path.join(cold_dir, name), N, row_shape,
+                              dtype, default)
+
+    stores: Dict[str, Any] = {}
+    if isinstance(hot, QuantBank):
+        codes0 = _as_host(hot.codes[0])
+        scales0 = _as_host(hot.scales[0])
+        stores["codes"] = make_store("codes", codes0.shape, codes0.dtype,
+                                     codes0)
+        stores["scales"] = make_store("scales", scales0.shape,
+                                      scales0.dtype, scales0)
+    else:
+        row0 = _as_host(hot[0])
+        stores["rows"] = make_store("rows", row0.shape, row0.dtype, row0)
+    if tree is not None and cfg.tree_depth:
+        zrow = np.zeros((cfg.tree_depth, flat.size), np.float32)
+        stores["tree"] = make_store("tree", zrow.shape, zrow.dtype, zrow)
+
+    state = AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger,
+                         tree, faults)
+    pager = OwnerPager(N, n_hot, ids, stores)
+    return state, pager
+
+
+__all__ = ["OwnerPager", "init_paged_state"]

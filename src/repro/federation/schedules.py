@@ -215,6 +215,29 @@ class AvailabilityTraceSchedule:
                 "scatter with mode='drop' and silently lose the round")
         object.__setattr__(self, "trace", trace)
 
+    def _tiled(self, horizon: int) -> jax.Array:
+        """The recorded trace tiled to `horizon`, as a DEVICE int32 array,
+        cached on the instance keyed by horizon.
+
+        draw() used to rebuild the tiling with `np.resize` and re-upload
+        it on EVERY dispatch — O(horizon) host work and one
+        host->device transfer per call for a bit-identical result. The
+        cache keeps one device copy per distinct horizon for the
+        instance's lifetime (sessions dispatch a fixed k_rounds, so in
+        practice that is one entry). Mutating a frozen dataclass's
+        `__dict__` is deliberate: `_tiled_cache` is not a field, so
+        equality/hash/replace semantics are untouched."""
+        cache = self.__dict__.get("_tiled_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_tiled_cache", cache)
+        out = cache.get(horizon)
+        if out is None:
+            out = jnp.asarray(np.resize(
+                np.asarray(self.trace, np.int32), horizon))
+            cache[horizon] = out
+        return out
+
     def draw_with_times(self, key, n_owners: int, horizon: int) -> Schedule:
         if len(self.windows) != n_owners:
             raise ValueError(
@@ -222,9 +245,7 @@ class AvailabilityTraceSchedule:
         k_time, k_pick = jax.random.split(key)
         times = poisson_schedule(k_time, n_owners, horizon, self.rate).times
         if self.trace is not None:
-            owners = jnp.asarray(np.resize(
-                np.asarray(self.trace, np.int32), horizon))
-            return Schedule(times, owners)
+            return Schedule(times, self._tiled(horizon))
         inside = self.available(times, fallback=True)            # (T, N)
         gumbel = jax.random.gumbel(k_pick, (horizon, n_owners))
         owners = jnp.argmax(jnp.where(inside, gumbel, -jnp.inf),
@@ -233,6 +254,14 @@ class AvailabilityTraceSchedule:
 
     def draw(self, key, n_owners: int, horizon: int) -> jax.Array:
         return self.draw_with_times(key, n_owners, horizon).owners
+
+    def trace_ring(self, chunk: int = 4096) -> "TraceRing":
+        """A streaming view of the recorded trace (see TraceRing) —
+        multi-hour traces feed the engines chunk-by-chunk instead of
+        materializing the whole tiled (K,) sequence device-side."""
+        if self.trace is None:
+            raise ValueError("trace_ring needs a recorded trace")
+        return TraceRing(self.trace, chunk=chunk)
 
     def available(self, times: jax.Array,
                   fallback: bool = False) -> jax.Array:
@@ -253,3 +282,82 @@ class AvailabilityTraceSchedule:
             inside = jnp.where(inside.any(axis=1, keepdims=True), inside,
                                True)
         return inside
+
+
+class TraceRing:
+    """Device-resident ring buffer over a recorded availability trace.
+
+    Multi-hour production traces reach tens of millions of rounds;
+    materializing the whole tiled (K,) owner sequence device-side per
+    dispatch (what ``AvailabilityTraceSchedule.draw`` does) costs memory
+    and upload time proportional to the TRACE, not the dispatch. The
+    ring streams it instead: the host keeps the raw trace, the device
+    holds ONE `chunk`-sized int32 buffer, and
+
+      * ``next(k)`` returns the next consecutive (k,) int32 device
+        window — a single ``lax.dynamic_slice`` whose offset is a traced
+        operand, so every same-k call shares one compiled executable —
+        uploading a fresh chunk only when the cursor crosses a chunk
+        boundary (one host->device transfer per `chunk` rounds);
+      * ``window(k)`` is the HOST peek the paging prefetcher keys on:
+        the owner ids the next dispatch will touch, with no cursor
+        advance and no device sync.
+
+    Wrap semantics match ``np.resize`` tiling (the trace repeats
+    end-to-end), so a session replaying through the ring sees the exact
+    sequence ``AvailabilityTraceSchedule.draw`` would hand it
+    (property-tested in tests/test_property.py).
+    """
+
+    def __init__(self, trace, chunk: int = 4096):
+        trace = np.asarray(trace, np.int32).reshape(-1)
+        if trace.size == 0:
+            raise ValueError("an empty trace cannot schedule any round")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self._trace = trace
+        self.chunk = int(chunk)
+        self.cursor = 0                 # absolute position in the tiling
+        self._chunk_start = 0           # absolute start of resident chunk
+        self._buf: Optional[jax.Array] = None
+
+    def __len__(self) -> int:
+        return int(self._trace.size)
+
+    @property
+    def resident_bytes(self) -> int:
+        """Device bytes the ring holds — O(chunk), independent of the
+        trace length (asserted by the paged-bank benchmarks)."""
+        return 0 if self._buf is None else int(self._buf.nbytes)
+
+    def window(self, k: int) -> np.ndarray:
+        """(k,) int32 HOST view of the next k owner ids (no advance)."""
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        return np.take(self._trace, self.cursor + np.arange(k),
+                       mode="wrap")
+
+    def _refill(self, start: int) -> None:
+        idx = (start + np.arange(self.chunk)) % self._trace.size
+        self._buf = jnp.asarray(self._trace[idx])
+        self._chunk_start = start
+
+    def next(self, k: int) -> jax.Array:
+        """The next consecutive (k,) int32 DEVICE owner window; advances
+        the cursor. k larger than the chunk degrades to one direct
+        upload of exactly k ids (correct, just unbuffered) — size the
+        chunk at or above the dispatch length to stay on the ring."""
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if k > self.chunk:
+            out = jnp.asarray(self.window(k))
+            self.cursor += k
+            return out
+        if (self._buf is None
+                or self.cursor + k > self._chunk_start + self.chunk):
+            self._refill(self.cursor)
+        off = self.cursor - self._chunk_start
+        out = jax.lax.dynamic_slice(self._buf,
+                                    (jnp.asarray(off, jnp.int32),), (k,))
+        self.cursor += k
+        return out

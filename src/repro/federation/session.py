@@ -53,9 +53,9 @@ from repro.federation.flatten import ParamFlat
 from repro.federation.linear import LinearProblem
 from repro.federation.mechanisms import Mechanism, make_mechanism
 from repro.federation.owners import DataOwner
-from repro.federation.schedules import (ScheduleProtocol, UniformSchedule,
-                                        as_owner_seq, auto_max_group,
-                                        pack_groups,
+from repro.federation.schedules import (ScheduleProtocol, TraceRing,
+                                        UniformSchedule, as_owner_seq,
+                                        auto_max_group, pack_groups,
                                         partition_conflict_free)
 
 _STRATEGIES = ("async", "sync")
@@ -90,6 +90,7 @@ class Federation:
         self._pack_params = False
         self._bank_dtype = None
         self._mesh = None
+        self._pager = None
         self._ran = False
 
     def _claim_session(self):
@@ -260,6 +261,47 @@ class Federation:
             state = state._replace(ledger=ledger)
         return state
 
+    def init_paged_state(self, params, n_hot: int, bank_dtype=None,
+                         mesh=None, cold_dir=None) -> AsyncDPState:
+        """Flat-engine state whose owner bank is PAGED: an n_hot-row
+        device-resident working set over a host cold tier, so resident
+        bytes are O(n_hot * P) independent of N (see
+        federation.paging). The pager is attached to this session —
+        `step()` and `run_rounds()` prefetch the rows each dispatch
+        touches automatically, and every driver resolves owner -> hot
+        slot in-graph (no host sync inside the scan). With n_hot >=
+        n_owners the paged engine reproduces the flat engine
+        bit-for-bit. Requires a flat make_step (pack_params=True).
+        `cold_dir` puts the cold tier on disk (lazy memmap); None keeps
+        it in host memory."""
+        if not self._pack_params:
+            raise ValueError("the paged bank is a flat-engine option; "
+                             "call make_step(..., pack_params=True) first")
+        if bank_dtype is None:
+            bank_dtype = self._bank_dtype
+        if mesh is None:
+            mesh = self._mesh
+        from repro.federation.paging import init_paged_state
+        state, pager = init_paged_state(params, self.as_async_config(),
+                                        n_hot, bank_dtype=bank_dtype,
+                                        mesh=mesh, cold_dir=cold_dir)
+        self._pager = pager
+        snapshot = getattr(self.mechanism, "device_ledger", None)
+        if snapshot is not None:
+            ledger = snapshot()
+            if mesh is not None:
+                ledger = jax.device_put(
+                    ledger, jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec()))
+            state = state._replace(ledger=ledger)
+        return state
+
+    @property
+    def pager(self):
+        """The OwnerPager attached by init_paged_state (None for
+        non-paged sessions) — exposes resident_ids, stats, flush()."""
+        return self._pager
+
     def params_of(self, state: AsyncDPState):
         """The central model as a pytree, whichever representation the
         state carries (flat buffers are unpacked)."""
@@ -370,6 +412,10 @@ class Federation:
             raise ValueError("step() is the async path; use sync_round()")
         step_fn = self._require_step()
         i = int(owner_idx)
+        if self._pager is not None:
+            # make this round's row resident before dispatch; refusal/
+            # quarantine paths tolerate the (bit-exact) extra residency
+            state = self._pager.prefetch(state, np.asarray([i]))
         if state.faults is None:
             if fault_code is not None:
                 raise ValueError(
@@ -421,10 +467,19 @@ class Federation:
 
         `batches` leaves carry a leading (K,) round axis (round k consumes
         owner i_k's microbatch). `owner_seq` is a (K,) int32 device
-        sequence; None draws it from the pluggable Schedule. Per-round keys
+        sequence; None draws it from the pluggable Schedule; a
+        `schedules.TraceRing` streams a long availability trace in
+        chunks — the call consumes the next K entries without ever
+        materializing the full trace on device. Per-round keys
         are `jax.random.split(key, K)` — drive a per-round `step()` loop
         with the same split and it reproduces this call bit-for-bit
         (params, bank, and granted-round metrics).
+
+        Host-sync contract: one dispatch costs AT MOST one device->host
+        copy of the (K,) owner sequence, shared by every host-side
+        consumer (the paged-bank prefetch, `auto_max_group`, and the
+        conflict-free partition); with none of those enabled a
+        schedule-drawn sequence never leaves the device.
 
         Budget-exhausted owners are refused IN-GRAPH via the state's
         DeviceLedger: a refused round is a no-op on model state exactly as
@@ -467,7 +522,32 @@ class Federation:
         self._require_step()
         if self._fused_fn is None:
             raise RuntimeError("call make_step(loss_fn) before run_rounds()")
-        if owner_seq is None:
+        # Host-sync contract: everything below shares ONE host copy of
+        # the owner sequence (`host_seq`), materialized lazily and at
+        # most once per call. The pager's prefetch, auto_max_group and
+        # partition_conflict_free all read it; the schedule-drawn path
+        # with none of those enabled never syncs at all.
+        seq_host = None
+
+        def host_seq() -> np.ndarray:
+            nonlocal seq_host
+            if seq_host is None:
+                seq_host = np.asarray(owner_seq)
+            return seq_host
+
+        if isinstance(owner_seq, TraceRing):
+            # streamed availability trace: peek the window host-side for
+            # the pager, then advance the ring — the device sequence is
+            # a chunk-buffer slice, never the materialized (K,) trace
+            ring = owner_seq
+            k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            seq_host = np.asarray(ring.window(k), np.int32)
+            if seq_host.size and (seq_host.min() < 0
+                                  or seq_host.max() >= self.n_owners):
+                raise ValueError("trace names owners outside this "
+                                 f"federation (n_owners={self.n_owners})")
+            owner_seq = ring.next(k).astype(jnp.int32)
+        elif owner_seq is None:
             # schedule-drawn: in-range by construction, stays on-device
             # (as_owner_seq's bounds check would force a host sync here)
             k_sched, key = jax.random.split(key)
@@ -477,6 +557,10 @@ class Federation:
         else:
             owner_seq = as_owner_seq(owner_seq, self.n_owners)
         k_rounds = owner_seq.shape[0]
+        if self._pager is not None:
+            # page in every row this dispatch touches (evicting stale
+            # rows to the cold tier) before the scan launches
+            state = self._pager.prefetch(state, host_seq())
         fault_codes = None
         if faults is not None:
             if state.faults is None:
@@ -499,10 +583,13 @@ class Federation:
             return self._fused_fn(state, batches, owner_seq, keys,
                                   fault_codes)
 
-        # schedule analysis is a host-side pass: one sync per dispatch
+        # schedule analysis is a host-side pass over the shared host
+        # copy: at most one device->host sync per dispatch, not one per
+        # consumer (previously auto_max_group and the partition each
+        # pulled the full (K,) sequence)
         if max_group == "auto":
-            max_group = auto_max_group(np.asarray(owner_seq))
-        groups = partition_conflict_free(np.asarray(owner_seq), max_group)
+            max_group = auto_max_group(host_seq())
+        groups = partition_conflict_free(host_seq(), max_group)
         if all(length <= 1 for _, length in groups):
             # every group is a single round: the sequential scan IS the
             # grouped execution, bit-for-bit
@@ -564,6 +651,12 @@ class Federation:
         accounting the crashed process had. Returns the step the
         checkpoint was filed under (state.step when not given)."""
         from repro.checkpoint import save_checkpoint
+        if self._pager is not None:
+            raise NotImplementedError(
+                "save_session does not yet cover paged states: the hot "
+                "tier would checkpoint but the cold row store would not. "
+                "Call pager.flush(state) and persist the cold tier "
+                "(MemmapRowStore) alongside; see ROADMAP")
         if step is None:
             step = int(state.step)
         extra = {}

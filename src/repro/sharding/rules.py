@@ -280,3 +280,19 @@ def flat_shardings(mesh: Mesh, n_owners: int, p: int) -> FlatShardings:
                          bank_scales=NamedSharding(mesh, P(n_ax)),
                          tree_nodes=NamedSharding(mesh, P(n_ax, None, p_ax)),
                          faults=NamedSharding(mesh, P()))
+
+
+def paged_shardings(mesh: Mesh, n_hot: int, p: int) -> FlatShardings:
+    """Sharding bundle for a PAGED flat state (flatten.PagedBank).
+
+    Hot rows shard exactly like bank rows, with `n_hot` standing in for
+    N on the owner axis — the resident working set is the only
+    row-scaled buffer on device, so it (and the paged tree-node buffer,
+    (n_hot, depth, P)) takes the data axes while the per-owner (N,)
+    counter columns (ledger, tree leaf counts, fault state) stay
+    replicated like every other counter. The page table (hot_ids) is a
+    tiny (n_hot,) int32 vector and rides the replicated `ledger` rule.
+    Divisibility degrades per-axis exactly as `flat_shardings` does —
+    pick an n_hot that divides the data-axis size to keep rows spread.
+    """
+    return flat_shardings(mesh, n_hot, p)

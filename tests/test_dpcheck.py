@@ -372,6 +372,36 @@ def test_dpc302_sibling_closure_mask_does_not_vouch(tmp_path):
     assert len([v for v in vs if v.rule == "DPC302"]) == 1
 
 
+def test_dpc302_residency_hit_is_grant_source(tmp_path):
+    # PR 9 paged bank: the HIT bit of `slot, hit = bank.lookup(i)` masks
+    # a write as lawfully as .authorized — a non-resident row must be a
+    # bit-exact no-op, and hit-masked writes encode exactly that
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(bank, hot, new_i, old_i, owner_idx):
+            slot, hit = bank.lookup(owner_idx)
+            masked = jnp.where(hit, new_i, old_i)
+            return _write_bank(hot, masked, slot)
+    """)
+    assert vs == []
+
+
+def test_dpc302_residency_slot_does_not_vouch(tmp_path):
+    # the slot INDEX from the same unpack must not launder an unmasked
+    # write — only the hit bit is a grant source
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, bank, hot, new_i, old_i, owner_idx):
+            ok = led.authorized(owner_idx)
+            slot, hit = bank.lookup(owner_idx)
+            value = jnp.where(slot >= 0, new_i, old_i)
+            return _write_bank(hot, value, slot)
+    """)
+    assert "DPC302" in _rules(vs)
+
+
 # ----------------------- DPC4xx: kernel conformance ------------------------
 def _kernel_tree(tmp_path, files, test_src=""):
     kd = tmp_path / "src" / "repro" / "kernels" / "mykern"

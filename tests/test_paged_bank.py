@@ -1,0 +1,368 @@
+"""Paged owner bank: cold-tier row stores, the in-graph page table, and
+the bit-exactness contract.
+
+The load-bearing claim: with every touched row resident (n_hot >= N, or
+a pager that prefetches each dispatch's window), the PAGED engine
+reproduces the FLAT engine bit-for-bit — params, bank rows, ledger
+counters, and per-round metrics — on all three drivers (per-round step,
+fused scan, grouped owner-parallel), every bank codec (f32/bf16 dense,
+int8/fp8 error-feedback), under refusals and injected faults. A
+non-resident row is a lawful masked no-op: no epsilon spent, the round
+lands in `refused`, model state untouched.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import MemmapRowStore, MemoryRowStore
+from repro.federation import (DataOwner, FaultPlan, FaultPolicy, Federation,
+                              FederationConfig, PrivatizerConfig)
+from repro.federation.deep import AsyncDPConfig, make_fused_rounds
+from repro.federation.flatten import PagedBank, QuantBank
+from repro.federation.paging import init_paged_state
+from repro.federation.schedules import AvailabilityTraceSchedule
+
+N, K = 8, 24
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (6,)), "b": jnp.zeros(())}
+    batches = {"x": jax.random.normal(jax.random.PRNGKey(1), (K, 4, 6)),
+               "y": jax.random.normal(jax.random.PRNGKey(2), (K, 4))}
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+    priv = PrivatizerConfig(xi=1.0, granularity="example")
+    return params, batches, loss_fn, priv
+
+
+def _make_fed(loss_fn, priv, horizon=3, bank_dtype=None, mesh=None, **kw):
+    owners = [DataOwner(n=100, epsilon=1.0, xi=1.0) for _ in range(N)]
+    fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
+                                              theta_max=10.0, lr_scale=5.0),
+                     **kw)
+    fed.make_step(loss_fn, privatizer=priv, pack_params=True,
+                  bank_dtype=bank_dtype, mesh=mesh)
+    return fed
+
+
+def _bank_arrays(bank):
+    if isinstance(bank, PagedBank):
+        bank = bank.hot
+    if isinstance(bank, QuantBank):
+        return {"codes": np.asarray(bank.codes),
+                "scales": np.asarray(bank.scales),
+                "residual": np.asarray(bank.residual)}
+    return {"rows": np.asarray(bank)}
+
+
+def _assert_banks_equal(flat_bank, paged_bank, n=N):
+    fa, pa = _bank_arrays(flat_bank), _bank_arrays(paged_bank)
+    assert fa.keys() == pa.keys()
+    for k in fa:
+        a, b = fa[k], pa[k]
+        if a.ndim >= 1 and a.shape[0] >= n and b.shape[0] >= n:
+            a, b = a[:n], b[:n]
+        np.testing.assert_array_equal(a, b, err_msg=k)
+
+
+# ------------------------- cold-tier row stores -----------------------------
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8",
+                                   "float8_e4m3fn"])
+@pytest.mark.parametrize("kind", ["memory", "memmap"])
+def test_row_store_bit_exact_roundtrip(tmp_path, kind, dtype):
+    import ml_dtypes
+    dt = np.dtype(getattr(ml_dtypes, dtype, dtype))
+    rng = np.random.default_rng(3)
+    default = rng.standard_normal(5).astype(dt)
+    if kind == "memory":
+        store = MemoryRowStore(10, (5,), dt, default)
+    else:
+        store = MemmapRowStore(str(tmp_path / dtype), 10, (5,), dt, default)
+    # unwritten rows read as the default, bit-for-bit
+    out = store.read_rows(np.array([0, 7]))
+    np.testing.assert_array_equal(out.view(np.uint8),
+                                  np.stack([default] * 2).view(np.uint8))
+    vals = rng.standard_normal((3, 5)).astype(dt)
+    store.write_rows(np.array([2, 7, 9]), vals)
+    back = store.read_rows(np.array([2, 7, 9, 0]))
+    np.testing.assert_array_equal(back[:3].view(np.uint8),
+                                  vals.view(np.uint8))
+    np.testing.assert_array_equal(back[3].view(np.uint8),
+                                  default.view(np.uint8))
+    assert store.written == 3
+
+
+def test_row_store_bounds_checked(tmp_path):
+    store = MemoryRowStore(4, (2,), np.float32, np.zeros(2, np.float32))
+    with pytest.raises(IndexError):
+        store.read_rows(np.array([4]))
+    with pytest.raises(IndexError):
+        store.write_rows(np.array([-1]), np.zeros((1, 2), np.float32))
+
+
+def test_memmap_store_is_lazy(tmp_path):
+    # a million-row store must not cost a million rows of disk up front
+    store = MemmapRowStore(str(tmp_path / "big"), 1_000_000, (64,),
+                           np.float32, np.zeros(64, np.float32))
+    store.write_rows(np.array([123_456]), np.ones((1, 64), np.float32))
+    store.flush()
+    path = os.path.join(str(tmp_path / "big"), "rows.npy")
+    # apparent size is the full matrix; blocks actually allocated are not
+    blocks = os.stat(path).st_blocks * 512
+    assert blocks < 8 * 64 * 4 * 1_000_000 / 100
+
+
+# ------------------------------ page table ----------------------------------
+def test_paged_bank_lookup():
+    hot = jnp.zeros((4, 3), jnp.float32)
+    ids = jnp.asarray(np.array([2, 5, 9, 12], np.int32))
+    bank = PagedBank(hot, ids, 20)
+    for owner, want_slot, want_hit in [(2, 0, True), (5, 1, True),
+                                       (9, 2, True), (12, 3, True),
+                                       (0, 0, False), (7, 2, False),
+                                       (19, 3, False)]:
+        slot, hit = bank.lookup(jnp.int32(owner))
+        assert bool(hit) is want_hit, owner
+        if want_hit:
+            assert int(slot) == want_slot
+        assert 0 <= int(slot) < 4          # always gather-safe
+
+
+def test_lookup_with_sentinel_padding():
+    # empty slots carry the sentinel n_owners, which sorts last — a
+    # partially-filled table still resolves every resident owner
+    ids = jnp.asarray(np.array([3, 6, 10, 10, 10], np.int32))
+    bank = PagedBank(jnp.zeros((5, 2)), ids, 10)
+    assert bool(bank.lookup(jnp.int32(3))[1])
+    assert bool(bank.lookup(jnp.int32(6))[1])
+    assert not bool(bank.lookup(jnp.int32(9))[1])
+
+
+# ------------------- full-residency bit-parity (tentpole) -------------------
+@pytest.mark.parametrize("bank_dtype", [None, "bfloat16", "int8", "fp8"])
+def test_fused_paged_matches_flat_bit_exact(toy, bank_dtype):
+    # horizon=3 over K=24 rounds: refusals interleave mid-schedule, so
+    # the paged ledger masking is exercised, not just the happy path
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (K,), 0, N))
+    root = jax.random.PRNGKey(4)
+
+    fed_f = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sf = fed_f.init_state(params)
+    sf, mf = fed_f.run_rounds(sf, batches, seq, key=root)
+
+    fed_p = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sp = fed_p.init_paged_state(params, n_hot=N, bank_dtype=bank_dtype)
+    sp, mp = fed_p.run_rounds(sp, batches, seq, key=root)
+
+    assert np.asarray(mf["refused"]).sum() > 0
+    np.testing.assert_array_equal(np.asarray(sf.theta_L.buf),
+                                  np.asarray(sp.theta_L.buf))
+    _assert_banks_equal(sf.bank, sp.bank)
+    assert _leaves_equal(sf.ledger, sp.ledger)
+    assert _leaves_equal(mf, mp)
+
+
+@pytest.mark.parametrize("bank_dtype", [None, "int8"])
+def test_step_loop_paged_matches_flat(toy, bank_dtype):
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (K,), 0, N))
+    keys = jax.random.split(jax.random.PRNGKey(6), K)
+
+    fed_f = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sf = fed_f.init_state(params)
+    fed_p = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sp = fed_p.init_paged_state(params, n_hot=3)   # forced paging traffic
+    for k in range(K):
+        b = jax.tree_util.tree_map(lambda a: a[k], batches)
+        sf, mf = fed_f.step(sf, b, int(seq[k]), keys[k])
+        sp, mp = fed_p.step(sp, b, int(seq[k]), keys[k])
+        assert mf["refused"] == mp["refused"], k
+    np.testing.assert_array_equal(np.asarray(sf.theta_L.buf),
+                                  np.asarray(sp.theta_L.buf))
+    snap = fed_p.pager.snapshot(sp)
+    fa = _bank_arrays(sf.bank)
+    for k in fa.keys() & snap.keys():
+        np.testing.assert_array_equal(fa[k], snap[k], err_msg=k)
+    assert fed_f.ledger() == fed_p.ledger()
+
+
+@pytest.mark.parametrize("bank_dtype", [None, "bfloat16", "fp8"])
+def test_grouped_paged_matches_flat(toy, bank_dtype):
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (K,), 0, N))
+    root = jax.random.PRNGKey(8)
+
+    fed_f = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sf = fed_f.init_state(params)
+    sf, mf = fed_f.run_rounds(sf, batches, seq, key=root,
+                              owner_parallel=True, max_group=4)
+
+    fed_p = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sp = fed_p.init_paged_state(params, n_hot=N)
+    sp, mp = fed_p.run_rounds(sp, batches, seq, key=root,
+                              owner_parallel=True, max_group=4)
+
+    np.testing.assert_array_equal(np.asarray(sf.theta_L.buf),
+                                  np.asarray(sp.theta_L.buf))
+    _assert_banks_equal(sf.bank, sp.bank)
+    assert _leaves_equal(sf.ledger, sp.ledger)
+    assert _leaves_equal(mf, mp)
+
+
+@pytest.mark.parametrize("owner_parallel", [False, True])
+def test_faulted_paged_matches_flat(toy, owner_parallel):
+    params, batches, loss_fn, priv = toy
+    plan = FaultPlan(drop=0.2, stale=0.1, nonfinite=0.2, corrupt=0.2)
+    pol = FaultPolicy(max_faults=2, window=8)
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (K,), 0, N))
+    root = jax.random.PRNGKey(10)
+    kw = dict(owner_parallel=True, max_group=4) if owner_parallel else {}
+
+    fed_f = _make_fed(loss_fn, priv, fault_policy=pol)
+    sf = fed_f.init_state(params)
+    sf, mf = fed_f.run_rounds(sf, batches, seq, key=root, faults=plan, **kw)
+
+    fed_p = _make_fed(loss_fn, priv, fault_policy=pol)
+    sp = fed_p.init_paged_state(params, n_hot=N)
+    sp, mp = fed_p.run_rounds(sp, batches, seq, key=root, faults=plan, **kw)
+
+    assert np.asarray(mf["faulted"]).sum() > 0
+    np.testing.assert_array_equal(np.asarray(sf.theta_L.buf),
+                                  np.asarray(sp.theta_L.buf))
+    _assert_banks_equal(sf.bank, sp.bank)
+    assert _leaves_equal(sf.ledger, sp.ledger)
+    assert _leaves_equal(sf.faults, sp.faults)
+    assert _leaves_equal(mf, mp)
+
+
+# ---------------- eviction round trips + trace streaming --------------------
+@pytest.mark.parametrize("bank_dtype", [None, "int8"])
+def test_eviction_roundtrip_bit_exact(toy, tmp_path, bank_dtype):
+    # n_hot=3 over 8 owners forces load/evict cycles every dispatch;
+    # the flat reference runs the SAME chunked dispatches (same keys),
+    # so any row corrupted through the cold tier breaks parity
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(11), (K,), 0, N))
+    root = jax.random.PRNGKey(12)
+    chunks = [(lo, min(lo + 3, K)) for lo in range(0, K, 3)]
+    keys = jax.random.split(root, len(chunks))
+
+    fed_f = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sf = fed_f.init_state(params)
+    fed_p = _make_fed(loss_fn, priv, bank_dtype=bank_dtype)
+    sp = fed_p.init_paged_state(params, n_hot=3, bank_dtype=bank_dtype,
+                                cold_dir=str(tmp_path))
+    for (lo, hi), kk in zip(chunks, keys):
+        b = jax.tree_util.tree_map(lambda a: a[lo:hi], batches)
+        sf, _ = fed_f.run_rounds(sf, b, seq[lo:hi], key=kk)
+        sp, _ = fed_p.run_rounds(sp, b, seq[lo:hi], key=kk)
+
+    assert fed_p.pager.stats["evictions"] > 0
+    np.testing.assert_array_equal(np.asarray(sf.theta_L.buf),
+                                  np.asarray(sp.theta_L.buf))
+    snap = fed_p.pager.snapshot(sp)
+    fa = _bank_arrays(sf.bank)
+    for k in fa.keys() & snap.keys():
+        np.testing.assert_array_equal(
+            fa[k].view(np.uint8) if fa[k].dtype.itemsize == 2 else fa[k],
+            snap[k].view(np.uint8) if snap[k].dtype.itemsize == 2
+            else snap[k], err_msg=k)
+    assert _leaves_equal(sf.ledger, sp.ledger)
+
+
+def test_trace_ring_run_matches_materialized_trace(toy):
+    params, batches, loss_fn, priv = toy
+    trace = (0, 5, 2, 7, 1, 3)
+    root = jax.random.PRNGKey(13)
+    wins = tuple((0.0, 1.0) for _ in range(N))
+
+    fed_a = _make_fed(loss_fn, priv)
+    sa = fed_a.init_state(params)
+    sa, ma = fed_a.run_rounds(sa, batches, np.resize(trace, K), key=root)
+
+    fed_b = _make_fed(loss_fn, priv)
+    sb = fed_b.init_paged_state(params, n_hot=6)
+    ring = AvailabilityTraceSchedule(wins, trace=trace).trace_ring(chunk=5)
+    sb, mb = fed_b.run_rounds(sb, batches, ring, key=root)
+
+    np.testing.assert_array_equal(np.asarray(sa.theta_L.buf),
+                                  np.asarray(sb.theta_L.buf))
+    np.testing.assert_array_equal(np.asarray(ma["refused"]),
+                                  np.asarray(mb["refused"]))
+    _assert_banks_equal(sa.bank, fed_b.pager.snapshot(sb)["rows"][:N])
+
+
+# ------------------------- miss semantics -----------------------------------
+def test_page_miss_is_refused_and_spends_nothing(toy):
+    # drive the fused driver DIRECTLY (no pager prefetch): owners beyond
+    # the initial residency miss the page table — each such round must
+    # land in `refused`, spend no epsilon, and leave all state unchanged
+    params, batches, loss_fn, priv = toy
+    cfg = AsyncDPConfig(n_owners=N, horizon=16, epsilons=(1.0,) * N,
+                        owner_sizes=(100,) * N, caps=(5,) * N,
+                        privatizer=priv)
+    state, _ = init_paged_state(params, cfg, n_hot=3)   # resident: {0,1,2}
+    run = make_fused_rounds(loss_fn, cfg)
+    seq = np.array([0, 6, 1, 7, 2, 5], np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(14), len(seq))
+    b = jax.tree_util.tree_map(lambda a: a[:len(seq)], batches)
+    out, m = run(state, b, jnp.asarray(seq), keys)
+
+    np.testing.assert_array_equal(np.asarray(m["refused"]),
+                                  [False, True, False, True, False, True])
+    spent = np.asarray(out.ledger.spent)
+    assert spent[5] == spent[6] == spent[7] == 0
+    np.testing.assert_array_equal(np.asarray(out.ledger.refused),
+                                  [0, 0, 0, 0, 0, 1, 1, 1])
+    # resident rows trained; the hot tier's page table is untouched
+    np.testing.assert_array_equal(np.asarray(out.bank.hot_ids),
+                                  np.asarray(state.bank.hot_ids))
+
+
+def test_prefetch_rejects_oversized_window(toy):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv)
+    state = fed.init_paged_state(params, n_hot=3)
+    with pytest.raises(ValueError, match="n_hot"):
+        fed.pager.prefetch(state, np.arange(5))
+
+
+def test_save_session_refuses_paged_states(toy, tmp_path):
+    params, _, loss_fn, priv = toy
+    fed = _make_fed(loss_fn, priv)
+    state = fed.init_paged_state(params, n_hot=N)
+    with pytest.raises(NotImplementedError, match="paged"):
+        fed.save_session(str(tmp_path), state)
+
+
+# ------------------------------- sharding -----------------------------------
+def test_paged_engine_on_1x1_mesh_bit_exact(toy):
+    from repro.launch.mesh import make_host_mesh
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(15), (K,), 0, N))
+    root = jax.random.PRNGKey(16)
+    mesh = make_host_mesh(model=1)
+
+    fed_a = _make_fed(loss_fn, priv)
+    sa = fed_a.init_paged_state(params, n_hot=N)
+    sa, ma = fed_a.run_rounds(sa, batches, seq, key=root)
+
+    fed_b = _make_fed(loss_fn, priv, mesh=mesh)
+    sb = fed_b.init_paged_state(params, n_hot=N, mesh=mesh)
+    sb, mb = fed_b.run_rounds(sb, batches, seq, key=root)
+
+    np.testing.assert_array_equal(np.asarray(sa.theta_L.buf),
+                                  np.asarray(sb.theta_L.buf))
+    _assert_banks_equal(sa.bank, sb.bank)
+    assert _leaves_equal(ma, mb)

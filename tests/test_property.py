@@ -177,3 +177,59 @@ def test_param_flat_roundtrip_under_bank_shardings(desc, seed, bf16_bank,
         for a, b in zip(jax.tree_util.tree_leaves(tree),
                         jax.tree_util.tree_leaves(row)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------- schedule partitioning + paged-bank trace streaming (PR 9) --------
+_seq = st.lists(st.integers(0, 9), min_size=1, max_size=64)
+
+
+@given(_seq, st.one_of(st.none(), st.integers(1, 8)))
+@settings(**SET)
+def test_partition_never_repeats_an_owner_within_a_group(seq, max_group):
+    from repro.federation.schedules import partition_conflict_free
+    groups = partition_conflict_free(np.asarray(seq, np.int32), max_group)
+    for start, length in groups:
+        members = seq[start:start + length]
+        assert len(members) == len(set(members))
+        if max_group is not None:
+            assert length <= max_group
+
+
+@given(_seq, st.one_of(st.none(), st.integers(1, 8)))
+@settings(**SET)
+def test_pack_groups_preserves_round_order(seq, max_group):
+    # the grouped driver's (n_groups, G_max) index matrix, masked by
+    # valid and flattened group-major, must be exactly 0..K-1 — groups
+    # are consecutive rounds in order, so run_rounds can un-permute
+    # group-major metrics back to round order by flattening
+    from repro.federation.schedules import (pack_groups,
+                                            partition_conflict_free)
+    groups = partition_conflict_free(np.asarray(seq, np.int32), max_group)
+    idx, valid = pack_groups(groups)
+    flat_rounds = idx.reshape(-1)[np.flatnonzero(valid.reshape(-1))]
+    np.testing.assert_array_equal(flat_rounds, np.arange(len(seq)))
+
+
+@given(st.lists(st.integers(0, 99), min_size=1, max_size=40),
+       st.integers(1, 16),
+       st.lists(st.integers(1, 13), min_size=1, max_size=8))
+@settings(**SET)
+def test_trace_ring_replays_exact_tiling(trace, chunk, draws):
+    # chunked device streaming must reproduce np.resize tiling of the
+    # host trace bit-for-bit, across refills, wrap-around, and draws
+    # larger than the chunk (which degrade to a direct upload)
+    from repro.federation.schedules import TraceRing
+    ring = TraceRing(np.asarray(trace, np.int32), chunk=chunk)
+    total = sum(draws)
+    expect = np.resize(np.asarray(trace, np.int32), total)
+    got, cursor = [], 0
+    for k in draws:
+        # window() peeks without advancing: must agree with next()
+        w = np.asarray(ring.window(k))
+        out = np.asarray(ring.next(k))
+        np.testing.assert_array_equal(w, out)
+        np.testing.assert_array_equal(out, expect[cursor:cursor + k])
+        cursor += k
+        got.append(out)
+    np.testing.assert_array_equal(np.concatenate(got), expect)
+    assert ring.resident_bytes <= max(chunk, max(draws)) * 4
