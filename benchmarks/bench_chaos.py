@@ -29,10 +29,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.federation import (DataOwner, FaultPlan, FaultPolicy, Federation,
-                              FederationConfig, PrivatizerConfig)
+                              FederationConfig, LatencyPlan,
+                              PrivatizerConfig, StalenessPolicy)
 
 N_OWNERS, DIM, BATCH = 16, 32, 8
 POLICY = FaultPolicy(max_faults=8, window=32)
+# stale-trace scenario (PR 10): every owner's response time straddles the
+# deadline (0.6 + Exp(0.8-mean) vs 1.2), so roughly half the rounds are
+# answered late — ages grow between grants and the decayed-inertia knob
+# has something to win on
+STALE_LAT = LatencyPlan(base=0.6, jitter=0.8)
+STALE_DEADLINE = 1.2
 
 
 def _model():
@@ -52,13 +59,13 @@ def _batches(k):
 
 
 def _make_fed(loss_fn, horizon, *, fault_policy=None, bank_dtype=None,
-              mechanism="paper", tree_depth=None):
+              mechanism="paper", tree_depth=None, staleness=None):
     owners = [DataOwner(n=10_000, epsilon=2.0, xi=1.0)
               for _ in range(N_OWNERS)]
     fed = Federation(owners, FederationConfig(horizon=horizon, sigma=1e-2,
                                               lr_scale=5.0),
                      mechanism=mechanism, tree_depth=tree_depth,
-                     fault_policy=fault_policy)
+                     fault_policy=fault_policy, staleness=staleness)
     pack = bank_dtype is not None
     fed.make_step(loss_fn, privatizer=PrivatizerConfig(
         xi=1.0, granularity="microbatch", n_microbatches=1),
@@ -131,6 +138,67 @@ def measure_degradation(k: int, rate: float, *, bank_dtype=None,
     return loss_clean, loss_faulty, tallies
 
 
+def measure_retry_overhead(k: int, reps: int = 9):
+    """Interleaved-median seconds for K rounds: the fault-armed engine vs
+    the staleness-armed engine (deadline comparisons, retry/backoff
+    counters, age ticks, decayed inertia) under a fast-enough latency
+    plan — the price of carrying the async runtime when (almost) nothing
+    is late."""
+    params, loss_fn = _model()
+    batches = _batches(k)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+    fed_g = _make_fed(loss_fn, 4 * k, fault_policy=POLICY)
+    fed_s = _make_fed(loss_fn, 4 * k, fault_policy=POLICY,
+                      staleness=StalenessPolicy(deadline=STALE_DEADLINE,
+                                                max_retries=2, decay=0.9))
+    runs = ((fed_g, dict(faults=FaultPlan())),
+            (fed_s, dict(faults=FaultPlan(),
+                         latency=LatencyPlan(base=0.05, jitter=0.05))))
+    for fed, kw in runs:                                        # compile
+        _time_run(fed, fed.init_state(params), batches,  # dpcheck: ignore[DPC105]
+                  owner_seq, root, **kw)
+    times = [[], []]
+    for _ in range(reps):
+        for i, (fed, kw) in enumerate(runs):
+            times[i].append(_time_run(  # dpcheck: ignore[DPC105]
+                fed, fed.init_state(params), batches, owner_seq, root,
+                **kw))
+    return float(np.median(times[0])), float(np.median(times[1]))
+
+
+def measure_staleness_decay(k: int, decay: float = 0.9):
+    """Final mean loss under the stale latency trace: decay=1 (raw
+    eq. 5-7 inertia target) vs decay<1 (lambda^age pull toward the
+    central iterate). Identical schedule/keys/latency draws, so
+    `loss_ratio_decay` (decayed / undecayed, smaller is better) is a
+    seed-deterministic trajectory metric. The tallies ride along so the
+    timeout/retry pressure behind the ratio stays visible."""
+    params, loss_fn = _model()
+    batches = _batches(k)
+    owner_seq = jax.random.randint(jax.random.PRNGKey(3), (k,), 0, N_OWNERS)
+    root = jax.random.PRNGKey(4)
+
+    def final_loss(d):
+        fed = _make_fed(loss_fn, 4 * k, fault_policy=POLICY,
+                        staleness=StalenessPolicy(deadline=STALE_DEADLINE,
+                                                  max_retries=2, decay=d))
+        state, m = fed.run_rounds(fed.init_state(params), batches,
+                                  owner_seq, root, faults=FaultPlan(),
+                                  latency=STALE_LAT)
+        theta = state.theta_L
+        if hasattr(theta, "unpack"):
+            theta = theta.unpack()
+        losses = jax.vmap(lambda b: loss_fn(theta, b))(batches)
+        return float(jnp.mean(losses)), m
+
+    loss_plain, _ = final_loss(1.0)
+    loss_decay, m = final_loss(decay)
+    tallies = {name: int(np.asarray(m[name]).sum())
+               for name in ("timed_out", "retried")}
+    return loss_plain, loss_decay, tallies
+
+
 def overhead_row(dt_plain: float, dt_guarded: float, k: int) -> str:
     return (f"rounds_per_sec_plain={k / dt_plain:.0f};"
             f"rounds_per_sec_guarded={k / dt_guarded:.0f};"
@@ -164,6 +232,19 @@ def run(fast: bool = False):
         codec = bd if isinstance(bd, str) else "f32"
         rows.append((f"chaos/degradation_{mech}_{codec}_p{rate}/K{kd}",
                      0.0, degradation_row(lc, lf, tallies, rate)))
+    # staleness runtime (PR 10)
+    dt_g, dt_s = measure_retry_overhead(k, reps=reps)
+    rows.append((f"chaos/retry_overhead/owners{N_OWNERS}/K{k}",
+                 dt_s / k * 1e6,
+                 f"rounds_per_sec_fault_armed={k / dt_g:.0f};"
+                 f"rounds_per_sec_staleness={k / dt_s:.0f};"
+                 f"overhead_ratio={dt_s / dt_g:.3f}"))
+    lp, ld, tallies = measure_staleness_decay(kd)
+    rows.append((f"chaos/staleness_decay/owners{N_OWNERS}/K{kd}",
+                 0.0,
+                 f"loss_decay1={lp:.5f};loss_decay09={ld:.5f};"
+                 f"loss_ratio_decay={ld / lp:.4f};"
+                 + ";".join(f"n_{n}={v}" for n, v in tallies.items())))
     return rows
 
 

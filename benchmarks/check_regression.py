@@ -50,6 +50,13 @@ CONVERGENCE_GUARDS = (
     # dense-bank cost — pure bytes math, machine-independent. A rise
     # means hot-tier state grew or started scaling with N again.
     ("BENCH_paged_bank.json", "paged_trace", "resident_bytes_ratio"),
+    # staleness runtime (PR 10): decayed inertia must not lose to
+    # decay=1 under a stale latency trace (ratio <= 1 guards the whole
+    # point of the knob), and the deadline/retry bookkeeping must stay
+    # within the fault layer's healthy-path overhead envelope — both
+    # within-run, seed-deterministic ratios
+    ("BENCH_chaos.json", "staleness_decay", "loss_ratio_decay"),
+    ("BENCH_chaos.json", "retry_overhead", "overhead_ratio"),
 )
 
 

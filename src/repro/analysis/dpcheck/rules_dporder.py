@@ -138,8 +138,10 @@ class _OrderWalker:
 
 
 # Calls whose result is a fault-layer guard mask (PR 8): payload checksum
-# verification and the non-finite update guard.
-GUARD_CALLS = ("verify_row", "finite_guard")
+# verification and the non-finite update guard. The staleness runtime
+# (PR 10) adds the learner-deadline mask — an answered-late round is a
+# lawful masked write-back exactly like a guard-rejected one.
+GUARD_CALLS = ("verify_row", "finite_guard", "deadline_guard")
 
 
 def _own_nodes(fn: ast.AST):

@@ -1,6 +1,8 @@
 from repro.checkpoint.store import (MemmapRowStore, MemoryRowStore,
-                                    latest_step, load_checkpoint,
-                                    load_manifest, save_checkpoint)
+                                    latest_step, load_aux_arrays,
+                                    load_checkpoint, load_manifest,
+                                    save_checkpoint)
 
 __all__ = ["MemmapRowStore", "MemoryRowStore", "latest_step",
-           "load_checkpoint", "load_manifest", "save_checkpoint"]
+           "load_aux_arrays", "load_checkpoint", "load_manifest",
+           "save_checkpoint"]

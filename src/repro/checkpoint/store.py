@@ -48,26 +48,42 @@ def _storage_view(a: np.ndarray) -> np.ndarray:
     return a.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[a.dtype.itemsize])
 
 
+# npz namespace for save_checkpoint's aux arrays — keeps them out of the
+# pytree-leaf keyspace so load_checkpoint never mistakes one for a leaf
+_AUX_PREFIX = "__AUX__"
+
+
 def save_checkpoint(directory: str, step: int, state: Any,
-                    extra: Optional[Dict] = None) -> str:
+                    extra: Optional[Dict] = None,
+                    aux_arrays: Optional[Dict[str, Any]] = None) -> str:
     """Atomically write `state` under <directory>/step_<k>.
 
     `extra` (msgpack-serializable dict) rides along in the manifest —
     e.g. a mechanism dispatch journal — and comes back via
-    load_manifest()['extra']."""
+    load_manifest()['extra']. `aux_arrays` (name -> array) are sidecar
+    arrays that are NOT part of the state pytree — e.g. a paged
+    session's cold-tier rows — stored in the SAME npz shard (so the
+    atomic-rename guarantee covers them too) under a reserved prefix,
+    and read back via load_aux_arrays()."""
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = os.path.join(directory, f"_tmp_step_{step:08d}.{os.getpid()}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     arrays = _flatten_with_paths(state)
-    np.savez(os.path.join(tmp, "arrays.npz"),
-             **{k.replace("/", "__SL__"): _storage_view(v)
-                for k, v in arrays.items()})
+    payload = {k.replace("/", "__SL__"): _storage_view(v)
+               for k, v in arrays.items()}
+    aux = {k: np.asarray(v) for k, v in (aux_arrays or {}).items()}
+    payload.update({_AUX_PREFIX + k.replace("/", "__SL__"):
+                    _storage_view(v) for k, v in aux.items()})
+    np.savez(os.path.join(tmp, "arrays.npz"), **payload)
     manifest = {"step": step,
                 "keys": list(arrays.keys()),
                 "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
                 "shapes": {k: list(v.shape) for k, v in arrays.items()}}
+    if aux:
+        manifest["aux_keys"] = list(aux.keys())
+        manifest["aux_dtypes"] = {k: str(v.dtype) for k, v in aux.items()}
     if extra is not None:
         manifest["extra"] = extra
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
@@ -108,6 +124,25 @@ def load_manifest(directory: str, step: int) -> Dict:
         return msgpack.unpackb(f.read())
 
 
+def load_aux_arrays(directory: str, step: int) -> Dict[str, np.ndarray]:
+    """The sidecar arrays a save_checkpoint(aux_arrays=...) stored —
+    {} for checkpoints saved without any. Extended dtypes view back
+    through the logical dtype recorded in the manifest, bit-exact."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    manifest = load_manifest(directory, step)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    dtypes = manifest.get("aux_dtypes") or {}
+    out: Dict[str, np.ndarray] = {}
+    for k in manifest.get("aux_keys") or []:
+        arr = data[_AUX_PREFIX + k.replace("/", "__SL__")]
+        logical = dtypes.get(k)
+        if logical is not None and logical != str(arr.dtype):
+            import ml_dtypes  # noqa: F401
+            arr = arr.view(np.dtype(logical))
+        out[k] = arr
+    return out
+
+
 # --------------------- per-row cold-tier stores -----------------------------
 # Backing tier for the paged owner bank (repro.federation.paging): a row
 # store holds one fixed-shape row per owner, supports PARTIAL read/write
@@ -141,6 +176,19 @@ class MemoryRowStore:
     def written(self) -> int:
         """Rows that hold real (non-default) data."""
         return len(self._rows)
+
+    @property
+    def written_ids(self) -> np.ndarray:
+        """Sorted (written,) int64 ids of rows holding real data — the
+        exact set a checkpoint must persist (unwritten rows reconstruct
+        from the default row for free)."""
+        return np.asarray(sorted(self._rows), np.int64)
+
+    def clear(self) -> None:
+        """Forget every written row (all ids read as default again) —
+        the restore path wipes post-checkpoint writes before replaying
+        a snapshot."""
+        self._rows.clear()
 
     def _check(self, ids: np.ndarray):
         if ids.size and (ids.min() < 0 or ids.max() >= self.n_rows):
@@ -204,6 +252,16 @@ class MemmapRowStore:
     def written(self) -> int:
         return int(self._written.sum())
 
+    @property
+    def written_ids(self) -> np.ndarray:
+        """Sorted (written,) int64 ids of rows holding real data."""
+        return np.flatnonzero(self._written).astype(np.int64)
+
+    def clear(self) -> None:
+        """Forget every written row (all ids read as default again);
+        the sparse pages stay allocated but are no longer visible."""
+        self._written[:] = False
+
     def _check(self, ids: np.ndarray):
         if ids.size and (ids.min() < 0 or ids.max() >= self.n_rows):
             raise IndexError(
@@ -238,7 +296,8 @@ def load_checkpoint(directory: str, step: int, like: Any) -> Any:
     d = os.path.join(directory, f"step_{step:08d}")
     manifest = load_manifest(directory, step)
     data = np.load(os.path.join(d, "arrays.npz"))
-    arrays = {k.replace("__SL__", "/"): data[k] for k in data.files}
+    arrays = {k.replace("__SL__", "/"): data[k] for k in data.files
+              if not k.startswith(_AUX_PREFIX)}
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:

@@ -17,8 +17,8 @@ from repro.federation.deep import (AsyncDPConfig, AsyncDPState, TreeNoise,
 from repro.federation.dp_sgd import (PrivatizerConfig, clip_tree,
                                      private_grad, resolve_interpret)
 from repro.federation.faults import (CORRUPT_PAYLOAD, DROP, NONFINITE_GRAD,
-                                     OK, STALE, FaultPlan, FaultPolicy,
-                                     FaultState, as_fault_codes,
+                                     OK, STALE, TIMEOUT, FaultPlan,
+                                     FaultPolicy, FaultState, as_fault_codes,
                                      bank_checksums, init_fault_state)
 from repro.federation.flatten import (BankCodec, FlatSpec, PagedBank,
                                       ParamFlat, QuantBank, as_bank_codec,
@@ -45,3 +45,9 @@ from repro.federation.schedules import (AvailabilityTraceSchedule,
                                         pack_groups,
                                         partition_conflict_free)
 from repro.federation.session import Federation
+from repro.federation.staleness import (STALE_SALT, LatencyPlan,
+                                        StalenessPolicy, StalenessState,
+                                        as_tick_times, deadline_guard,
+                                        init_staleness_state,
+                                        merge_timeout_codes,
+                                        staleness_tick, staleness_weight)

@@ -73,6 +73,9 @@ from repro.federation.faults import FaultPolicy, FaultState, init_fault_state
 from repro.federation.flatten import (FlatSpec, PagedBank, ParamFlat,
                                       QuantBank, init_flat_bank, pack_params)
 from repro.federation.privacy import DeviceLedger, make_device_ledger
+from repro.federation.staleness import (StalenessPolicy, StalenessState,
+                                        deadline_guard, init_staleness_state,
+                                        staleness_tick, staleness_weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +106,14 @@ class AsyncDPConfig:
     # non-finite detection, stale rejection) and quarantine windows,
     # and the state gains a FaultState (AsyncDPState.faults).
     fault_policy: Optional[FaultPolicy] = None
+    # Asynchronous runtime (see repro.federation.staleness): None = no
+    # latency/deadline/retry/decay concept and the drivers trace the
+    # fault-armed program verbatim; a StalenessPolicy adds the TIMEOUT
+    # outcome, per-owner retry-with-backoff counters and the
+    # decay**age inertia weight, and the state gains a StalenessState
+    # (AsyncDPState.stale). Requires fault_policy (TIMEOUT lives in the
+    # fault algebra) — a never-quarantine policy changes nothing.
+    staleness: Optional[StalenessPolicy] = None
 
     @property
     def n_total(self) -> int:
@@ -130,6 +141,10 @@ class AsyncDPState(NamedTuple):
     # cfg.fault_policy is set: per-owner bank-row checksums, fault
     # windows, quarantine flags. None = fault layer off.
     faults: Optional[FaultState] = None
+    # Device-resident async-runtime counters (staleness.StalenessState)
+    # when cfg.staleness is set: round clock, per-owner last-grant ages,
+    # backoff cooldowns, retry budgets. None = runtime layer off.
+    stale: Optional[StalenessState] = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -210,6 +225,20 @@ def _tree_write(tree: TreeNoise, new_row, owner_idx, grant=1,
                         counts=tree.counts.at[owner_idx].add(grant))
 
 
+def _init_staleness(cfg: AsyncDPConfig) -> Optional[StalenessState]:
+    """Fresh runtime counters when cfg.staleness is armed; refuses a
+    staleness config without the fault layer (TIMEOUT is a fault code,
+    and every driver's staleness algebra lives in its faulted body)."""
+    if cfg.staleness is None:
+        return None
+    if cfg.fault_policy is None:
+        raise ValueError(
+            "cfg.staleness rides on the fault algebra (TIMEOUT is a fault "
+            "code); arm cfg.fault_policy too — a never-quarantine "
+            "FaultPolicy(max_faults=2**30, window=2**30) changes nothing")
+    return init_staleness_state(cfg.n_owners, cfg.staleness)
+
+
 def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
     if cfg.init_bank_zero:
         params = jax.tree_util.tree_map(jnp.zeros_like, params)
@@ -219,7 +248,8 @@ def init_state(params, cfg: AsyncDPConfig) -> AsyncDPState:
               else init_fault_state(bank, cfg.n_owners))
     return AsyncDPState(params, bank, jnp.zeros((), jnp.int32),
                         make_device_ledger(cfg.effective_caps),
-                        init_tree_noise(cfg, params), faults)
+                        init_tree_noise(cfg, params), faults,
+                        _init_staleness(cfg))
 
 
 def init_state_flat(params, cfg: AsyncDPConfig,
@@ -280,8 +310,12 @@ def init_state_flat(params, cfg: AsyncDPConfig,
         from repro.sharding.rules import flat_shardings
         sh = flat_shardings(mesh, cfg.n_owners, flat.size)
         faults = jax.device_put(faults, sh.faults)
+    stale = _init_staleness(cfg)
+    if stale is not None and mesh is not None:
+        # per-owner (N,) runtime counters replicate like the ledger
+        stale = jax.device_put(stale, sh.ledger)
     return AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger, tree,
-                        faults)
+                        faults, stale)
 
 
 def _flat_shardings_for(mesh, theta_L, bank):
@@ -506,7 +540,8 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         return new_L, new_i, metrics, zeta
 
     def compute(theta_L, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None, row_idx=None):
+                tree_row=None, tree_count=None, row_idx=None,
+                stale_w=None):
         if isinstance(bank, PagedBank):
             raise TypeError(
                 "PagedBank needs the flat engine (paging.init_paged_state "
@@ -516,11 +551,19 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
             lambda leaf: jax.lax.dynamic_index_in_dim(leaf, owner_idx, 0,
                                                    keepdims=False),
             bank)
+        # decayed inertia target (staleness.staleness_weight): the round
+        # runs against a copy pulled toward theta_L, but the RAW row is
+        # what comes back — masked rounds write it back verbatim. The
+        # hook is statically absent at decay=1 (verbatim trace).
+        theta_eff = theta_i if stale_w is None else jax.tree_util.tree_map(
+            lambda l, i: (l.astype(jnp.float32) + stale_w
+                          * (i.astype(jnp.float32) - l.astype(jnp.float32))
+                          ).astype(i.dtype), theta_L, theta_i)
         d = cfg.tree_depth
         if tree_row is None or not d:
             # no tree, or the degenerate depth-0 tree: the round IS the
             # independent-noise round (bit-for-bit — parity contract)
-            new_L, new_i, metrics, _ = inner(theta_L, theta_i, batch,
+            new_L, new_i, metrics, _ = inner(theta_L, theta_eff, batch,
                                              owner_idx, key)
             return new_L, new_i, theta_i, metrics, tree_row
         if cfg.privatizer.fused_kernel:
@@ -537,7 +580,7 @@ def _round_math(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array]):
         extra = jax.tree_util.tree_map(
             lambda nd: -jnp.sum(jnp.where(bcast(retired, nd), nd, 0.0),
                                 axis=0), tree_row)
-        new_L, new_i, metrics, zeta = inner(theta_L, theta_i, batch,
+        new_L, new_i, metrics, zeta = inner(theta_L, theta_eff, batch,
                                             owner_idx, key,
                                             noise_extra=extra)
         new_row = jax.tree_util.tree_map(
@@ -646,7 +689,8 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     pcfg = cfg.privatizer
 
     def compute(theta_L: ParamFlat, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None, row_idx=None):
+                tree_row=None, tree_count=None, row_idx=None,
+                stale_w=None):
         spec = theta_L.spec
         sh = _flat_shardings_for(mesh, theta_L, bank)
         d = cfg.tree_depth
@@ -665,12 +709,17 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
             # the gathered row keeps the bank's P-axis layout (== theta's),
             # so theta_bar and the whole round stay local in P
             theta_i = jax.lax.with_sharding_constraint(theta_i, sh.row)
+        # decayed inertia target — same contract as the pytree path: the
+        # round consumes the pulled-in copy, the RAW row is returned for
+        # the masked write-backs. Statically absent at decay=1.
+        theta_eff = (theta_i if stale_w is None
+                     else theta_L.buf + stale_w * (theta_i - theta_L.buf))
         if pcfg.fused_kernel:
             if pcfg.mechanism != "laplace":
                 raise ValueError(
                     "fused_kernel implements the laplace mechanism")
             from repro.kernels.dp_clip_noise.ops import dp_round_flat
-            tb = 0.5 * (theta_L.buf + theta_i)                     # (6)
+            tb = 0.5 * (theta_L.buf + theta_eff)                   # (6)
             ns = scales[owner_idx]
             acc, gain, pm = _flat_clipped_grad_acc(loss_fn, spec, pcfg,
                                                    tb, batch)
@@ -715,7 +764,7 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
                 extra = None
             try:
                 tl_tree, ti_tree = jax.lax.optimization_barrier(
-                    (spec.unpack(theta_L.buf), spec.unpack(theta_i)))
+                    (spec.unpack(theta_L.buf), spec.unpack(theta_eff)))
             except NotImplementedError:
                 # no batching rule for the barrier (vmapped by the
                 # owner-parallel grouped driver). The barrier is
@@ -723,7 +772,7 @@ def _round_math_flat(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
                 # protects the scan-carry BIT-parity contract, which the
                 # grouped mode does not promise for groups > 1 anyway.
                 tl_tree, ti_tree = (spec.unpack(theta_L.buf),
-                                    spec.unpack(theta_i))
+                                    spec.unpack(theta_eff))
             new_L_t, new_i_t, metrics, zeta = tree_inner(
                 tl_tree, ti_tree, batch, owner_idx, key,
                 noise_extra=extra)
@@ -765,14 +814,15 @@ def _round_compute(loss_fn, cfg: AsyncDPConfig, scales: Optional[jax.Array],
     flat_c = _round_math_flat(loss_fn, cfg, scales, tree_c.inner, mesh=mesh)
 
     def compute(theta_L, bank, batch, owner_idx, key,
-                tree_row=None, tree_count=None, row_idx=None):
+                tree_row=None, tree_count=None, row_idx=None,
+                stale_w=None):
         if isinstance(theta_L, ParamFlat):
             return flat_c(theta_L, bank, batch, owner_idx, key,
                           tree_row=tree_row, tree_count=tree_count,
-                          row_idx=row_idx)
+                          row_idx=row_idx, stale_w=stale_w)
         return tree_c(theta_L, bank, batch, owner_idx, key,
                       tree_row=tree_row, tree_count=tree_count,
-                      row_idx=row_idx)
+                      row_idx=row_idx, stale_w=stale_w)
 
     return compute
 
@@ -819,9 +869,23 @@ def _require_fault_policy(cfg: AsyncDPConfig, state: AsyncDPState):
     return cfg.fault_policy
 
 
+def _require_staleness(cfg: AsyncDPConfig, state: AsyncDPState):
+    """Trace-time consistency check between cfg.staleness and the
+    state's StalenessState (both armed or both absent)."""
+    if (state.stale is None) != (cfg.staleness is None):
+        raise ValueError(
+            "cfg.staleness and the state's runtime counters must be armed "
+            "together; build the driver and the state from the same config")
+    if state.stale is not None and state.faults is None:
+        raise ValueError(
+            "the staleness runtime rides on the fault algebra; the state "
+            "must carry a FaultState (arm cfg.fault_policy)")
+    return cfg.staleness
+
+
 def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
                    batch, owner_idx, key, fcode, answered, sh,
-                   row_idx=None):
+                   row_idx=None, stale_w=None):
     """One fault-guarded round, shared by the per-round step and the
     fused scan (scalar `owner_idx`/`fcode`).
 
@@ -836,9 +900,16 @@ def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
     `metrics["faulted"]` — epsilon for it was already charged at
     response time (see faults module docstring). `row_idx` (paged
     banks) is the resolved hot slot every row gather/scatter uses,
-    while checksum/counter columns stay per-owner.
+    while checksum/counter columns stay per-owner. A TIMEOUT code fails
+    the `deadline_guard` and masks the round like any other guard, but
+    lands in `metrics["timed_out"]` instead of `metrics["faulted"]`
+    (lateness dominates payload inspection: the learner discards a late
+    response unexamined — epsilon spent either way). `stale_w`
+    (staleness decay armed) is the round's lambda**age inertia weight,
+    handed through to compute.
 
-    Returns (theta_L, bank, tree, faults, metrics, apply, guard_rej).
+    Returns (theta_L, bank, tree, faults, metrics, apply, guard_rej,
+    timed).
     """
     fs = state.faults
     tr = state.tree
@@ -852,12 +923,14 @@ def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
                                     row_idx=row_idx)
     new_L, new_i, theta_i, metrics, new_row = compute(
         state.theta_L, state.bank, batch, owner_idx, key,
-        tree_row=row, tree_count=cnt, row_idx=row_idx)
+        tree_row=row, tree_count=cnt, row_idx=row_idx, stale_w=stale_w)
     new_i = _faults.inject_nonfinite(new_i, fcode == _faults.NONFINITE_GRAD)
     guard_ok = (payload_ok & _faults.finite_guard((new_i, new_L))
                 & (fcode != _faults.STALE))
-    apply = answered & guard_ok
-    guard_rej = answered & ~guard_ok
+    on_time = deadline_guard(fcode)
+    apply = answered & guard_ok & on_time
+    timed = answered & ~on_time
+    guard_rej = answered & on_time & ~guard_ok
     theta_L = jax.tree_util.tree_map(
         lambda nl, ol: jnp.where(apply, nl, ol), new_L, state.theta_L)
     if _bank_is_quant(state.bank):
@@ -886,8 +959,8 @@ def _guarded_round(compute, cfg: AsyncDPConfig, state: AsyncDPState,
     fs = _faults.update_checksum(fs, bank, owner_idx, apply,
                                  row_idx=row_idx)
     metrics = dict(metrics)
-    metrics.update(faulted=guard_rej)
-    return theta_L, bank, tr, fs, metrics, apply, guard_rej
+    metrics.update(faulted=guard_rej, timed_out=timed)
+    return theta_L, bank, tr, fs, metrics, apply, guard_rej, timed
 
 
 def make_train_step(loss_fn, cfg: AsyncDPConfig,
@@ -920,16 +993,29 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
             # (the pager failed its prefetch contract) is a masked no-op
             answered = jnp.bool_(True) if hit is None else hit
             policy = _require_fault_policy(cfg, state)
+            spolicy = _require_staleness(cfg, state)
+            ss = state.stale
             fcode = (jnp.int8(_faults.OK) if fault_code is None
                      else jnp.asarray(fault_code, jnp.int8))
-            theta_L, bank, tr, fs, metrics, apply, guard_rej = \
+            stale_w = None
+            if ss is not None and spolicy.decay != 1.0:
+                stale_w = staleness_weight(ss, owner_idx, ss.clock, spolicy)
+            theta_L, bank, tr, fs, metrics, apply, guard_rej, timed = \
                 _guarded_round(compute, cfg, state, batch, owner_idx, key,
-                               fcode, answered, sh, row_idx=slot)
+                               fcode, answered, sh, row_idx=slot,
+                               stale_w=stale_w)
             fs = _faults.fault_tick(fs, owner_idx, guard_rej, policy,
                                     active=answered)
+            if ss is not None:
+                # dispatched rounds are never retries (the session masks
+                # cooldown rounds host-side, before the step is called)
+                ss = staleness_tick(ss, owner_idx, ss.clock,
+                                    is_retry=jnp.bool_(False), apply=apply,
+                                    timed=timed, policy=spolicy,
+                                    active=jnp.bool_(True), ticks=1)
             return AsyncDPState(theta_L, bank,
                                 state.step + apply.astype(jnp.int32),
-                                state.ledger, tr, fs), metrics
+                                state.ledger, tr, fs, ss), metrics
         if fault_code is not None:
             raise ValueError(
                 "fault injection needs a fault-armed state; build the "
@@ -973,7 +1059,8 @@ def make_train_step(loss_fn, cfg: AsyncDPConfig,
             tr = _constrain_tree(tr, sh)
         bump = 1 if hit is None else hit.astype(jnp.int32)
         return AsyncDPState(new_L, bank, state.step + bump,
-                            state.ledger, tr, state.faults), metrics
+                            state.ledger, tr, state.faults,
+                            state.stale), metrics
 
     return step
 
@@ -1060,20 +1147,26 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owner_idx)
         return AsyncDPState(theta_L, bank, state.step + oki, ledger,
-                            tr, state.faults), metrics
+                            tr, state.faults, state.stale), metrics
 
     def body_faulted(state: AsyncDPState, xs):
         # fault-armed scan round: same algebra as the per-round step's
         # faulted branch, with ledger authorization and quarantine
         # resolved in-graph. Epsilon is charged at response time: spent
-        # counts every ANSWERED round (guard-rejected ones included),
-        # a DROP before the answer spends nothing (ledger.dropped), and
-        # quarantined rounds are masked without refusal accounting
-        # (ledger.quarantined).
+        # counts every ANSWERED round (guard-rejected and timed-out ones
+        # included), a DROP before the answer spends nothing
+        # (ledger.dropped), and quarantined rounds are masked without
+        # refusal accounting (ledger.quarantined). With the staleness
+        # runtime armed, an owner whose backoff cooldown is live is a
+        # masked RE-DISPATCH (ledger.retried, no epsilon — the learner
+        # never sent the query); precedence is quarantine > backoff >
+        # budget > drop.
         batch, owner_idx, key, fcode = xs
         led = state.ledger
         fs = state.faults
+        ss = state.stale
         policy = cfg.fault_policy
+        spolicy = cfg.staleness
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         slot, hit = _bank_slot(state.bank, owner_idx)
         quar = fs.quarantined[owner_idx]
@@ -1083,29 +1176,54 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
             # nothing, counts in `refused` unless quarantined) — see the
             # plain body
             led_auth = led_auth & hit
-        auth = led_auth & ~quar
+        if ss is not None:
+            in_backoff = ss.cooldown[owner_idx] > 0
+            is_retry = ~quar & in_backoff
+            avail = ~quar & ~in_backoff
+        else:
+            is_retry = None
+            avail = ~quar
+        auth = led_auth & avail
         is_drop = fcode == _faults.DROP
         answered = auth & ~is_drop
-        theta_L, bank, tr, fs, metrics, apply, guard_rej = _guarded_round(
-            compute, cfg, state, batch, owner_idx, key, fcode, answered, sh,
-            row_idx=slot)
-        ledger = led.replace(
+        stale_w = None
+        if ss is not None and spolicy.decay != 1.0:
+            stale_w = staleness_weight(ss, owner_idx, ss.clock, spolicy)
+        theta_L, bank, tr, fs, metrics, apply, guard_rej, timed = \
+            _guarded_round(compute, cfg, state, batch, owner_idx, key,
+                           fcode, answered, sh, row_idx=slot,
+                           stale_w=stale_w)
+        upd = dict(
             spent=led.spent.at[owner_idx].add(answered.astype(jnp.int32)),
             refused=led.refused.at[owner_idx].add(
-                (~quar & ~led_auth).astype(jnp.int32)),
+                (avail & ~led_auth).astype(jnp.int32)),
             dropped=led.dropped.at[owner_idx].add(
                 (auth & is_drop).astype(jnp.int32)),
             faulted=led.faulted.at[owner_idx].add(
                 guard_rej.astype(jnp.int32)),
             quarantined=led.quarantined.at[owner_idx].add(
-                quar.astype(jnp.int32)))
+                quar.astype(jnp.int32)),
+            timed_out=led.timed_out.at[owner_idx].add(
+                timed.astype(jnp.int32)))
+        if ss is not None:
+            upd["retried"] = led.retried.at[owner_idx].add(
+                is_retry.astype(jnp.int32))
+        ledger = led.replace(**upd)
+        # timeouts and retries are NOT quarantine events: slowness has
+        # its own escalation path (backoff); a backed-off round is not
+        # even a contact (the learner never dispatched)
         fs = _faults.fault_tick(fs, owner_idx, guard_rej | (auth & is_drop),
-                                policy, active=~quar)
-        metrics.update(refused=~quar & ~led_auth, dropped=auth & is_drop,
+                                policy, active=avail)
+        metrics.update(refused=avail & ~led_auth, dropped=auth & is_drop,
                        quarantined=quar, owner=owner_idx)
+        if ss is not None:
+            metrics.update(retried=is_retry)
+            ss = staleness_tick(ss, owner_idx, ss.clock, is_retry=is_retry,
+                                apply=apply, timed=timed, policy=spolicy,
+                                active=jnp.bool_(True), ticks=1)
         return AsyncDPState(theta_L, bank,
                             state.step + apply.astype(jnp.int32),
-                            ledger, tr, fs), metrics
+                            ledger, tr, fs, ss), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys,
             fault_codes=None):
@@ -1122,6 +1240,7 @@ def make_fused_rounds(loss_fn, cfg: AsyncDPConfig,
             return jax.lax.scan(body, state, (batches, owner_seq, keys),
                                 unroll=unroll)
         _require_fault_policy(cfg, state)
+        _require_staleness(cfg, state)
         if fault_codes is None:
             fault_codes = jnp.zeros(owner_seq.shape, jnp.int8)
         return jax.lax.scan(body_faulted, state,
@@ -1188,11 +1307,47 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
     compute = _round_compute(loss_fn, cfg, scales, mesh=mesh)
     n_owners = cfg.n_owners
 
-    def vmap_rounds(theta_L, bank, tr, batch_g, owners, keys_g, slots):
+    def vmap_rounds(theta_L, bank, tr, batch_g, owners, keys_g, slots,
+                    stale_w=None):
         """vmapped round compute over the group members. `slots` is the
         per-member hot-slot vector for paged banks, None otherwise (the
-        non-paged call chain is verbatim — no extra traced operand).
+        non-paged call chain is verbatim — no extra traced operand);
+        `stale_w` is the per-member (G,) decay-weight vector when the
+        staleness decay is armed, statically absent otherwise.
         Returns (new_L, new_i, theta_i, metrics, new_rows, rows_t)."""
+        if stale_w is not None:
+            # decayed-inertia variant: the same per-member calls with the
+            # weight vector mapped alongside
+            if tr is not None:
+                if slots is None:
+                    rows_t, cnts = jax.vmap(
+                        lambda o: _tree_row_of(tr, o))(owners)
+                    new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                        lambda b, o, k, r, c, w: compute(
+                            theta_L, bank, b, o, k, tree_row=r,
+                            tree_count=c, stale_w=w))(
+                            batch_g, owners, keys_g, rows_t, cnts, stale_w)
+                else:
+                    rows_t, cnts = jax.vmap(
+                        lambda o, s: _tree_row_of(tr, o, s))(owners, slots)
+                    new_L, new_i, theta_i, metrics, new_rows = jax.vmap(
+                        lambda b, o, k, r, c, s, w: compute(
+                            theta_L, bank, b, o, k, tree_row=r,
+                            tree_count=c, row_idx=s, stale_w=w))(
+                            batch_g, owners, keys_g, rows_t, cnts, slots,
+                            stale_w)
+                return new_L, new_i, theta_i, metrics, new_rows, rows_t
+            if slots is None:
+                new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                    lambda b, o, k, w: compute(theta_L, bank, b, o, k,
+                                               stale_w=w))(
+                        batch_g, owners, keys_g, stale_w)
+            else:
+                new_L, new_i, theta_i, metrics, _ = jax.vmap(
+                    lambda b, o, k, s, w: compute(theta_L, bank, b, o, k,
+                                                  row_idx=s, stale_w=w))(
+                        batch_g, owners, keys_g, slots, stale_w)
+            return new_L, new_i, theta_i, metrics, None, None
         if tr is not None:
             # distinct owners per group (the partition's invariant), so
             # the per-member tree rows are disjoint reads AND writes
@@ -1330,7 +1485,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         metrics = dict(metrics)
         metrics.update(refused=~ok, owner=owners)
         return AsyncDPState(theta_L, bank, state.step + jnp.sum(oki),
-                            ledger, tr, state.faults), metrics
+                            ledger, tr, state.faults, state.stale), metrics
 
     def body_faulted(state: AsyncDPState, xs):
         # fault-armed group: the per-member grant algebra of the fused
@@ -1343,7 +1498,9 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         batch_g, owners, keys_g, valid, fcodes_g = xs
         led = state.ledger
         fs = state.faults
+        ss = state.stale
         policy = cfg.fault_policy
+        spolicy = cfg.staleness
         tr = state.tree
         sh = _flat_shardings_for(mesh, state.theta_L, state.bank)
         theta_L, bank = state.theta_L, state.bank
@@ -1356,9 +1513,28 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
         else:
             slots, hit_g = None, None
         quar = fs.quarantined[owners]
-        auth = led_auth & ~quar & valid                        # (G,)
+        if ss is not None:
+            # each member's round position within the dispatch: groups
+            # are consecutive runs of the schedule and members sit in
+            # round order, so the valid-rank offset from the group-entry
+            # clock IS the sequential round index (ages/`last_grant`
+            # stamps match the fused scan exactly; per-owner counters
+            # are group-entry reads, exact because owners are distinct
+            # within a group)
+            t_g = ss.clock + jnp.cumsum(valid.astype(jnp.int32)) - 1
+            in_backoff = ss.cooldown[owners] > 0
+            is_retry = valid & ~quar & in_backoff
+            avail = ~quar & ~in_backoff
+        else:
+            t_g = None
+            is_retry = None
+            avail = ~quar
+        auth = led_auth & avail & valid                        # (G,)
         is_drop = fcodes_g == _faults.DROP
         answered = auth & ~is_drop
+        stale_w = None
+        if ss is not None and spolicy.decay != 1.0:
+            stale_w = staleness_weight(ss, owners, t_g, spolicy)
         if slots is None:
             payload_ok = jax.vmap(
                 lambda o, c: _faults.verify_row(fs.checksum, bank, o, c))(
@@ -1370,13 +1546,16 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
                 owners, fcodes_g == _faults.CORRUPT_PAYLOAD, slots)
 
         new_L, new_i, theta_i, metrics, new_rows, rows_t = vmap_rounds(
-            theta_L, bank, tr, batch_g, owners, keys_g, slots)
+            theta_L, bank, tr, batch_g, owners, keys_g, slots,
+            stale_w=stale_w)
         new_i = _faults.inject_nonfinite(
             new_i, fcodes_g == _faults.NONFINITE_GRAD)
         finite = jax.vmap(_faults.finite_guard)((new_i, new_L))
         guard_ok = payload_ok & finite & (fcodes_g != _faults.STALE)
-        apply = answered & guard_ok
-        guard_rej = answered & ~guard_ok
+        on_time = deadline_guard(fcodes_g)
+        apply = answered & guard_ok & on_time
+        timed = answered & ~on_time
+        guard_rej = answered & on_time & ~guard_ok
 
         owners_w = jnp.where(valid, owners, n_owners)          # pad -> drop
         idx_w, idx_c = scatter_indices(bank, owners, valid, slots, hit_g)
@@ -1435,26 +1614,40 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             tr = _constrain_tree(tr, sh)
         fs = _faults.update_checksum(fs, bank, owners, apply,
                                      row_idx=slots)
-        ledger = led.replace(
+        upd = dict(
             spent=led.spent.at[owners_w].add(
                 answered.astype(jnp.int32), mode="drop"),
             refused=led.refused.at[owners_w].add(
-                (valid & ~quar & ~led_auth).astype(jnp.int32), mode="drop"),
+                (valid & avail & ~led_auth).astype(jnp.int32), mode="drop"),
             dropped=led.dropped.at[owners_w].add(
                 (auth & is_drop).astype(jnp.int32), mode="drop"),
             faulted=led.faulted.at[owners_w].add(
                 guard_rej.astype(jnp.int32), mode="drop"),
             quarantined=led.quarantined.at[owners_w].add(
-                (valid & quar).astype(jnp.int32), mode="drop"))
+                (valid & quar).astype(jnp.int32), mode="drop"),
+            timed_out=led.timed_out.at[owners_w].add(
+                timed.astype(jnp.int32), mode="drop"))
+        if ss is not None:
+            upd["retried"] = led.retried.at[owners_w].add(
+                is_retry.astype(jnp.int32), mode="drop")
+        ledger = led.replace(**upd)
+        # see the fused body: timeouts/retries are not quarantine events
         fs = _faults.fault_tick(fs, owners, guard_rej | (auth & is_drop),
-                                policy, active=valid & ~quar)
+                                policy, active=valid & avail)
         metrics = dict(metrics)
-        metrics.update(refused=valid & ~quar & ~led_auth,
+        metrics.update(refused=valid & avail & ~led_auth,
                        dropped=auth & is_drop, faulted=guard_rej,
-                       quarantined=valid & quar, owner=owners)
+                       quarantined=valid & quar, timed_out=timed,
+                       owner=owners)
+        if ss is not None:
+            metrics.update(retried=is_retry)
+            ss = staleness_tick(ss, owners, t_g, is_retry=is_retry,
+                                apply=apply, timed=timed, policy=spolicy,
+                                active=valid,
+                                ticks=jnp.sum(valid.astype(jnp.int32)))
         return AsyncDPState(theta_L, bank,
                             state.step + jnp.sum(apply.astype(jnp.int32)),
-                            ledger, tr, fs), metrics
+                            ledger, tr, fs, ss), metrics
 
     def run(state: AsyncDPState, batches, owner_seq, keys, group_idx,
             group_valid, n_groups=None, fault_codes=None):
@@ -1472,6 +1665,7 @@ def make_group_rounds(loss_fn, cfg: AsyncDPConfig,
             extra = ()
         else:
             _require_fault_policy(cfg, state)
+            _require_staleness(cfg, state)
             if fault_codes is None:
                 fault_codes = jnp.zeros(owner_seq.shape, jnp.int8)
             b = body_faulted

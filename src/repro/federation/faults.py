@@ -52,8 +52,11 @@ DROP = 1                # owner unreachable: query never answered, no eps
 STALE = 2               # owner answered with a stale/replayed update
 NONFINITE_GRAD = 3      # owner answered with a non-finite update
 CORRUPT_PAYLOAD = 4     # owner's resident bank row arrived corrupted
+TIMEOUT = 5             # owner answered AFTER the learner deadline: the
+                        # noisy query left the owner (eps spent), but the
+                        # update is masked (see federation.staleness)
 
-FAULT_CODES = (OK, DROP, STALE, NONFINITE_GRAD, CORRUPT_PAYLOAD)
+FAULT_CODES = (OK, DROP, STALE, NONFINITE_GRAD, CORRUPT_PAYLOAD, TIMEOUT)
 
 # Dedicated fold_in stream for fault draws — disjoint from round keys
 # (raw split) and codec bits (_CODEC_SALT) by construction.
@@ -333,7 +336,7 @@ def as_fault_codes(codes, k: Optional[int] = None) -> jax.Array:
     if isinstance(codes, jax.core.Tracer):
         return codes.astype(jnp.int8)
     arr = jax.device_get(codes)
-    if arr.size and (arr.min() < OK or arr.max() > CORRUPT_PAYLOAD):
+    if arr.size and (arr.min() < OK or arr.max() > TIMEOUT):
         raise ValueError(
             f"fault codes must lie in {FAULT_CODES}, got range "
             f"[{arr.min()}, {arr.max()}]")
@@ -341,7 +344,7 @@ def as_fault_codes(codes, k: Optional[int] = None) -> jax.Array:
 
 
 __all__ = [
-    "OK", "DROP", "STALE", "NONFINITE_GRAD", "CORRUPT_PAYLOAD",
+    "OK", "DROP", "STALE", "NONFINITE_GRAD", "CORRUPT_PAYLOAD", "TIMEOUT",
     "FAULT_CODES", "FAULT_SALT", "CORRUPT_CSUM_DELTA",
     "FaultPlan", "FaultPolicy", "FaultState",
     "init_fault_state", "bank_checksums", "row_checksum", "verify_row",

@@ -118,6 +118,12 @@ class _LedgeredMechanism:
         self.dropped_rounds = {i: 0 for i in range(len(self.owners))}
         self.faulted_rounds = {i: 0 for i in range(len(self.owners))}
         self.quarantined_rounds = {i: 0 for i in range(len(self.owners))}
+        # Staleness-runtime tallies (PR 10): `timed_out` rounds answered
+        # past the deadline (epsilon already in `spent`, like `faulted`);
+        # `retried` rounds masked in backoff (never dispatched: no
+        # epsilon, like `quarantined`).
+        self.timed_out_rounds = {i: 0 for i in range(len(self.owners))}
+        self.retried_rounds = {i: 0 for i in range(len(self.owners))}
         # Device-ledger counters already folded back by reconcile() —
         # deltas against these make reconcile idempotent over chunked
         # run_rounds()/reconcile() cycles.
@@ -126,6 +132,8 @@ class _LedgeredMechanism:
         self._folded_dropped = {i: 0 for i in range(len(self.owners))}
         self._folded_faulted = {i: 0 for i in range(len(self.owners))}
         self._folded_quarantined = {i: 0 for i in range(len(self.owners))}
+        self._folded_timed_out = {i: 0 for i in range(len(self.owners))}
+        self._folded_retried = {i: 0 for i in range(len(self.owners))}
         self._snapshot_sid = 0       # generation of the live device ledger
 
     @property
@@ -174,6 +182,17 @@ class _LedgeredMechanism:
         answer, no epsilon, no refusal)."""
         self.quarantined_rounds[int(owner_idx)] += 1
 
+    def record_timed_out(self, owner_idx: int) -> None:
+        """Tally a round answered past the learner deadline. The epsilon
+        was already charged by authorize() — this only records that the
+        spend arrived too late to apply."""
+        self.timed_out_rounds[int(owner_idx)] += 1
+
+    def record_retried(self, owner_idx: int) -> None:
+        """Tally a round masked because the owner sat in retry backoff
+        (never dispatched: no answer, no epsilon, no refusal)."""
+        self.retried_rounds[int(owner_idx)] += 1
+
     def authorize_many(self, owner_idx: int, count: int) -> int:
         """Bulk-ledger `count` responses for one owner (order-free: how
         many are granted depends only on the cap, not the sequence)."""
@@ -189,6 +208,8 @@ class _LedgeredMechanism:
             summary[i]["dropped"] = self.dropped_rounds[i]
             summary[i]["faulted"] = self.faulted_rounds[i]
             summary[i]["quarantined"] = self.quarantined_rounds[i]
+            summary[i]["timed_out"] = self.timed_out_rounds[i]
+            summary[i]["retried"] = self.retried_rounds[i]
         return summary
 
     def device_ledger(self) -> DeviceLedger:
@@ -210,6 +231,8 @@ class _LedgeredMechanism:
             dropped=col(self.dropped_rounds),
             faulted=col(self.faulted_rounds),
             quarantined=col(self.quarantined_rounds),
+            timed_out=col(self.timed_out_rounds),
+            retried=col(self.retried_rounds),
             sid=self._snapshot_sid)
         for i in range(n):
             self._folded_spent[i] = self._accountant.ledgers[i].responses
@@ -217,6 +240,8 @@ class _LedgeredMechanism:
             self._folded_dropped[i] = self.dropped_rounds[i]
             self._folded_faulted[i] = self.faulted_rounds[i]
             self._folded_quarantined[i] = self.quarantined_rounds[i]
+            self._folded_timed_out[i] = self.timed_out_rounds[i]
+            self._folded_retried[i] = self.retried_rounds[i]
         return led
 
     def reconcile(self, ledger: DeviceLedger) -> Dict[int, Dict]:
@@ -233,6 +258,8 @@ class _LedgeredMechanism:
         dropped = np.asarray(ledger.dropped)
         faulted = np.asarray(ledger.faulted)
         quarantined = np.asarray(ledger.quarantined)
+        timed_out = np.asarray(ledger.timed_out)
+        retried = np.asarray(ledger.retried)
         if spent.shape != (len(self.owners),):
             raise ValueError(f"device ledger for {spent.shape[0]} owners, "
                              f"mechanism has {len(self.owners)}")
@@ -250,7 +277,10 @@ class _LedgeredMechanism:
             d_dropped = int(dropped[i]) - self._folded_dropped[i]
             d_faulted = int(faulted[i]) - self._folded_faulted[i]
             d_quar = int(quarantined[i]) - self._folded_quarantined[i]
-            if min(d_spent, d_refused, d_dropped, d_faulted, d_quar) < 0:
+            d_timed = int(timed_out[i]) - self._folded_timed_out[i]
+            d_retry = int(retried[i]) - self._folded_retried[i]
+            if min(d_spent, d_refused, d_dropped, d_faulted, d_quar,
+                   d_timed, d_retry) < 0:
                 raise LedgerDriftError(
                     f"owner {i}: device counters went backwards "
                     f"(spent {spent[i]} < folded {self._folded_spent[i]}, "
@@ -266,23 +296,29 @@ class _LedgeredMechanism:
                     "is stale (host-authorized rounds ran after the "
                     "snapshot); take a fresh Federation.init_state / "
                     "device_ledger()")
-            deltas.append((d_spent, d_refused, d_dropped, d_faulted, d_quar))
-        for i, (d_spent, d_refused, d_dropped, d_faulted,
-                d_quar) in enumerate(deltas):
+            deltas.append((d_spent, d_refused, d_dropped, d_faulted, d_quar,
+                           d_timed, d_retry))
+        for i, (d_spent, d_refused, d_dropped, d_faulted, d_quar,
+                d_timed, d_retry) in enumerate(deltas):
             granted = self._accountant.record_responses(i, d_spent)
             assert granted == d_spent, (i, granted, d_spent)
             self.refusals[i] += d_refused
-            # Fault outcomes carry no epsilon of their own (faulted rounds
-            # are a subset of the d_spent just ledgered) — they fold into
-            # the host tallies without touching the accountant.
+            # Fault/staleness outcomes carry no epsilon of their own
+            # (faulted and timed-out rounds are a subset of the d_spent
+            # just ledgered; retried rounds never dispatched) — they fold
+            # into the host tallies without touching the accountant.
             self.dropped_rounds[i] += d_dropped
             self.faulted_rounds[i] += d_faulted
             self.quarantined_rounds[i] += d_quar
+            self.timed_out_rounds[i] += d_timed
+            self.retried_rounds[i] += d_retry
             self._folded_spent[i] = int(spent[i])
             self._folded_refused[i] = int(refused[i])
             self._folded_dropped[i] = int(dropped[i])
             self._folded_faulted[i] = int(faulted[i])
             self._folded_quarantined[i] = int(quarantined[i])
+            self._folded_timed_out[i] = int(timed_out[i])
+            self._folded_retried[i] = int(retried[i])
         return self.ledger()
 
     def export_journal(self) -> Dict:
@@ -311,11 +347,15 @@ class _LedgeredMechanism:
             "dropped": col(self.dropped_rounds),
             "faulted": col(self.faulted_rounds),
             "quarantined": col(self.quarantined_rounds),
+            "timed_out": col(self.timed_out_rounds),
+            "retried": col(self.retried_rounds),
             "folded_spent": col(self._folded_spent),
             "folded_refused": col(self._folded_refused),
             "folded_dropped": col(self._folded_dropped),
             "folded_faulted": col(self._folded_faulted),
             "folded_quarantined": col(self._folded_quarantined),
+            "folded_timed_out": col(self._folded_timed_out),
+            "folded_retried": col(self._folded_retried),
         }
 
     def restore_journal(self, journal: Dict) -> None:
@@ -335,6 +375,20 @@ class _LedgeredMechanism:
                 raise ValueError(
                     f"journal column {c!r} has {len(journal[c])} owners, "
                     f"mechanism has {n} — restore with the same federation")
+        # Staleness columns joined the version-1 journal in PR 10; a
+        # pre-staleness journal simply has nothing to tally in them.
+        zeros = [0] * n
+        timed_out = [int(v) for v in journal.get("timed_out", zeros)]
+        retried = [int(v) for v in journal.get("retried", zeros)]
+        f_timed = [int(v) for v in journal.get("folded_timed_out", zeros)]
+        f_retry = [int(v) for v in journal.get("folded_retried", zeros)]
+        for c, col in (("timed_out", timed_out), ("retried", retried),
+                       ("folded_timed_out", f_timed),
+                       ("folded_retried", f_retry)):
+            if len(col) != n:
+                raise ValueError(
+                    f"journal column {c!r} has {len(col)} owners, "
+                    f"mechanism has {n} — restore with the same federation")
         for i in range(n):
             self._accountant.ledgers[i].responses = int(
                 journal["responses"][i])
@@ -342,12 +396,16 @@ class _LedgeredMechanism:
             self.dropped_rounds[i] = int(journal["dropped"][i])
             self.faulted_rounds[i] = int(journal["faulted"][i])
             self.quarantined_rounds[i] = int(journal["quarantined"][i])
+            self.timed_out_rounds[i] = timed_out[i]
+            self.retried_rounds[i] = retried[i]
             self._folded_spent[i] = int(journal["folded_spent"][i])
             self._folded_refused[i] = int(journal["folded_refused"][i])
             self._folded_dropped[i] = int(journal["folded_dropped"][i])
             self._folded_faulted[i] = int(journal["folded_faulted"][i])
             self._folded_quarantined[i] = int(
                 journal["folded_quarantined"][i])
+            self._folded_timed_out[i] = f_timed[i]
+            self._folded_retried[i] = f_retry[i]
         self._snapshot_sid = int(journal["sid"])
 
 

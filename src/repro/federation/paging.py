@@ -47,7 +47,7 @@ import numpy as np
 
 from repro.checkpoint import MemmapRowStore, MemoryRowStore
 from repro.federation.deep import (AsyncDPConfig, AsyncDPState, TreeNoise,
-                                   init_fault_state)
+                                   _init_staleness, init_fault_state)
 from repro.federation.flatten import (PagedBank, ParamFlat, QuantBank,
                                       as_bank_codec, init_flat_bank,
                                       pack_params)
@@ -250,6 +250,21 @@ class OwnerPager:
         self.stats["writebacks"] += len(ids)
         self.dirty.difference_update(ids)
 
+    def adopt(self, state: AsyncDPState) -> None:
+        """Re-sync the host mirrors to a RESTORED state (crash-resume).
+
+        The restored device page table is authoritative: the checkpoint
+        was saved through ``flush(only_dirty=False)``, so every resident
+        row's bits already live in the (restored) cold tier — nothing is
+        dirty — and the LRU stamps restart, so the next prefetch evicts
+        by post-restore recency only."""
+        self._hot_ids = np.array(jax.device_get(state.bank.hot_ids),
+                                 np.int32)
+        self.dirty = set()
+        self._clock = 0
+        self._last_used = {int(o): 0 for o in self._hot_ids
+                           if o != self._sentinel}
+
     def snapshot(self, state: AsyncDPState) -> Dict[str, np.ndarray]:
         """Full (N, ...) host materialization of every paged column —
         testing/inspection only (this is exactly the O(N*P) cost paging
@@ -325,6 +340,12 @@ def init_paged_state(params, cfg: AsyncDPConfig, n_hot: int,
               else init_fault_state(bank, N))
     if faults is not None and sh is not None:
         faults = jax.device_put(faults, sh.faults)
+    # async-runtime counters are (N,)-scalar columns: like the ledger and
+    # the fault windows they stay RESIDENT — paging moves rows, never the
+    # accounting (clock/ages/backoff replicate under a mesh)
+    stale = _init_staleness(cfg)
+    if stale is not None and sh is not None:
+        stale = jax.device_put(stale, sh.ledger)
 
     # cold tier: one store per paged buffer, default = the init row
     def make_store(name, row_shape, dtype, default):
@@ -349,7 +370,7 @@ def init_paged_state(params, cfg: AsyncDPConfig, n_hot: int,
         stores["tree"] = make_store("tree", zrow.shape, zrow.dtype, zrow)
 
     state = AsyncDPState(flat, bank, jnp.zeros((), jnp.int32), ledger,
-                         tree, faults)
+                         tree, faults, stale)
     pager = OwnerPager(N, n_hot, ids, stores)
     return state, pager
 

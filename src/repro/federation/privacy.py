@@ -112,12 +112,22 @@ class DeviceLedger:
     increments, recorded so the host accountant can see budget that
     bought no progress. `quarantined` counts rounds masked because the
     owner was quarantined (no answer, no epsilon, no refusal).
+
+    Staleness-runtime columns (PR 10, same response-time rule):
+    `timed_out` counts rounds the owner ANSWERED but past the learner
+    deadline — epsilon is spent (a subset of `spent`'s increments, like
+    `faulted`) and the update is masked. `retried` counts rounds masked
+    because the owner sat in its retry-backoff cooldown: the learner
+    never dispatched the query, so no answer and no epsilon (like
+    `quarantined`, but temporary).
     """
 
     def __init__(self, spent: jax.Array, cap: jax.Array, refused: jax.Array,
                  dropped: Optional[jax.Array] = None,
                  faulted: Optional[jax.Array] = None,
                  quarantined: Optional[jax.Array] = None,
+                 timed_out: Optional[jax.Array] = None,
+                 retried: Optional[jax.Array] = None,
                  sid: int = 0):
         self.spent = spent      # (N,) int32 — responses granted so far
         self.cap = cap          # (N,) int32 — per-owner response cap (T_eff)
@@ -129,11 +139,16 @@ class DeviceLedger:
                         else faulted)        # answered, rejected: eps spent
         self.quarantined = (jnp.zeros_like(spent) if quarantined is None
                             else quarantined)  # masked while quarantined
+        self.timed_out = (jnp.zeros_like(spent) if timed_out is None
+                          else timed_out)    # answered late: eps spent
+        self.retried = (jnp.zeros_like(spent) if retried is None
+                        else retried)        # masked in backoff: no eps
         self.sid = sid
 
     def tree_flatten(self):
         return (self.spent, self.cap, self.refused, self.dropped,
-                self.faulted, self.quarantined), self.sid
+                self.faulted, self.quarantined, self.timed_out,
+                self.retried), self.sid
 
     @classmethod
     def tree_unflatten(cls, sid, children):
@@ -143,7 +158,9 @@ class DeviceLedger:
         fields = {"spent": self.spent, "cap": self.cap,
                   "refused": self.refused, "dropped": self.dropped,
                   "faulted": self.faulted,
-                  "quarantined": self.quarantined, "sid": self.sid}
+                  "quarantined": self.quarantined,
+                  "timed_out": self.timed_out, "retried": self.retried,
+                  "sid": self.sid}
         fields.update(kw)
         return DeviceLedger(**fields)
 
@@ -161,6 +178,8 @@ def make_device_ledger(caps: Sequence[int],
                        dropped: Optional[Sequence[int]] = None,
                        faulted: Optional[Sequence[int]] = None,
                        quarantined: Optional[Sequence[int]] = None,
+                       timed_out: Optional[Sequence[int]] = None,
+                       retried: Optional[Sequence[int]] = None,
                        sid: int = 0) -> DeviceLedger:
     caps = jnp.asarray(caps, jnp.int32)
 
@@ -171,7 +190,9 @@ def make_device_ledger(caps: Sequence[int],
 
     return DeviceLedger(spent=col(spent), cap=caps, refused=col(refused),
                         dropped=col(dropped), faulted=col(faulted),
-                        quarantined=col(quarantined), sid=sid)
+                        quarantined=col(quarantined),
+                        timed_out=col(timed_out), retried=col(retried),
+                        sid=sid)
 
 
 @dataclasses.dataclass

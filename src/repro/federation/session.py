@@ -57,6 +57,9 @@ from repro.federation.schedules import (ScheduleProtocol, TraceRing,
                                         UniformSchedule, as_owner_seq,
                                         auto_max_group, pack_groups,
                                         partition_conflict_free)
+from repro.federation.staleness import (LatencyPlan, StalenessPolicy,
+                                        as_tick_times, merge_timeout_codes,
+                                        staleness_tick)
 
 _STRATEGIES = ("async", "sync")
 
@@ -68,7 +71,8 @@ class Federation:
                  strategy: str = "async",
                  cap_slack: Optional[float] = None,
                  tree_depth: Optional[int] = None,
-                 fault_policy: Optional[FaultPolicy] = None):
+                 fault_policy: Optional[FaultPolicy] = None,
+                 staleness: Optional[StalenessPolicy] = None):
         if strategy not in _STRATEGIES:
             raise ValueError(f"strategy must be one of {_STRATEGIES}")
         self.owners = list(owners)
@@ -80,6 +84,14 @@ class Federation:
         # owners exceeding the policy's fault budget are quarantined.
         # None keeps every driver tracing the fault-free program verbatim.
         self.fault_policy = fault_policy
+        # staleness arms the async-runtime layer (deadlines -> TIMEOUT,
+        # retry backoff, decayed inertia). It rides on the fault algebra,
+        # so a staleness-only federation auto-arms a never-quarantine
+        # fault policy — faults become expressible but nothing changes
+        # until codes are actually injected.
+        self.staleness = staleness
+        if staleness is not None and fault_policy is None:
+            self.fault_policy = FaultPolicy(max_faults=2**30, window=2**30)
         self.mechanism = make_mechanism(mechanism, self.owners, config,
                                         cap_slack=cap_slack,
                                         tree_depth=tree_depth)
@@ -87,6 +99,7 @@ class Federation:
         self._fused_fn = None
         self._group_fn = None
         self._tick_fn = None
+        self._stale_tick_fn = None
         self._pack_params = False
         self._bank_dtype = None
         self._mesh = None
@@ -213,7 +226,8 @@ class Federation:
             lr_scale=cfg.lr_scale,
             caps=None if cap is None else (cap,) * self.n_owners,
             tree_depth=getattr(self.mechanism, "tree_depth", None),
-            fault_policy=self.fault_policy)
+            fault_policy=self.fault_policy,
+            staleness=self.staleness)
 
     def init_state(self, params, pack_params: Optional[bool] = None,
                    bank_dtype=None, mesh=None) -> AsyncDPState:
@@ -364,6 +378,17 @@ class Federation:
             self._tick_fn = jax.jit(
                 lambda fs, i, f: fault_tick(fs, jnp.int32(i), jnp.bool_(f),
                                             pol, active=jnp.bool_(True)))
+        if self.staleness is not None and self.strategy == "async":
+            # Host-masked rounds (quarantine, retry, drop, refusal) must
+            # advance the staleness clock exactly as the fused driver's
+            # in-graph tick does: same scatter, flags all-False except
+            # is_retry, so ages stay driver-order-free.
+            spol = self.staleness
+            self._stale_tick_fn = jax.jit(
+                lambda ss, i, r: staleness_tick(
+                    ss, jnp.int32(i), ss.clock, is_retry=jnp.bool_(r),
+                    apply=jnp.bool_(False), timed=jnp.bool_(False),
+                    policy=spol, active=jnp.bool_(True), ticks=1))
         acfg = self.as_async_config(privatizer)
         scales = self.mechanism.scales(p=n_params,
                                        clip_norm=acfg.privatizer.xi)
@@ -401,13 +426,17 @@ class Federation:
 
         With a fault-armed federation (fault_policy set), `fault_code`
         injects one of faults.OK/DROP/STALE/NONFINITE_GRAD/
-        CORRUPT_PAYLOAD into the round. The host mirrors the fused
-        driver's outcome order exactly: quarantined owners are masked
-        before anything else (no epsilon, no refusal, no window tick); a
-        DROP on an exhausted owner is a refusal (the budget check
-        precedes the contact); a plain DROP costs no epsilon; every
-        answered round is charged at response time even if the in-graph
-        guards then reject it (metrics['faulted'])."""
+        CORRUPT_PAYLOAD/TIMEOUT into the round. The host mirrors the
+        fused driver's outcome order exactly: quarantined owners are
+        masked before anything else (no epsilon, no refusal, no window
+        tick); with a staleness-armed federation an owner in backoff is
+        masked next (a retried round — the learner never sends the
+        query, so no epsilon and no fault-window contact); a DROP on an
+        exhausted owner is a refusal (the budget check precedes the
+        contact); a plain DROP costs no epsilon; every answered round is
+        charged at response time even if the in-graph guards then reject
+        it (metrics['faulted']) or the deadline already passed
+        (metrics['timed_out'])."""
         if self.strategy != "async":
             raise ValueError("step() is the async path; use sync_round()")
         step_fn = self._require_step()
@@ -430,36 +459,63 @@ class Federation:
 
         fc = OK if fault_code is None else int(fault_code)
         flags = {"refused": False, "dropped": False, "faulted": False,
-                 "quarantined": False, "owner": i}
+                 "quarantined": False, "timed_out": False, "owner": i}
+        stale_armed = (state.stale is not None
+                       and self._stale_tick_fn is not None)
+        if stale_armed:
+            flags["retried"] = False
+
+        def ticked(st, retry=False):
+            # host-masked rounds still advance the staleness clock —
+            # same scatter as the fused in-graph tick, so ages stay
+            # driver-order-free
+            if not stale_armed:
+                return st
+            return st._replace(
+                stale=self._stale_tick_fn(st.stale, i, retry))
+
         if bool(state.faults.quarantined[i]):
             # masked before any budget decision; the fused tick is also
             # inactive for quarantined owners, so no window advance
             self.mechanism.record_quarantined(i)
-            return state, dict(flags, quarantined=True)
+            return ticked(state), dict(flags, quarantined=True)
+        if stale_armed and int(state.stale.cooldown[i]) > 0:
+            # in backoff: a masked re-dispatch. The learner never sends
+            # the query — no epsilon, no budget decision, and no fault-
+            # window contact — and one cooldown round burns.
+            self.mechanism.record_retried(i)
+            return ticked(state, retry=True), dict(flags, retried=True)
         if fc == DROP:
             if self.mechanism.exhausted(i):
                 # refusal takes precedence: the budget check happens
                 # before the contact could be lost
                 self.mechanism.authorize(i)      # records the refusal
                 faults = self._tick_fn(state.faults, i, False)
-                return state._replace(faults=faults), dict(flags,
-                                                           refused=True)
+                return (ticked(state._replace(faults=faults)),
+                        dict(flags, refused=True))
             self.mechanism.record_dropped(i)     # no answer -> no epsilon
             faults = self._tick_fn(state.faults, i, True)
-            return state._replace(faults=faults), dict(flags, dropped=True)
+            return (ticked(state._replace(faults=faults)),
+                    dict(flags, dropped=True))
         if not self.mechanism.authorize(i):
             faults = self._tick_fn(state.faults, i, False)
-            return state._replace(faults=faults), dict(flags, refused=True)
+            return (ticked(state._replace(faults=faults)),
+                    dict(flags, refused=True))
         new_state, metrics = step_fn(state, batch, jnp.int32(i), key,
                                      jnp.int8(fc))
         metrics = dict(metrics)
         if bool(metrics["faulted"]):
             self.mechanism.record_faulted(i)     # epsilon already charged
-        metrics.update(flags, faulted=bool(metrics["faulted"]))
+        timed = bool(metrics.get("timed_out", False))
+        if timed:
+            self.mechanism.record_timed_out(i)   # answered late: epsilon
+        metrics.update(flags, faulted=bool(metrics["faulted"]),
+                       timed_out=timed)
         return new_state, metrics
 
     def run_rounds(self, state: AsyncDPState, batches, owner_seq=None,
-                   key=None, *, faults=None, owner_parallel: bool = False,
+                   key=None, *, faults=None, latency=None, times=None,
+                   owner_parallel: bool = False,
                    max_group: Union[int, str, None] = "auto"
                    ) -> Tuple[AsyncDPState, Dict[str, Any]]:
         """K asynchronous rounds in ONE dispatch (lax.scan over the jitted
@@ -514,6 +570,21 @@ class Federation:
         driver), or pass a (K,) code array to replay a recorded trace.
         Fault outcomes land in the device ledger's dropped/faulted/
         quarantined columns and fold back on `reconcile(state)`.
+
+        `latency` (staleness-armed federations only) models response
+        TIME: a `staleness.LatencyPlan` draws one latency per round from
+        this call's key (STALE_SALT stream — disjoint from the round
+        keys and fault codes, so every driver sees the same runtime), or
+        pass a (K,) array to replay recorded latencies. Rounds later
+        than the policy deadline upgrade to TIMEOUT in the fault-code
+        trace (`staleness.merge_timeout_codes`) — answered-late, epsilon
+        spent, update masked — and land in the ledger's timed_out
+        column. `times` supplies per-round arrival instants (e.g.
+        `Schedule.draw_with_times(...).times`) that tighten each round's
+        effective deadline to the gap before the next tick; with
+        latency armed, owner_seq=None, and a schedule that exposes
+        `draw_with_times`, the times are drawn alongside the owner
+        sequence automatically.
         """
         if self.strategy != "async":
             raise ValueError("run_rounds() is the async path")
@@ -528,6 +599,7 @@ class Federation:
         # partition_conflict_free all read it; the schedule-drawn path
         # with none of those enabled never syncs at all.
         seq_host = None
+        user_times = times is not None
 
         def host_seq() -> np.ndarray:
             nonlocal seq_host
@@ -552,11 +624,24 @@ class Federation:
             # (as_owner_seq's bounds check would force a host sync here)
             k_sched, key = jax.random.split(key)
             k = jax.tree_util.tree_leaves(batches)[0].shape[0]
-            owner_seq = self.schedule.draw(k_sched, self.n_owners,
-                                           k).astype(jnp.int32)
+            draw_wt = getattr(self.schedule, "draw_with_times", None)
+            if latency is not None and times is None and draw_wt is not None:
+                # the schedule's own wall clock feeds the deadline model:
+                # arrival gaps tighten per-round deadlines (times are
+                # non-decreasing by construction, no host check needed)
+                sched = draw_wt(k_sched, self.n_owners, k)
+                times = sched.times
+                owner_seq = sched.owners.astype(jnp.int32)
+            else:
+                owner_seq = self.schedule.draw(k_sched, self.n_owners,
+                                               k).astype(jnp.int32)
         else:
             owner_seq = as_owner_seq(owner_seq, self.n_owners)
         k_rounds = owner_seq.shape[0]
+        if user_times:
+            # hand-rolled times validate like hand-rolled sequences
+            # (schedule-drawn times are in-contract by construction)
+            times = as_tick_times(times, k_rounds)
         if self._pager is not None:
             # page in every row this dispatch touches (evicting stale
             # rows to the cold tier) before the scan launches
@@ -574,6 +659,26 @@ class Federation:
                 fault_codes = faults.draw(key, k_rounds)
             else:
                 fault_codes = as_fault_codes(faults, k_rounds)
+        if latency is not None:
+            if self.staleness is None:
+                raise ValueError(
+                    "latency modeling needs a staleness-armed Federation; "
+                    "pass staleness=StalenessPolicy(...) at construction")
+            if state.faults is None:
+                raise ValueError(
+                    "latency injection needs a fault-armed state (TIMEOUT "
+                    "is a fault code); rebuild the state from this "
+                    "staleness-armed federation")
+            # drawn from THIS key (STALE_SALT fold-in keeps the latency
+            # stream disjoint from the fault codes and the round keys),
+            # so fixed key -> identical timeouts on every driver
+            lat = (latency.draw(key, owner_seq)  # dpcheck: ignore[DPC105]
+                   if isinstance(latency, LatencyPlan)
+                   else jnp.asarray(latency, jnp.float32))
+            if fault_codes is None:
+                fault_codes = jnp.full((k_rounds,), OK, jnp.int8)
+            fault_codes = merge_timeout_codes(
+                fault_codes, lat, self.staleness.deadline, times=times)
         # same key as FaultPlan.draw by contract: draw folds in
         # FAULT_SALT, so the fault stream never touches the round keys
         keys = jax.random.split(key, k_rounds)  # dpcheck: ignore[DPC105]
@@ -645,25 +750,40 @@ class Federation:
         """Checkpoint the device state AND the host accountant together.
 
         Atomically writes the full AsyncDPState (params, bank, ledger,
-        tree, fault counters) plus the mechanism's dispatch journal —
-        everything `reconcile` depends on — so a process killed any time
-        after this call resumes via `restore_session` with exactly the
-        accounting the crashed process had. Returns the step the
-        checkpoint was filed under (state.step when not given)."""
+        tree, fault counters, staleness counters) plus the mechanism's
+        dispatch journal — everything `reconcile` depends on — so a
+        process killed any time after this call resumes via
+        `restore_session` with exactly the accounting the crashed
+        process had. A PAGED state checkpoints both tiers: resident
+        rows are flushed so the cold tier is authoritative, then its
+        materialized rows ride in the same atomic npz shard as the hot
+        state (never-written rows reconstruct from the default row for
+        free). Returns the step the checkpoint was filed under
+        (state.step when not given)."""
         from repro.checkpoint import save_checkpoint
-        if self._pager is not None:
-            raise NotImplementedError(
-                "save_session does not yet cover paged states: the hot "
-                "tier would checkpoint but the cold row store would not. "
-                "Call pager.flush(state) and persist the cold tier "
-                "(MemmapRowStore) alongside; see ROADMAP")
         if step is None:
             step = int(state.step)
         extra = {}
+        aux = None
+        if self._pager is not None:
+            # flush first: after this the cold tier holds the exact bits
+            # of every resident row, so checkpointing its written rows
+            # (plus the hot state above) captures the whole bank
+            self._pager.flush(state, only_dirty=False)
+            aux = {}
+            for name, store in self._pager.stores.items():
+                ids = store.written_ids
+                aux[f"cold/{name}/ids"] = ids
+                aux[f"cold/{name}/rows"] = store.read_rows(ids)
+            extra["paging"] = {"stores": sorted(self._pager.stores),
+                               "dtypes": {n: str(s.dtype) for n, s
+                                          in self._pager.stores.items()},
+                               "n_hot": self._pager.n_hot}
         exp = getattr(self.mechanism, "export_journal", None)
         if exp is not None:
             extra["journal"] = exp()
-        save_checkpoint(directory, step, state, extra=extra or None)
+        save_checkpoint(directory, step, state, extra=extra or None,
+                        aux_arrays=aux)
         return int(step)
 
     def restore_session(self, directory, like: AsyncDPState,
@@ -677,16 +797,52 @@ class Federation:
         snapshot generation — so `reconcile` after resume folds exactly
         the deltas the crashed process had not yet folded, never
         double-counting epsilon. The federation must be built from the
-        same owners/config as the one that saved."""
-        from repro.checkpoint import (latest_step, load_checkpoint,
-                                      load_manifest)
+        same owners/config as the one that saved. Restoring into a
+        PAGED session (init_paged_state before this call, so `like` and
+        the cold stores exist) wipes the stores and replays the
+        checkpoint's cold-tier rows, then re-syncs the pager's host
+        mirrors to the restored page table — the paged state resumes
+        bit-exactly on every storage codec."""
+        from repro.checkpoint import (latest_step, load_aux_arrays,
+                                      load_checkpoint, load_manifest)
         if step is None:
             step = latest_step(directory)
             if step is None:
                 raise FileNotFoundError(
                     f"no checkpoint under {directory!r}")
-        state = load_checkpoint(directory, step, like)
         manifest = load_manifest(directory, step)
+        paging = (manifest.get("extra") or {}).get("paging")
+        if self._pager is None and paging is not None:
+            raise ValueError(
+                "checkpoint holds a paged bank; call init_paged_state "
+                "first so this session has a pager and cold stores to "
+                "restore into")
+        if self._pager is not None and paging is None:
+            raise ValueError(
+                "checkpoint carries no cold-tier snapshot (saved from "
+                "a non-paged session); restore it into a non-paged "
+                "state instead")
+        state = load_checkpoint(directory, step, like)
+        if self._pager is not None:
+            mine = {"stores": sorted(self._pager.stores),
+                    "dtypes": {n: str(s.dtype) for n, s
+                               in self._pager.stores.items()}}
+            theirs = {"stores": paging["stores"],
+                      "dtypes": paging.get("dtypes", mine["dtypes"])}
+            if mine != theirs:
+                raise ValueError(
+                    f"checkpoint cold tier has stores {theirs} but this "
+                    f"session pages {mine} — codec/tree configuration "
+                    "mismatch")
+            aux = load_aux_arrays(directory, step)
+            for name, store in self._pager.stores.items():
+                # wipe first: rows written AFTER the save must read as
+                # the default row again, exactly as at save time
+                store.clear()
+                ids = aux[f"cold/{name}/ids"]
+                if ids.size:
+                    store.write_rows(ids, aux[f"cold/{name}/rows"])
+            self._pager.adopt(state)
         journal = (manifest.get("extra") or {}).get("journal")
         if journal is not None:
             rest = getattr(self.mechanism, "restore_journal", None)

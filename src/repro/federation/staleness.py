@@ -1,0 +1,317 @@
+"""In-graph asynchronous runtime: latency, deadlines, retries, staleness.
+
+PR 8's fault layer models *whether* an owner answers; this module models
+*when*. The paper's owners are geographically scattered — a response
+takes time to arrive, and a learner that waits forever is synchronous in
+disguise. Three pieces, all deterministic and in-graph so every driver
+(per-round step, fused scan, grouped vmap) sees the identical runtime
+under fixed keys:
+
+  * ``LatencyPlan`` draws one response latency per round: a per-owner
+    deterministic ``base`` plus optional exponential ``jitter`` from a
+    dedicated key stream (``fold_in(key, STALE_SALT)`` — disjoint from
+    the round keys and the FAULT_SALT stream by construction, the same
+    contract as ``FaultPlan``). A zero-latency plan draws nothing and
+    reproduces the latency-free engine bit-for-bit.
+  * ``StalenessPolicy.deadline`` converts late responses into the
+    TIMEOUT outcome of the fault algebra (:func:`merge_timeout_codes`):
+    the owner DID answer — the noisy query left the owner, so epsilon
+    is spent exactly as for a guard-rejected response — but the learner
+    has moved on, so the update is masked. An owner that never answered
+    (DROP) stays a DROP: no response, no epsilon. When per-tick arrival
+    instants are available (``Schedule.draw_with_times``), the
+    effective deadline additionally tightens to the gap before the next
+    tick — the learner serves whoever arrives next.
+  * timed-out owners re-enter through an in-graph retry queue:
+    ``StalenessState`` carries per-owner exponential-backoff counters
+    and a retry budget. While an owner's ``cooldown`` is positive its
+    scheduled rounds are masked re-dispatches — ledgered in the new
+    ``DeviceLedger.retried`` column, spending no epsilon (the learner
+    never sent the query) — and each one decrements the cooldown.
+  * per-owner AGE counters (rounds since the last granted update)
+    drive a ``decay**age`` weight on the eq. 5-7 inertia target
+    (:func:`staleness_weight`): the round runs against
+    ``theta_L + w * (theta_i - theta_L)``, pulling a stale owner copy
+    toward the fresh central model (Li et al. 1912.07902). ``decay=1``
+    is STATICALLY gated out by the drivers, so the default traces the
+    undecayed program verbatim (bit-parity contract).
+
+Outcome algebra (extends the PR 8 table; epsilon at response time):
+
+    round in backoff   -> retried      masked, no epsilon, no refusal
+    answered late      -> timed_out    masked, epsilon SPENT
+    answered on time   -> PR 8 guards decide (apply / faulted)
+    never answered     -> dropped      no epsilon
+
+Lateness dominates the payload guards: a late response is discarded
+before the learner inspects it, so a late corrupt payload counts as
+``timed_out``, not ``faulted`` (either way the epsilon is spent and the
+update is masked — only the ledger column differs). Timeouts do NOT
+tick the fault-quarantine window: slowness has its own escalation path
+(backoff), and conflating it with byzantine faults would quarantine
+every distant owner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federation.faults import DROP, TIMEOUT
+
+# Dedicated fold_in stream for latency draws — disjoint from round keys
+# (raw split), fault codes (FAULT_SALT) and codec bits (_CODEC_SALT).
+STALE_SALT = 0x5354     # "ST"
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyPlan:
+    """Per-owner response-latency model, drawn once per dispatch.
+
+    ``base`` is the deterministic per-owner floor (a scalar applies to
+    every owner; a sequence is indexed by owner id). ``jitter`` adds an
+    exponential tail of that scale from the STALE_SALT key stream — the
+    classic heavy-ish straggler model. Units are whatever the schedule's
+    tick times use (abstract rounds when no times are in play). The
+    all-zero default draws nothing and times nothing out.
+    """
+
+    base: Union[float, Sequence[float]] = 0.0
+    jitter: float = 0.0
+
+    def __post_init__(self):
+        base = np.atleast_1d(np.asarray(self.base, np.float64))
+        if base.ndim != 1:
+            raise ValueError(f"base must be a scalar or a per-owner "
+                             f"vector, got shape {base.shape}")
+        if base.size and base.min() < 0.0:
+            raise ValueError(f"base latencies must be >= 0, got "
+                             f"{base.min()}")
+        if self.jitter < 0.0:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+
+    def draw(self, key, owner_seq) -> jax.Array:
+        """(K,) f32 response latencies for a dispatch's owner sequence.
+
+        Deterministic in (key, owner_seq); the jitter stream folds in
+        STALE_SALT, so under the run_rounds contract (latencies drawn
+        from the SAME key as the round keys and the fault codes) all
+        three streams stay disjoint. A zero-jitter plan consumes no
+        randomness at all.
+        """
+        owner_seq = jnp.asarray(owner_seq)
+        k = owner_seq.shape[0]
+        base = np.asarray(self.base, np.float32)
+        if base.ndim == 0:
+            lat = jnp.full((k,), float(base), jnp.float32)
+        else:
+            lat = jnp.asarray(base, jnp.float32)[owner_seq]
+        if self.jitter:
+            u = jax.random.exponential(
+                jax.random.fold_in(key, STALE_SALT), (k,), jnp.float32)
+            lat = lat + jnp.float32(self.jitter) * u
+        return lat
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessPolicy:
+    """Learner-side runtime policy: deadline, retry budget, decay.
+
+    ``deadline``     responses later than this are TIMEOUT (inf = wait
+                     forever: nothing ever times out).
+    ``max_retries``  per-owner retry budget, refilled on every granted
+                     round; a timeout with budget left schedules a
+                     backoff cooldown, past the budget the owner just
+                     keeps being served (and keeps timing out) with no
+                     retry masking.
+    ``backoff_cap``  exponent cap: the j-th consecutive timeout waits
+                     ``2**min(j, backoff_cap)`` scheduled rounds.
+    ``decay``        lambda of the ``lambda**age`` inertia weight
+                     (eq. 5-7 target); 1.0 (the default) disables the
+                     decay STATICALLY — the undecayed trace is verbatim.
+    """
+
+    deadline: float = math.inf
+    max_retries: int = 0
+    backoff_cap: int = 4
+    decay: float = 1.0
+
+    def __post_init__(self):
+        if not self.deadline > 0.0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if not 0 <= self.backoff_cap <= 30:
+            raise ValueError(f"backoff_cap must be in [0, 30], got "
+                             f"{self.backoff_cap} (int32 cooldowns)")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(
+                f"decay must be in (0, 1], got {self.decay}")
+
+
+class StalenessState(NamedTuple):
+    """Per-owner runtime counters carried inside ``AsyncDPState``.
+
+    ``clock``       ()   int32  rounds scheduled so far (every round
+                                counts — refused, dropped, retried —
+                                so ages are driver-order-free)
+    ``last_grant``  (N,) int32  clock value of the owner's last granted
+                                update (age = clock - last_grant)
+    ``cooldown``    (N,) int32  scheduled rounds left in backoff; > 0
+                                masks the owner's rounds as retries
+    ``backoff``     (N,) int32  consecutive-timeout exponent (resets on
+                                a granted round)
+    ``retry_left``  (N,) int32  retry budget left (refills on a grant)
+    """
+
+    clock: jax.Array
+    last_grant: jax.Array
+    cooldown: jax.Array
+    backoff: jax.Array
+    retry_left: jax.Array
+
+
+def init_staleness_state(n_owners: int,
+                         policy: StalenessPolicy) -> StalenessState:
+    # distinct zero buffers per field — donated states may not alias
+    return StalenessState(
+        clock=jnp.zeros((), jnp.int32),
+        last_grant=jnp.zeros((n_owners,), jnp.int32),
+        cooldown=jnp.zeros((n_owners,), jnp.int32),
+        backoff=jnp.zeros((n_owners,), jnp.int32),
+        retry_left=jnp.full((n_owners,), policy.max_retries, jnp.int32))
+
+
+def deadline_guard(fcode) -> jax.Array:
+    """bool: did the response beat the learner deadline?
+
+    False exactly on TIMEOUT rounds — the response exists (epsilon is
+    spent) but arrived too late to apply. Drivers mask the round's
+    writes on this bit, the same grant discipline as the PR 8 payload
+    guards (dpcheck DPC302 recognizes it as a grant source).
+    """
+    return jnp.asarray(fcode) != TIMEOUT
+
+
+def merge_timeout_codes(codes, latencies, deadline,
+                        times=None) -> jax.Array:
+    """Fold a latency draw into a per-round fault-code trace.
+
+    Every ANSWERED round whose latency exceeds the effective deadline
+    upgrades to TIMEOUT; a DROP stays a DROP (an owner that never
+    answered cannot answer late — and spends no epsilon, where a
+    timeout does). With per-tick arrival instants ``times`` (shape
+    (K,), non-decreasing), the effective deadline for round k tightens
+    to ``min(deadline, times[k+1] - times[k])`` — the learner stops
+    waiting when the next scheduled round arrives; the last round has
+    no successor and keeps the policy deadline.
+    """
+    codes = jnp.asarray(codes, jnp.int8)
+    lat = jnp.asarray(latencies, jnp.float32)
+    if codes.shape != lat.shape:
+        raise ValueError(f"{lat.shape[0] if lat.ndim else 0} latencies "
+                         f"for {codes.shape[0]} fault codes")
+    eff = jnp.full(lat.shape, deadline, jnp.float32)
+    if times is not None:
+        times = jnp.asarray(times, jnp.float32)
+        if times.shape != lat.shape:
+            raise ValueError(
+                f"{times.shape} tick times for {lat.shape} latencies")
+        gaps = jnp.concatenate(
+            [times[1:] - times[:-1],
+             jnp.full((1,), jnp.inf, jnp.float32)])
+        eff = jnp.minimum(eff, gaps)
+    late = (lat > eff) & (codes != DROP)
+    return jnp.where(late, jnp.int8(TIMEOUT), codes)
+
+
+def staleness_weight(ss: StalenessState, owner_idx, t,
+                     policy: StalenessPolicy) -> jax.Array:
+    """f32 ``decay**age`` inertia weight for a round at clock ``t``.
+
+    ``age`` is the owner's rounds-since-last-grant at dispatch time —
+    monotone between grants by construction (the clock only moves
+    forward) and reset exactly when a round applies. Drivers only call
+    this when ``policy.decay != 1.0`` (a traced multiply by 1.0 is NOT
+    a bitwise no-op: it flushes signed zeros), so the default policy
+    keeps the undecayed trace verbatim.
+    """
+    age = jnp.maximum(t - ss.last_grant[owner_idx], 0)
+    return jnp.power(jnp.float32(policy.decay), age.astype(jnp.float32))
+
+
+def staleness_tick(ss: StalenessState, owner_idx, t, *, is_retry, apply,
+                   timed, policy: StalenessPolicy, active,
+                   ticks) -> StalenessState:
+    """Advance the runtime counters after a round (or a group).
+
+    Works for a scalar owner or a (G,) group of DISTINCT owners (the
+    conflict-free partition's invariant keeps every scatter disjoint).
+    ``t`` is each round's clock position, ``active`` masks padded group
+    slots, and ``ticks`` is the number of real rounds consumed — the
+    clock advance (1 for the scalar drivers, sum(valid) for a group).
+
+      * a masked retry burns one cooldown round;
+      * a timeout with retry budget schedules ``2**min(backoff, cap)``
+        cooldown rounds, bumps the exponent, spends one retry;
+      * a granted round resets the exponent, refills the retry budget,
+        and stamps ``last_grant`` (the only age reset).
+    """
+    n = ss.last_grant.shape[0]
+    cd = ss.cooldown[owner_idx]
+    bo = ss.backoff[owner_idx]
+    rl = ss.retry_left[owner_idx]
+    sched = timed & (rl > 0)
+    cap = jnp.int32(policy.backoff_cap)
+    new_cd = jnp.where(
+        sched, jnp.left_shift(jnp.int32(1), jnp.minimum(bo, cap)),
+        jnp.where(is_retry, cd - 1, cd))
+    new_bo = jnp.where(sched, bo + 1,
+                       jnp.where(apply, jnp.int32(0), bo))
+    new_rl = jnp.where(sched, rl - 1,
+                       jnp.where(apply, jnp.int32(policy.max_retries), rl))
+    new_lg = jnp.where(apply, jnp.asarray(t, jnp.int32),
+                       ss.last_grant[owner_idx])
+    idx = jnp.where(active, owner_idx, n)
+    return StalenessState(
+        clock=ss.clock + jnp.asarray(ticks, jnp.int32),
+        last_grant=ss.last_grant.at[idx].set(new_lg, mode="drop"),
+        cooldown=ss.cooldown.at[idx].set(new_cd, mode="drop"),
+        backoff=ss.backoff.at[idx].set(new_bo, mode="drop"),
+        retry_left=ss.retry_left.at[idx].set(new_rl, mode="drop"))
+
+
+def as_tick_times(times, k: Optional[int] = None) -> jax.Array:
+    """Validate + coerce a per-round arrival-instant vector.
+
+    Host-side checks (skipped for tracers, mirroring ``as_owner_seq``):
+    1-D float times, length matching the dispatch when ``k`` is given,
+    finite and non-decreasing — the latency model reads inter-tick gaps
+    as deadlines, and a time machine would mint negative deadlines.
+    """
+    times = jnp.asarray(times, jnp.float32)
+    if times.ndim != 1:
+        raise ValueError(f"tick times must be 1-D, got shape {times.shape}")
+    if k is not None and times.shape[0] != k:
+        raise ValueError(
+            f"{times.shape[0]} tick times for a {k}-round dispatch")
+    if isinstance(times, jax.core.Tracer):
+        return times
+    arr = jax.device_get(times)
+    if arr.size and not np.isfinite(arr).all():
+        raise ValueError("tick times must be finite")
+    if arr.size > 1 and (np.diff(arr) < 0).any():
+        raise ValueError("tick times must be non-decreasing")
+    return times
+
+
+__all__ = [
+    "STALE_SALT", "LatencyPlan", "StalenessPolicy", "StalenessState",
+    "init_staleness_state", "deadline_guard", "merge_timeout_codes",
+    "staleness_weight", "staleness_tick", "as_tick_times",
+]

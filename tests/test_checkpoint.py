@@ -305,3 +305,240 @@ def test_crash_resume_matches_uninterrupted_run(toy, tmp_path):
     # double-counted, nothing lost
     assert json.dumps({str(k): v for k, v in led_a.items()},
                       sort_keys=True)
+
+
+# ------------------- paged cold tier rides the shard (PR 10) ----------------
+
+def test_aux_arrays_roundtrip(tmp_path):
+    from repro.checkpoint import load_aux_arrays
+    aux = {"cold/codes/ids": np.asarray([0, 2], np.int64),
+           "cold/codes/rows": np.arange(14, dtype=np.int8).reshape(2, 7),
+           "bf16": np.arange(6, dtype=np.float32).astype(jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.zeros(2)}, aux_arrays=aux)
+    back = load_aux_arrays(str(tmp_path), 3)
+    assert sorted(back) == sorted(aux)
+    for k in aux:
+        assert back[k].dtype == np.asarray(aux[k]).dtype
+        assert bool((back[k].view(np.uint8)
+                     == np.asarray(aux[k]).view(np.uint8)).all())
+    # the state pytree itself is unpolluted by aux entries
+    st = load_checkpoint(str(tmp_path), 3, {"x": jnp.zeros(2)})
+    assert list(st) == ["x"]
+    # and a plain checkpoint has no aux payload
+    save_checkpoint(str(tmp_path), 4, {"x": jnp.zeros(2)})
+    assert load_aux_arrays(str(tmp_path), 4) == {}
+
+
+# each dispatch chunk touches <= 2 distinct owners so an n_hot=2 hot
+# tier pages: rows evict to the cold store between chunks
+_CHUNKS = ([0, 1, 0], [1, 2, 2], [0, 0, 1], [2, 1, 2])
+
+
+def _chunked(batches):
+    n = len(_CHUNKS[0])
+    return [(jnp.asarray(c, jnp.int32),
+             jax.tree_util.tree_map(lambda a, lo=n * i: a[lo:lo + n],
+                                    batches),
+             jax.random.PRNGKey(60 + i))
+            for i, c in enumerate(_CHUNKS)]
+
+
+def test_paged_restored_state_continues_bit_for_bit(toy, tmp_path):
+    # n_hot < N so the cold tier actually holds evicted rows at the cut
+    params, batches = toy
+    chunks = _chunked(batches)
+    pol = FaultPolicy(max_faults=4, window=8)
+    plan = FaultPlan(drop=0.2, stale=0.1, nonfinite=0.1, corrupt=0.1)
+
+    fed_a = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s_a = fed_a.init_paged_state(params, n_hot=2, bank_dtype="int8")
+    for seq, b, k in chunks:
+        s_a, _ = fed_a.run_rounds(s_a, b, seq, k, faults=plan)
+    led_a = fed_a.reconcile(s_a)
+
+    fed_b = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s_b = fed_b.init_paged_state(params, n_hot=2, bank_dtype="int8")
+    for seq, b, k in chunks[:2]:
+        s_b, _ = fed_b.run_rounds(s_b, b, seq, k, faults=plan)
+    fed_b.reconcile(s_b)
+    step = fed_b.save_session(str(tmp_path), s_b)
+    assert latest_step(str(tmp_path)) == step
+
+    # fresh session: page in, restore, continue
+    fed_c = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s_c = fed_c.restore_session(
+        str(tmp_path), fed_c.init_paged_state(params, n_hot=2,
+                                              bank_dtype="int8"))
+    assert _leaves_equal(s_b, s_c)
+    for seq, b, k in chunks[2:]:
+        s_c, _ = fed_c.run_rounds(s_c, b, seq, k, faults=plan)
+    assert _leaves_equal(s_a.theta_L, s_c.theta_L)
+    assert _leaves_equal(s_a.faults, s_c.faults)
+    assert int(s_a.step) == int(s_c.step)
+    assert fed_c.reconcile(s_c) == led_a
+    # cold tiers agree row-by-row after a full flush on both sides
+    fed_a.pager.flush(s_a, only_dirty=False)
+    fed_c.pager.flush(s_c, only_dirty=False)
+    for name, store in fed_a.pager.stores.items():
+        ids = store.written_ids
+        other = fed_c.pager.stores[name]
+        assert bool((ids == other.written_ids).all())
+        assert bool((store.read_rows(ids).view(np.uint8)
+                     == other.read_rows(ids).view(np.uint8)).all())
+
+    # restore-into-used-session: fed_b trained PAST the save (its cold
+    # store now holds newer rows); restoring must wipe them and rewind
+    for seq, b, _ in chunks[2:]:
+        s_b, _ = fed_b.run_rounds(s_b, b, seq, jax.random.PRNGKey(99),
+                                  faults=plan)
+    s_b2 = fed_b.restore_session(str(tmp_path), s_b)
+    for seq, b, k in chunks[2:]:
+        s_b2, _ = fed_b.run_rounds(s_b2, b, seq, k, faults=plan)
+    assert _leaves_equal(s_a.theta_L, s_b2.theta_L)
+    assert fed_b.reconcile(s_b2) == led_a
+
+
+def test_paged_restore_error_paths(toy, tmp_path):
+    params, batches = toy
+    seq = jnp.asarray(np.arange(K) % N_OWNERS, jnp.int32)
+    pol = FaultPolicy(max_faults=4, window=8)
+
+    fed = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s = fed.init_paged_state(params, n_hot=N_OWNERS, bank_dtype="int8")
+    s, _ = fed.run_rounds(s, batches, seq, jax.random.PRNGKey(31))
+    fed.save_session(str(tmp_path / "paged"), s)
+
+    # paged checkpoint into a session that never paged in
+    flat = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    with pytest.raises(ValueError, match="init_paged_state"):
+        flat.restore_session(str(tmp_path / "paged"),
+                             flat.init_state(params))
+
+    # non-paged checkpoint into a paged session
+    flat2 = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    s2 = flat2.init_state(params)
+    s2, _ = flat2.run_rounds(s2, batches, seq, jax.random.PRNGKey(31))
+    flat2.save_session(str(tmp_path / "flat"), s2)
+    paged = _make_fed(fault_policy=pol, pack=True, bank_dtype="int8")
+    with pytest.raises(ValueError, match="no cold-tier snapshot"):
+        paged.restore_session(
+            str(tmp_path / "flat"),
+            paged.init_paged_state(params, n_hot=N_OWNERS,
+                                   bank_dtype="int8"))
+
+    # codec mismatch: the cold stores disagree
+    other = _make_fed(fault_policy=pol, pack=True, bank_dtype="fp8")
+    with pytest.raises(ValueError, match="stores"):
+        other.restore_session(
+            str(tmp_path / "paged"),
+            other.init_paged_state(params, n_hot=N_OWNERS,
+                                   bank_dtype="fp8"))
+
+
+_PAGED_CHILD = textwrap.dedent("""
+    import os, sys
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.federation import (DataOwner, FaultPlan, FaultPolicy,
+                                  Federation, FederationConfig, LatencyPlan,
+                                  StalenessPolicy)
+    from repro.federation.dp_sgd import PrivatizerConfig
+
+    ckpt = sys.argv[1]
+    N_OWNERS, K = 3, 12
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros((6,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    kb = jax.random.PRNGKey(7)
+    batches = {"x": jax.random.normal(kb, (K, 4, 6)),
+               "y": jnp.ones((K, 4))}
+    owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * N_OWNERS
+    cfg = FederationConfig(horizon=16, sigma=1e-2, theta_max=10.0,
+                           lr_scale=5.0)
+    fed = Federation(owners, cfg, mechanism="paper",
+                     fault_policy=FaultPolicy(max_faults=4, window=8),
+                     staleness=StalenessPolicy(deadline=1.0, max_retries=2,
+                                               decay=0.9))
+    fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+        xi=1.0, granularity="example"), pack_params=True,
+        bank_dtype="int8")
+    # chunks touch <= 2 owners so the n_hot=2 hot tier actually pages
+    CHUNKS = ([0, 1, 0], [1, 2, 2], [0, 0, 1], [2, 1, 2])
+    chunks = [(jnp.asarray(c, jnp.int32),
+               jax.tree_util.tree_map(lambda a, lo=3 * i: a[lo:lo + 3],
+                                      batches),
+               jax.random.PRNGKey(60 + i))
+              for i, c in enumerate(CHUNKS)]
+    plan = FaultPlan(drop=0.2, stale=0.2)
+    lat = LatencyPlan(base=(0.2, 2.0, 0.2), jitter=0.5)
+    s = fed.init_paged_state(params, n_hot=2, bank_dtype="int8")
+    for seq, b, k in chunks[:2]:
+        s, _ = fed.run_rounds(s, b, seq, k, faults=plan, latency=lat)
+    fed.reconcile(s)
+    fed.save_session(ckpt, s)
+    # keep training past the checkpoint, then die without saving
+    for seq, b, k in chunks[2:]:
+        s, _ = fed.run_rounds(s, b, seq, k, faults=plan, latency=lat)
+    os._exit(1)
+""")
+
+
+def test_paged_crash_resume_matches_uninterrupted_run(toy, tmp_path):
+    from repro.federation import LatencyPlan, StalenessPolicy
+    params, batches = toy
+    ckpt = str(tmp_path / "ckpt")
+    child = tmp_path / "child.py"
+    child.write_text(_PAGED_CHILD)
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, str(child), ckpt],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 1, proc.stderr      # the crash, not a bug
+    assert latest_step(ckpt) is not None
+
+    chunks = _chunked(batches)
+    pol = FaultPolicy(max_faults=4, window=8)
+    plan = FaultPlan(drop=0.2, stale=0.2)
+    spol = StalenessPolicy(deadline=1.0, max_retries=2, decay=0.9)
+    lat = LatencyPlan(base=(0.2, 2.0, 0.2), jitter=0.5)
+
+    def make():
+        owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * N_OWNERS
+        cfg = FederationConfig(horizon=16, sigma=1e-2, theta_max=10.0,
+                               lr_scale=5.0)
+        fed = Federation(owners, cfg, mechanism="paper", fault_policy=pol,
+                         staleness=spol)
+        fed.make_step(loss_fn, privatizer=PrivatizerConfig(
+            xi=1.0, granularity="example"), pack_params=True,
+            bank_dtype="int8")
+        return fed
+
+    # uninterrupted reference, same dispatch plan as the child
+    fed_a = make()
+    s_a = fed_a.init_paged_state(params, n_hot=2, bank_dtype="int8")
+    for seq, b, k in chunks:
+        s_a, _ = fed_a.run_rounds(s_a, b, seq, k, faults=plan,
+                                  latency=lat)
+    led_a = fed_a.reconcile(s_a)
+
+    # resume from the crashed child's shard, replay the post-crash chunk
+    fed_b = make()
+    s_b = fed_b.restore_session(
+        ckpt, fed_b.init_paged_state(params, n_hot=2, bank_dtype="int8"))
+    for seq, b, k in chunks[2:]:
+        s_b, _ = fed_b.run_rounds(s_b, b, seq, k, faults=plan,
+                                  latency=lat)
+    assert _leaves_equal(s_a.theta_L, s_b.theta_L)
+    assert _leaves_equal(s_a.bank, s_b.bank)
+    assert _leaves_equal(s_a.faults, s_b.faults)
+    assert _leaves_equal(s_a.stale, s_b.stale)
+    assert int(s_a.step) == int(s_b.step)
+    # epsilon recovered exactly: nothing double-counted, nothing lost
+    assert fed_b.reconcile(s_b) == led_a

@@ -335,6 +335,39 @@ def test_dpc302_fault_guard_masks_are_grant_sources(tmp_path):
     assert vs == []
 
 
+def test_dpc302_deadline_guard_is_grant_source(tmp_path):
+    # PR 10 staleness runtime: the learner-deadline mask converts an
+    # answered-late round into a lawful masked write-back, so a write
+    # masked by deadline_guard(...) composed into the grant is clean
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, fs, bank, new_i, old_i, owner_idx, fcode):
+            auth = led.authorized(owner_idx) & ~fs.quarantined[owner_idx]
+            on_time = deadline_guard(fcode)
+            grant = auth & on_time & finite_guard(new_i)
+            masked = jnp.where(grant, new_i, old_i)
+            return _write_bank(bank, masked, owner_idx)
+    """)
+    assert vs == []
+
+
+def test_dpc302_homemade_deadline_mask_still_flagged(tmp_path):
+    # an ad-hoc lateness comparison is NOT the guard: a write masked
+    # only by it skips the TIMEOUT outcome algebra and stays flagged
+    vs = _scan_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def round(led, bank, new_i, old_i, owner_idx, lat, deadline):
+            ok = led.authorized(owner_idx)
+            theta = jnp.where(ok, new_i, old_i)
+            on_time = lat <= deadline
+            masked = jnp.where(on_time, new_i, old_i)
+            return _write_bank(bank, masked, owner_idx)
+    """)
+    assert "DPC302" in _rules(vs)
+
+
 def test_dpc302_unrelated_mask_still_flagged(tmp_path):
     # masking by a name that is NOT derived from the grant algebra does
     # not launder the write

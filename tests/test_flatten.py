@@ -269,7 +269,8 @@ def test_bf16_bank_halves_storage_and_roundtrips_refusals(toy):
     assert fed16.reconcile(s16)[0] == {"epsilon": 1.0, "responses": 2,
                                        "spent": 1.0, "exhausted": True,
                                        "refused": 4, "dropped": 0,
-                                       "faulted": 0, "quarantined": 0}
+                                       "faulted": 0, "quarantined": 0,
+                                       "timed_out": 0, "retried": 0}
 
 
 def test_bank_dtype_requires_flat_engine(toy):

@@ -338,12 +338,25 @@ def test_prefetch_rejects_oversized_window(toy):
         fed.pager.prefetch(state, np.arange(5))
 
 
-def test_save_session_refuses_paged_states(toy, tmp_path):
-    params, _, loss_fn, priv = toy
-    fed = _make_fed(loss_fn, priv)
-    state = fed.init_paged_state(params, n_hot=N)
-    with pytest.raises(NotImplementedError, match="paged"):
-        fed.save_session(str(tmp_path), state)
+def test_save_session_round_trips_paged_states(toy, tmp_path):
+    # PR 10: paged sessions checkpoint (cold tier + page table ride in the
+    # same shard); a fresh paged session restores the hot tier bit-exactly.
+    params, batches, loss_fn, priv = toy
+    seq = np.asarray(jax.random.randint(jax.random.PRNGKey(21), (K,), 0, N))
+    fed_a = _make_fed(loss_fn, priv, horizon=K)
+    sa = fed_a.init_paged_state(params, n_hot=N)
+    sa, _ = fed_a.run_rounds(sa, batches, seq, key=jax.random.PRNGKey(22))
+    led = fed_a.reconcile(sa)
+    fed_a.save_session(str(tmp_path), sa)
+
+    fed_b = _make_fed(loss_fn, priv, horizon=K)
+    sb = fed_b.init_paged_state(params, n_hot=N)
+    sb = fed_b.restore_session(str(tmp_path), sb)
+    assert _leaves_equal(sb.theta_L, sa.theta_L)
+    assert _leaves_equal(sb.bank.hot, sa.bank.hot)
+    np.testing.assert_array_equal(np.asarray(sb.bank.hot_ids),
+                                  np.asarray(sa.bank.hot_ids))
+    assert fed_b.reconcile(sb) == led
 
 
 # ------------------------------- sharding -----------------------------------

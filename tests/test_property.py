@@ -233,3 +233,158 @@ def test_trace_ring_replays_exact_tiling(trace, chunk, draws):
         got.append(out)
     np.testing.assert_array_equal(np.concatenate(got), expect)
     assert ring.resident_bytes <= max(chunk, max(draws)) * 4
+
+
+# ------------------- staleness runtime invariants (PR 10) -------------------
+# Engine-level properties run on small cached federations (fixed K so the
+# fused scan compiles once per configuration, not once per example).
+
+_RT_K = 8
+_RT_PARAMS = {"w": jnp.zeros((6,), jnp.float32)}
+_RT_BATCHES = {
+    "x": jax.random.normal(jax.random.PRNGKey(7), (_RT_K, 4, 6)),
+    "y": jnp.ones((_RT_K, 4))}
+_RT_FEDS = {}
+
+
+def _rt_loss(params, batch):
+    return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+
+def _runtime_fed(max_retries):
+    from repro.federation import (DataOwner, Federation, FederationConfig,
+                                  StalenessPolicy)
+    from repro.federation.dp_sgd import PrivatizerConfig
+    tag = ("rt", max_retries)
+    if tag not in _RT_FEDS:
+        owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * 2
+        cfg = FederationConfig(horizon=4096, sigma=1e-2, theta_max=10.0,
+                               lr_scale=5.0)
+        fed = Federation(owners, cfg, staleness=StalenessPolicy(
+            deadline=1.0, max_retries=max_retries))
+        fed.make_step(_rt_loss, privatizer=PrivatizerConfig(
+            xi=1.0, granularity="example"))
+        _RT_FEDS[tag] = fed
+    return _RT_FEDS[tag]
+
+
+def _rt_run(codes, seq, max_retries):
+    fed = _runtime_fed(max_retries)
+    s0 = fed.init_state(_RT_PARAMS)
+    s, m = fed.run_rounds(s0, _RT_BATCHES, jnp.asarray(seq, jnp.int32),
+                          jax.random.PRNGKey(0),
+                          faults=jnp.asarray(codes, jnp.int8))
+    return s0, s, {k: np.asarray(v) for k, v in m.items()}
+
+
+@given(st.lists(st.integers(0, 5), min_size=_RT_K, max_size=_RT_K),
+       st.lists(st.integers(0, 1), min_size=_RT_K, max_size=_RT_K),
+       st.sampled_from([0, 2]))
+@settings(max_examples=15, deadline=None, derandomize=True)
+def test_epsilon_charged_iff_response_produced(codes, seq, max_retries):
+    # a round spends epsilon exactly when the owner produced a response:
+    # answered rounds (on-time, guard-rejected, OR late) spend; dropped,
+    # refused and backoff-masked retry rounds never touch the ledger
+    s0, s, m = _rt_run(codes, seq, max_retries)
+    answered = ~(m["refused"] | m["dropped"] | m["quarantined"]
+                 | m["retried"])
+    d_spent = (np.asarray(s.ledger.spent)
+               - np.asarray(s0.ledger.spent))
+    d_timed = (np.asarray(s.ledger.timed_out)
+               - np.asarray(s0.ledger.timed_out))
+    d_retry = (np.asarray(s.ledger.retried)
+               - np.asarray(s0.ledger.retried))
+    for i in range(2):
+        mine = m["owner"] == i
+        assert d_spent[i] == int(answered[mine].sum())
+        assert d_timed[i] == int(m["timed_out"][mine].sum())
+        assert d_retry[i] == int(m["retried"][mine].sum())
+    # timeouts are answered (late) rounds; retries never answer
+    assert not (m["timed_out"] & ~answered).any()
+    assert not (m["retried"] & answered).any()
+    # and exactly one outcome per round
+    one = (m["refused"].astype(int) + m["dropped"] + m["quarantined"]
+           + m["retried"] + m["timed_out"] + m["faulted"])
+    assert (one <= 1).all()
+
+
+@given(st.lists(st.integers(0, 5), min_size=_RT_K, max_size=_RT_K),
+       st.lists(st.integers(0, 1), min_size=_RT_K, max_size=_RT_K),
+       st.sampled_from([0, 2]))
+@settings(max_examples=15, deadline=None, derandomize=True)
+def test_age_counters_monotone_and_reset_only_on_grants(codes, seq,
+                                                        max_retries):
+    s0, s, m = _rt_run(codes, seq, max_retries)
+    clock0 = int(s0.stale.clock)
+    lg0 = np.asarray(s0.stale.last_grant)
+    # the logical clock ticks once per round, whatever the outcome
+    assert int(s.stale.clock) == clock0 + _RT_K
+    # last_grant moves only when a round actually applied, to the
+    # position of the owner's LAST applied round
+    applied = ~(m["refused"] | m["dropped"] | m["quarantined"]
+                | m["retried"] | m["timed_out"] | m["faulted"])
+    owner = m["owner"]
+    for i in range(2):
+        ks = np.flatnonzero(applied & (owner == i))
+        expect = clock0 + int(ks[-1]) if ks.size else int(lg0[i])
+        assert int(s.stale.last_grant[i]) == expect
+    assert (np.asarray(s.stale.last_grant) >= lg0).all()
+    assert (np.asarray(s.stale.cooldown) >= 0).all()
+    assert (np.asarray(s.stale.retry_left) >= 0).all()
+
+
+def _zero_runtime_pair(codec):
+    from repro.federation import (DataOwner, FaultPolicy, Federation,
+                                  FederationConfig, StalenessPolicy)
+    from repro.federation.dp_sgd import PrivatizerConfig
+    tag = ("zr", codec)
+    if tag not in _RT_FEDS:
+        dt = {"bf16": jnp.bfloat16}.get(codec, codec)
+        pair = []
+        for spol in (None, StalenessPolicy()):
+            owners = [DataOwner(n=200, epsilon=2.0, xi=1.0)] * 2
+            cfg = FederationConfig(horizon=4096, sigma=1e-2,
+                                   theta_max=10.0, lr_scale=5.0)
+            fed = Federation(owners, cfg,
+                             fault_policy=FaultPolicy(max_faults=3,
+                                                      window=8),
+                             staleness=spol)
+            fed.make_step(_rt_loss, privatizer=PrivatizerConfig(
+                xi=1.0, granularity="example"),
+                pack_params=codec is not None, bank_dtype=dt)
+            pair.append(fed)
+        _RT_FEDS[tag] = tuple(pair)
+    return _RT_FEDS[tag]
+
+
+@given(st.sampled_from([None, "bf16", "int8", "fp8"]),
+       st.integers(0, 2**16),
+       st.lists(st.integers(0, 1), min_size=_RT_K, max_size=_RT_K))
+@settings(max_examples=12, deadline=None, derandomize=True)
+def test_zero_runtime_policy_is_bit_identical(codec, key_seed, seq):
+    # the identity policy (deadline=inf, no retries, decay=1, zero
+    # latency) must reproduce the plain fault-armed engine bit-for-bit
+    # on every storage codec, for ANY fault plan and dispatch order
+    from repro.federation import FaultPlan, LatencyPlan
+    fed_off, fed_on = _zero_runtime_pair(codec)
+    plan = FaultPlan(drop=0.25, stale=0.15, nonfinite=0.15, corrupt=0.15)
+    key = jax.random.PRNGKey(key_seed)
+    seq = jnp.asarray(seq, jnp.int32)
+
+    s_off = fed_off.init_state(_RT_PARAMS)
+    s_off, _ = fed_off.run_rounds(s_off, _RT_BATCHES, seq, key,
+                                  faults=plan)
+    s_on = fed_on.init_state(_RT_PARAMS)
+    s_on, _ = fed_on.run_rounds(s_on, _RT_BATCHES, seq, key, faults=plan,
+                                latency=LatencyPlan())
+
+    for a, b in zip(jax.tree_util.tree_leaves((s_off.theta_L, s_off.bank,
+                                               s_off.faults)),
+                    jax.tree_util.tree_leaves((s_on.theta_L, s_on.bank,
+                                               s_on.faults))):
+        assert bool((np.asarray(a) == np.asarray(b)).all())
+    for col in ("spent", "refused", "dropped", "faulted", "quarantined"):
+        assert bool((np.asarray(getattr(s_off.ledger, col))
+                     == np.asarray(getattr(s_on.ledger, col))).all())
+    assert not np.asarray(s_on.ledger.timed_out).any()
+    assert not np.asarray(s_on.ledger.retried).any()
